@@ -1,0 +1,59 @@
+"""Paper Fig. 8 — ablations: strategies (BPS ± LAA), exploration coefficient
+lambda, LAA delay N.
+
+Paper findings to reproduce qualitatively:
+  * BPS+LAA (full OTARo) >= BPS-only, biggest gap at low widths;
+  * lambda = 5 balances exploration vs exploitation (3..7 sweep);
+  * N = 10 beats 5 (too little smoothing) and 20 (too few updates).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as CM
+
+
+def _avg_ppl(params):
+    vals = [CM.eval_ppl(params, m) for m in CM.WIDTHS]
+    return float(np.mean(vals)), {m: v for m, v in zip(CM.WIDTHS, vals)}
+
+
+def run(steps: int = 300, log=print) -> dict:
+    params0 = CM.pretrain()
+    out = {}
+
+    # --- strategies ---------------------------------------------------------
+    st_b, _ = CM.finetune(params0, "bps_only", steps=steps)
+    avg_b, per_b = _avg_ppl(st_b.params)
+    st_o, _ = CM.finetune(params0, "otaro", steps=steps)
+    avg_o, per_o = _avg_ppl(st_o.params)
+    out["strategies"] = {"bps_only": avg_b, "otaro": avg_o,
+                         "bps_only_per": per_b, "otaro_per": per_o}
+    log("\n== bench_ablation (paper Fig.8 analog) ==")
+    log(f"strategies: BPS-only avgPPL={avg_b:.3f}  "
+        f"BPS+LAA avgPPL={avg_o:.3f}  "
+        f"(low-width E5M3: {per_b[3]:.3f} vs {per_o[3]:.3f})")
+
+    # --- lambda sweep --------------------------------------------------------
+    out["lambda"] = {}
+    for lam in (3.0, 4.0, 5.0, 6.0, 7.0):
+        st, _ = CM.finetune(params0, "otaro", steps=steps, lam=lam)
+        avg, _ = _avg_ppl(st.params)
+        out["lambda"][lam] = avg
+    log("lambda sweep (avg PPL): " +
+        "  ".join(f"λ={k}:{v:.3f}" for k, v in out["lambda"].items()))
+
+    # --- N sweep --------------------------------------------------------------
+    out["N"] = {}
+    for n in (5, 10, 20):
+        st, _ = CM.finetune(params0, "otaro", steps=steps, laa_n=n)
+        avg, _ = _avg_ppl(st.params)
+        out["N"][n] = avg
+    log("LAA N sweep (avg PPL):  " +
+        "  ".join(f"N={k}:{v:.3f}" for k, v in out["N"].items()))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Fig. 3 — uniform sampling vs BPS vs fixed-precision fine-tuning.
+
+Reports PPL change of uniform/BPS RELATIVE to per-width fixed-precision
+fine-tuning (negative = better than fixed).  Paper finding: uniform sampling
+falls short of fixed at several widths; BPS matches or beats fixed.
+Also dumps the BPS selection path (which width each batch trained on).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as CM
+
+
+def run(steps: int = 300, log=print) -> dict:
+    params0 = CM.pretrain()
+
+    fixed = {}
+    for m in CM.WIDTHS:
+        st, _ = CM.finetune(params0, "fixed", fixed_m=m, steps=steps)
+        fixed[m] = CM.eval_ppl(st.params, m)
+
+    st_u, _ = CM.finetune(params0, "uniform", steps=steps)
+    uniform = {m: CM.eval_ppl(st_u.params, m) for m in CM.WIDTHS}
+
+    st_b, hist = CM.finetune(params0, "bps_only", steps=steps)
+    bps = {m: CM.eval_ppl(st_b.params, m) for m in CM.WIDTHS}
+
+    path = [h["m"] for h in hist]
+    counts = {m: path.count(m) for m in CM.WIDTHS}
+
+    log("\n== bench_bps_path (paper Fig.3 analog; dPPL vs fixed) ==")
+    log(f"{'method':8s} " + " ".join(f"E5M{m:<6d}" for m in CM.WIDTHS))
+    for name, vals in (("uniform", uniform), ("bps", bps)):
+        ds = [vals[m] - fixed[m] for m in CM.WIDTHS]
+        log(f"{name:8s} " + " ".join(f"{d:+8.4f}" for d in ds))
+    log(f"BPS selection counts over {steps} steps: {counts}")
+    log(f"BPS path last 40: {path[-40:]}")
+    return {"fixed": fixed, "uniform": uniform, "bps": bps,
+            "bps_counts": counts}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,141 @@
+"""Paper Figs. 4/5/6 — gradient-space analyses of SEFP quantization.
+
+Fig. 4: cosine similarity between gradients at different bit-widths (per
+        projector) — higher widths align better with everything.
+Fig. 5: error of gradient norms ||grad_sefp|| - ||grad_fp|| across widths —
+        oscillation grows as width shrinks.
+Fig. 6 / Appendix B: LSM fit grad_sefp = X grad_fp + Y over batches;
+        E[Y] ~ 0 (the property LAA exploits).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as CM
+from repro.core import otaro as otaro_lib
+from repro.core import sefp
+from repro.models import model_zoo as Z
+
+
+_GRAD_CACHE = {}
+
+
+def _jitted_grads(loss_fn):
+    """ONE jitted gradient function with a dynamic mantissa width (m = 0
+    selects the unquantized fp path) — avoids recompiling per (batch, m),
+    which exhausts the CPU JIT after ~150 executables."""
+    key = id(loss_fn)
+    if key not in _GRAD_CACHE:
+        def f(p, batch, m):
+            def quantized(p):
+                qp = sefp.quantize_tree(p, m, ste=True)
+                return loss_fn(qp, batch)
+
+            def full(p):
+                return loss_fn(p, batch)
+
+            return jax.lax.cond(m > 0,
+                                lambda p: jax.grad(quantized)(p),
+                                lambda p: jax.grad(full)(p), p)
+        _GRAD_CACHE[key] = jax.jit(f)
+    return _GRAD_CACHE[key]
+
+
+def _grad_at_width(loss_fn, params, batch, m):
+    return _jitted_grads(loss_fn)(params, batch, jnp.int32(m))
+
+
+def _grad_fp(loss_fn, params, batch):
+    return _jitted_grads(loss_fn)(params, batch, jnp.int32(0))
+
+
+def _flat(tree, path_filter=None):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if path_filter is None or path_filter in name:
+            out.append(np.asarray(leaf, np.float64).ravel())
+    return np.concatenate(out)
+
+
+def run(n_batches: int = 24, log=print) -> dict:
+    cfg = CM.BENCH_LM
+    params = CM.pretrain()
+    loss_fn = Z.make_loss_fn(cfg)
+    _, task = CM.corpora()
+
+    def batch(i):
+        return {k: jnp.asarray(v) for k, v in task.batch(i, 8, 64).items()}
+
+    # ---- Fig. 4: cosine similarity matrix (q-projector analog: wq) --------
+    b0 = batch(0)
+    grads = {m: _grad_at_width(loss_fn, params, b0, m) for m in CM.WIDTHS}
+    cos = np.zeros((len(CM.WIDTHS), len(CM.WIDTHS)))
+    for i, mi in enumerate(CM.WIDTHS):
+        gi = _flat(grads[mi], "attn/wq")
+        for j, mj in enumerate(CM.WIDTHS):
+            gj = _flat(grads[mj], "attn/wq")
+            cos[i, j] = gi @ gj / (np.linalg.norm(gi) * np.linalg.norm(gj))
+
+    log("\n== bench_gradients: Fig.4 analog — grad cosine (wq) ==")
+    log("      " + " ".join(f"M{m}  " for m in CM.WIDTHS))
+    for i, mi in enumerate(CM.WIDTHS):
+        log(f"M{mi}: " + " ".join(f"{cos[i, j]:.3f}" for j in
+                                  range(len(CM.WIDTHS))))
+
+    # paper's key observation: adjacency with HIGHER widths is stronger
+    hi_band = np.mean([cos[i, j] for i in range(3) for j in range(3)
+                       if i != j])
+    lo_vs_hi = np.mean([cos[0, -1], cos[1, -1]])
+    log(f"high-width mutual cos {hi_band:.3f} vs M8/M7-to-M3 {lo_vs_hi:.3f}")
+
+    # ---- Fig. 5: ||g_sefp|| - ||g_fp|| oscillation across batches ---------
+    norm_err = {m: [] for m in CM.WIDTHS}
+    ys = {m: [] for m in (4, 3)}
+    gfps = []
+    gsefps = {m: [] for m in (4, 3)}
+    for i in range(n_batches):
+        bi = batch(i)
+        gfp = _flat(_grad_fp(loss_fn, params, bi), "attn/wq")
+        gfps.append(gfp)
+        for m in CM.WIDTHS:
+            gs = _flat(_grad_at_width(loss_fn, params, bi, m), "attn/wq")
+            norm_err[m].append(np.linalg.norm(gs) - np.linalg.norm(gfp))
+            if m in gsefps:
+                gsefps[m].append(gs)
+
+    log("\nFig.5 analog — std of ||g_sefp||-||g_fp|| across batches:")
+    for m in CM.WIDTHS:
+        log(f"  E5M{m}: std={np.std(norm_err[m]):.5f} "
+            f"mean={np.mean(norm_err[m]):+.5f}")
+
+    # ---- Fig. 6 / Appendix B: LSM residual Y, E[Y] ~ 0 ---------------------
+    G_fp = np.stack(gfps)                       # [N, d]
+    results_y = {}
+    for m in (4, 3):
+        G = np.stack(gsefps[m])                 # [N, d]
+        # scalar-X LSM per paper's linear-mapping idea (X diagonal-free):
+        # X = argmin ||G - G_fp X||_F over scalar -> <G_fp,G>/<G_fp,G_fp>
+        x = float((G_fp * G).sum() / (G_fp * G_fp).sum())
+        Y = G - x * G_fp
+        results_y[m] = {
+            "X": x,
+            "E[Y]": float(Y.mean()),
+            "E[|Y|]": float(np.abs(Y).mean()),
+            "ratio": float(abs(Y.mean()) / (np.abs(Y).mean() + 1e-12)),
+        }
+        log(f"\nFig.6 analog (E5M{m}): X={x:.4f}  E[Y]={Y.mean():+.2e}  "
+            f"E[|Y|]={np.abs(Y).mean():.2e}  |E[Y]|/E[|Y|]="
+            f"{results_y[m]['ratio']:.4f} (≈0 ⇒ LAA averaging works)")
+
+    osc = {m: float(np.std(norm_err[m])) for m in CM.WIDTHS}
+    return {"cos": cos.tolist(), "norm_err_std": osc, "lsm": results_y}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,97 @@
+"""Paper Table 2 — memory consumption and decode throughput, FP16 vs SEFP.
+
+Two layers of evidence (the container is CPU-only; TPU wall-clock cannot be
+measured, DESIGN.md §9):
+
+1. MEMORY (exact, bit-level accounting on the real llama3-8b weight shapes,
+   the paper's subject): fp16 bytes vs SEFP-E5M4 streamed bits incl. the
+   KV cache at the paper's 2000-token setting.  Paper: 15.20 GB -> 4.77 GB
+   (69% down).
+
+2. THROUGHPUT (mechanism): decode is weight-streaming-bound, so throughput
+   scales ~ 1/bytes.  We report the bytes-ratio-implied speedup for E5M4
+   (paper measured x2.45 on its runtime) and microbenchmark the fused
+   sefp_matmul kernel vs the bf16 jnp matmul on CPU to validate numerics +
+   show the per-call dequant overhead is small relative to the projected
+   bandwidth win (kernel timing on CPU interpret mode is NOT a TPU proxy
+   and is labeled as such).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as CM
+from repro import configs as C
+from repro.core import packed as packed_lib
+from benchmarks import costmodel
+
+
+def memory_table(log=print) -> dict:
+    cfg = C.get_config("llama3_8b")
+    n_params, _ = costmodel.param_counts(cfg)
+    ctx = 2000          # paper's "input of 2000 tokens"
+    batch = 1
+    kv_bytes_fp16 = 2.0 * cfg.n_layers * batch * ctx * cfg.n_kv_heads \
+        * cfg.hd * 2
+    fp16 = n_params * 2 + kv_bytes_fp16
+
+    m = 4
+    bits = (m + 1) + 8.0 / 64           # SEFP-E5M4 streamed bits/param
+    sefp_w = n_params * bits / 8
+    # paper quantizes the KV cache to the same format
+    sefp_kv = kv_bytes_fp16 / 2 * bits / 8 / 1.0  # fp16->sefp per element
+    sefp_kv = 2.0 * cfg.n_layers * batch * ctx * cfg.n_kv_heads * cfg.hd \
+        * bits / 8
+    sefp = sefp_w + sefp_kv
+    red = 1 - sefp / fp16
+
+    log("\n== bench_memory_speed (paper Table 2 analog, llama3-8b) ==")
+    log(f"FP16 total: {fp16/2**30:6.2f} GiB   (paper: 15.20 GB)")
+    log(f"SEFP-E5M4 : {sefp/2**30:6.2f} GiB   (paper:  4.77 GB)")
+    log(f"reduction : {100*red:5.1f}%        (paper:  69%)")
+    speedup = fp16 / sefp
+    log(f"bytes-ratio decode speedup bound: x{speedup:.2f} "
+        f"(paper measured x2.45 end-to-end)")
+    return {"fp16_bytes": fp16, "sefp_bytes": sefp, "reduction": red,
+            "speedup_bound": speedup}
+
+
+def kernel_microbench(log=print) -> dict:
+    """Fused sefp_matmul vs bf16 matmul: numerics + CPU-relative cost
+    (interpret mode — NOT a TPU timing; see module docstring)."""
+    from repro.kernels.sefp_matmul import sefp_matmul
+
+    K, N, B = 512, 512, 8
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(B, K)), jnp.float32)
+    p = packed_lib.pack(w, group_axis=0)
+
+    wb = w.astype(jnp.bfloat16)
+    f_ref = jax.jit(lambda x: (x.astype(jnp.bfloat16) @ wb).astype(
+        jnp.float32))
+    t_ref = CM.timed(f_ref, x, n_iter=10)
+    out_k = sefp_matmul(x, p, 4)
+    t_k = CM.timed(lambda x: sefp_matmul(x, p, 4), x, n_iter=3, warmup=1)
+    err = float(jnp.abs(out_k - f_ref(x)).mean()
+                / jnp.abs(f_ref(x)).mean())
+    log(f"kernel microbench (CPU interpret — numerics check only): "
+        f"bf16 matmul {t_ref:.0f}us, fused sefp_matmul {t_k:.0f}us, "
+        f"rel err {err:.4f}")
+    log(f"TPU-projected: weight bytes/elt 2.0 (bf16) -> "
+        f"{p.bits_per_param(4)/8:.2f} (E5M4 stream): "
+        f"x{16/ (p.bits_per_param(4)):.2f} HBM-bound decode speedup")
+    return {"ref_us": t_ref, "kernel_us": t_k, "rel_err": err}
+
+
+def run(log=print) -> dict:
+    out = memory_table(log)
+    out.update(kernel_microbench(log))
+    return out
+
+
+if __name__ == "__main__":
+    run()

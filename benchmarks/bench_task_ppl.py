@@ -1,0 +1,50 @@
+"""Paper Fig. 7 / Table 8 — task-specific fine-tuning PPL across bit-widths.
+
+LLaMA3.2-1B + WikiText2 in the paper; the CPU analog fine-tunes the
+pretrained bench LM on the task corpus with each method and reports PPL at
+every SEFP width.  Expected qualitative reproduction (paper Table 8):
+  * every fine-tuning method beats "before" at every width;
+  * OTARo has the lowest AVG and STD across widths;
+  * OTARo's margin is largest at E5M4/E5M3.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as CM
+
+
+def run(steps: int = 300, log=print) -> dict:
+    params0 = CM.pretrain()
+    results = {}
+
+    # before fine-tuning
+    results["before"] = {m: CM.eval_ppl(params0, m) for m in CM.WIDTHS}
+
+    # FP16 fine-tuning (no quantized loss)
+    st, _ = CM.finetune(params0, "fp16", steps=steps)
+    results["fp16"] = {m: CM.eval_ppl(st.params, m) for m in CM.WIDTHS}
+
+    # fixed-precision fine-tuning: one run per width, evaluated at its width
+    results["fixed"] = {}
+    for m in CM.WIDTHS:
+        st, _ = CM.finetune(params0, "fixed", fixed_m=m, steps=steps)
+        results["fixed"][m] = CM.eval_ppl(st.params, m)
+
+    # OTARo: once for all widths
+    st, _ = CM.finetune(params0, "otaro", steps=steps)
+    results["otaro"] = {m: CM.eval_ppl(st.params, m) for m in CM.WIDTHS}
+
+    log("\n== bench_task_ppl (paper Fig.7 / Table 8 analog) ==")
+    log(f"{'method':8s} " + " ".join(f"E5M{m:<4d}" for m in CM.WIDTHS)
+        + "   AVG    STD")
+    for name in ("before", "fp16", "fixed", "otaro"):
+        vals = [results[name][m] for m in CM.WIDTHS]
+        log(f"{name:8s} " + " ".join(f"{v:7.3f}" for v in vals)
+            + f" {np.mean(vals):6.3f} {np.std(vals):6.3f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Paper Table 1 (and Tables 3-7) — zero-shot accuracy across bit-widths.
+
+The paper fine-tunes on Alpaca and evaluates 8 QA benchmarks.  CPU analog:
+fine-tune on the task corpus, evaluate next-token top-1 accuracy on FOUR
+held-out "task suites" (synthetic corpora with shifted statistics — the
+multi-benchmark analog) and report the average per width for each method.
+Expected: OTARo's average accuracy >= fixed-precision at every width, with
+the largest wins at E5M4/E5M3.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as CM
+from repro.train import data as data_lib
+
+# four "benchmarks" = four shifted distributions over the SAME language
+# (same successor structure, different branching/copy statistics) — the
+# multi-benchmark zero-shot analog; all solvable by a model that learned
+# the base chain and adapted to the task shift.
+TASK_SUITES = [
+    dict(seed=CM.TASK_SEED, p_copy=0.05, branching=8, zipf_a=1.6),  # task
+    dict(seed=CM.TASK_SEED, p_copy=0.10, branching=8, zipf_a=1.6),
+    dict(seed=CM.TASK_SEED, p_copy=0.05, branching=6, zipf_a=1.6),
+    dict(seed=CM.TASK_SEED, p_copy=0.02, branching=12, zipf_a=1.4),
+]
+
+
+def _suites():
+    return [data_lib.SyntheticCorpus(vocab_size=CM.BENCH_LM.vocab_size, **kw)
+            for kw in TASK_SUITES]
+
+
+def _avg_acc(params, m):
+    return float(np.mean([
+        CM.eval_accuracy(params, m, corpus=c, n_batches=2)
+        for c in _suites()]))
+
+
+def run(steps: int = 300, log=print) -> dict:
+    params0 = CM.pretrain()
+    results = {}
+
+    results["before"] = {m: _avg_acc(params0, m) for m in CM.WIDTHS}
+
+    st, _ = CM.finetune(params0, "fp16", steps=steps)
+    results["fp16"] = {m: _avg_acc(st.params, m) for m in CM.WIDTHS}
+
+    results["fixed"] = {}
+    for m in CM.WIDTHS:
+        st, _ = CM.finetune(params0, "fixed", fixed_m=m, steps=steps)
+        results["fixed"][m] = _avg_acc(st.params, m)
+
+    st, _ = CM.finetune(params0, "otaro", steps=steps)
+    results["otaro"] = {m: _avg_acc(st.params, m) for m in CM.WIDTHS}
+
+    log("\n== bench_zeroshot (paper Table 1 analog; avg top-1 acc %) ==")
+    log(f"{'method':8s} " + " ".join(f"E5M{m:<5d}" for m in CM.WIDTHS))
+    for name in ("before", "fp16", "fixed", "otaro"):
+        vals = [100 * results[name][m] for m in CM.WIDTHS]
+        log(f"{name:8s} " + " ".join(f"{v:7.2f}%" for v in vals))
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,172 @@
+"""Shared benchmark harness: a CPU-sized analog of the paper's protocol.
+
+The paper fine-tunes pretrained LLaMA/Qwen checkpoints.  Offline, we create
+the analog: a small LM is PRETRAINED on a base synthetic language, then each
+method FINE-TUNES it on a shifted task language (different transition seed),
+and evaluation measures PPL / next-token accuracy across all SEFP widths —
+the same 4-method x 6-width grid as the paper's tables.
+
+Methods (paper names):
+  before      — pretrained, no fine-tuning ("Before Fine-Tuning")
+  fp16        — fine-tune without quantized loss ("FP16 Fine-Tuning")
+  fixed       — per-width fixed-precision fine-tuning (one model per width)
+  otaro       — BPS + LAA, once for all widths ("Ours")
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import otaro as otaro_lib
+from repro.core import sefp
+from repro.models import model_zoo as Z
+from repro.models.config import ModelConfig
+from repro.train import data as data_lib
+from repro.train import optimizer as opt_lib
+
+WIDTHS = sefp.MANTISSA_WIDTHS  # (8, 7, 6, 5, 4, 3)
+
+BENCH_LM = ModelConfig(
+    name="bench-lm", family="dense", n_layers=4, d_model=160, n_heads=4,
+    n_kv_heads=2, head_dim=40, d_ff=416, vocab_size=512, q_block=64,
+    kv_block=64, loss_chunk=64, remat="none", dtype="float32")
+
+BASE_SEED = 11
+TASK_SEED = 11   # same chain as pretraining...
+
+
+def corpora(vocab=BENCH_LM.vocab_size):
+    base = data_lib.SyntheticCorpus(vocab_size=vocab, seed=BASE_SEED)
+    # ...but a shifted distribution over it (narrower branching, fewer copy
+    # motifs) — fine-tuning adapts, it does not relearn a language.
+    task = data_lib.SyntheticCorpus(vocab_size=vocab, seed=TASK_SEED,
+                                    p_copy=0.05, branching=8, zipf_a=1.6)
+    return base, task
+
+
+@dataclasses.dataclass
+class Trained:
+    params: object
+    mode: str
+    fixed_m: Optional[int] = None
+
+
+_PRETRAIN_CACHE: dict = {}
+
+
+def pretrain(cfg: ModelConfig = BENCH_LM, steps: int = 300, batch: int = 16,
+             seq: int = 64, lr: float = 3e-3, seed: int = 0):
+    """Pretrain the base model (cached per process)."""
+    key = (cfg.name, steps, batch, seq, lr, seed)
+    if key in _PRETRAIN_CACHE:
+        return _PRETRAIN_CACHE[key]
+    base, _ = corpora(cfg.vocab_size)
+    loss_fn = Z.make_loss_fn(cfg)
+    params = Z.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = opt_lib.adam(lr)
+    ocfg = otaro_lib.OTAROConfig(mode="fp16")
+    step = jax.jit(otaro_lib.make_otaro_step(loss_fn, opt, ocfg))
+    state = otaro_lib.init_state(params, opt, ocfg)
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in base.batch(i, batch, seq).items()}
+        state, _ = step(state, b)
+    _PRETRAIN_CACHE[key] = state.params
+    return state.params
+
+
+def finetune(params0, mode: str, cfg: ModelConfig = BENCH_LM,
+             steps: int = 300, batch: int = 16, seq: int = 64,
+             lr: float = 1e-2, fixed_m: int = 8, lam: float = 5.0,
+             laa_n: int = 10, seed: int = 1, corpus=None, widths=WIDTHS):
+    """Fine-tune on the task corpus with the given method.  SGD like the
+    paper (lr scaled for the small model)."""
+    _, task = corpora(cfg.vocab_size)
+    corpus = corpus or task
+    loss_fn = Z.make_loss_fn(cfg)
+    opt = opt_lib.sgd(lr)
+    ocfg = otaro_lib.OTAROConfig(mode=mode, fixed_m=fixed_m, lam=lam,
+                                 laa_n=laa_n, widths=widths)
+    step = jax.jit(otaro_lib.make_otaro_step(loss_fn, opt, ocfg))
+    state = otaro_lib.init_state(params0, opt, ocfg)
+    metrics_hist = []
+    for i in range(steps):
+        b = {k: jnp.asarray(v)
+             for k, v in corpus.batch(1000 + seed * 131 + i, batch,
+                                      seq).items()}
+        state, m = step(state, b)
+        metrics_hist.append({"loss": float(m["loss"]),
+                             "m": int(m["mantissa_width"])})
+    return state, metrics_hist
+
+
+_EVAL_CACHE: dict = {}
+
+
+def _eval_fns(cfg: ModelConfig):
+    """Jitted (loss, accuracy) eval fns with dynamic width — compiled once
+    per config (not per call; repeated jax.jit would exhaust the CPU JIT)."""
+    if cfg.name in _EVAL_CACHE:
+        return _EVAL_CACHE[cfg.name]
+    from repro.models import layers as L
+    from repro.models import transformer as T
+
+    loss_fn = Z.make_loss_fn(cfg)
+    evalf = jax.jit(otaro_lib.make_eval_fn(loss_fn, otaro_lib.OTAROConfig()))
+
+    @jax.jit
+    def acc_fn(params, batch, m):
+        qp = sefp.quantize_tree(params, m, ste=False)
+        x = L.embed(qp["embed"], batch["inputs"], jnp.float32)
+        h = T.lm_apply_hidden(qp, x, cfg)
+        logits = h @ qp["unembed"]["w_unembed"]
+        pred = jnp.argmax(logits, -1)
+        return jnp.mean((pred == batch["targets"]).astype(jnp.float32))
+
+    _EVAL_CACHE[cfg.name] = (evalf, acc_fn)
+    return _EVAL_CACHE[cfg.name]
+
+
+def eval_ppl(params, m_width: int, cfg: ModelConfig = BENCH_LM,
+             n_batches: int = 4, batch: int = 16, seq: int = 64,
+             corpus=None) -> float:
+    """Perplexity at SEFP width m on held-out task data."""
+    _, task = corpora(cfg.vocab_size)
+    corpus = corpus or task
+    evalf, _ = _eval_fns(cfg)
+    losses = []
+    for b in corpus.eval_batches(n_batches, batch, seq):
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        losses.append(float(evalf(params, b, jnp.int32(m_width))))
+    return float(np.exp(np.mean(losses)))
+
+
+def eval_accuracy(params, m_width: int, cfg: ModelConfig = BENCH_LM,
+                  n_batches: int = 4, batch: int = 16, seq: int = 64,
+                  corpus=None) -> float:
+    """Next-token top-1 accuracy at SEFP width m (the zero-shot analog)."""
+    _, task = corpora(cfg.vocab_size)
+    corpus = corpus or task
+    _, acc_fn = _eval_fns(cfg)
+    accs = []
+    for b in corpus.eval_batches(n_batches, batch, seq):
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        accs.append(float(acc_fn(params, b, jnp.int32(m_width))))
+    return float(np.mean(accs))
+
+
+def timed(fn, *args, n_iter: int = 20, warmup: int = 3) -> float:
+    """us per call (block_until_ready)."""
+    for _ in range(warmup):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n_iter * 1e6

@@ -1,0 +1,242 @@
+"""Analytic per-cell cost model for the roofline analysis.
+
+Why analytic: XLA's ``compiled.cost_analysis()`` counts each while-loop body
+ONCE regardless of trip count (verified by probe in EXPERIMENTS.md §Dry-run;
+a jit'd 8-iteration scan of matmuls reports exactly 1 matmul of flops).
+Every deep stack here is a scan-over-layers, so HLO flops/bytes understate
+per-step cost by ~n_layers.  The roofline therefore uses this documented
+analytic model for FLOPs/HBM-bytes/collective-bytes, and the dry-run's HLO
+numbers are recorded alongside for cross-checks (per-device memory from
+``memory_analysis()`` IS loop-aware and is used directly).
+
+Conventions:
+  * FLOPs = 2 x MACs; attention scores are counted over FULL SxS blocks
+    (what the blockwise implementation executes — causal-block skipping is
+    listed as a perf opportunity, not silently assumed);
+  * train cost = 3x forward (1 fwd + 2 bwd) + SEFP fake-quant overhead
+    (elementwise, ~6 flops/param, negligible) ;
+  * bytes are per-step whole-model; the roofline divides by chip count;
+  * collective model (per step): FSDP params all-gather + grads
+    reduce-scatter (~2x param bytes), TP 2 activation all-reduces per layer,
+    DP/pod gradient all-reduce when the pod axis exists.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class CellCost:
+    flops: float               # per step, whole model (all chips together)
+    hbm_bytes: float           # per step, whole model
+    coll_bytes_model: float    # TP collectives (over the `model` axis)
+    coll_bytes_data: float     # FSDP/DP collectives (over `data` + `pod`)
+    model_flops: float         # 6*N(_active)*D reference
+    n_params: int
+    n_active_params: int
+    detail: Dict[str, float]
+
+
+def param_counts(cfg: ModelConfig) -> tuple[int, int]:
+    """(total params, active params per token) from the config algebra."""
+    d, f, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    L = cfg.n_layers
+
+    def attn_params():
+        return d * H * hd + 2 * d * KV * hd + H * hd * d
+
+    emb = V * d * 2  # embed + unembed
+    if cfg.family in ("dense", "vlm"):
+        per_layer = attn_params() + 3 * d * f
+        total = emb + L * per_layer
+        return total, total
+    if cfg.family == "moe":
+        e, k = cfg.n_experts, cfg.top_k
+        expert = 3 * d * f
+        per_layer = attn_params() + d * e + e * expert
+        per_layer_active = attn_params() + d * e + k * expert
+        return emb + L * per_layer, emb + L * per_layer_active
+    if cfg.family == "rwkv":
+        per_layer = 5 * d * d + 2 * d * 64 + (2 * d * f + d * d)
+        total = emb + L * per_layer
+        return total, total
+    if cfg.family == "hybrid":
+        d_in = cfg.ssm_expand * d
+        N = cfg.ssm_state
+        Hs = d_in // cfg.ssm_head_dim
+        mamba = d * (2 * d_in + 2 * N + Hs) + d_in * d
+        shared = cfg.n_shared_attn_blocks * (
+            2 * d * d + attn_params() + 3 * d * f)
+        total = emb + L * mamba + shared
+        return total, total
+    if cfg.family == "encdec":
+        enc = cfg.n_enc_layers * (attn_params() + 3 * d * f)
+        dec = cfg.n_dec_layers * (2 * attn_params() + 3 * d * f)
+        total = emb + enc + dec
+        return total, total
+    raise ValueError(cfg.family)
+
+
+def _attn_flops(B, S, S_kv, d, H, KV, hd, causal_note_full=True):
+    proj = 2 * B * S * (d * H * hd + 2 * d * KV * hd + H * hd * d)
+    scores = 2 * B * H * S * S_kv * hd * 2  # qk^T + pv
+    return proj, scores
+
+
+def forward_flops(cfg: ModelConfig, B: int, S: int, kind: str) -> Dict[str, float]:
+    """Whole-model forward FLOPs by component.  kind: train/prefill => full
+    sequence; decode/long_decode => one token vs a cache of length S."""
+    d, f, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    L = cfg.n_layers
+    decode = kind in ("decode", "long_decode")
+    T = B * (1 if decode else S)
+    S_q = 1 if decode else S
+    S_kv = S
+
+    out: Dict[str, float] = {}
+    if cfg.family in ("dense", "vlm", "moe"):
+        proj, scores = _attn_flops(B, S_q, S_kv, d, H, KV, hd)
+        out["attn_proj"] = L * proj
+        out["attn_scores"] = L * scores
+        if cfg.family == "moe":
+            e, k = cfg.n_experts, cfg.top_k
+            if decode:
+                # dense-dispatch decode: all experts computed
+                out["moe_ffn"] = L * 2 * T * 3 * d * f * e
+            else:
+                cap = k * cfg.moe_capacity_factor
+                out["moe_ffn"] = L * 2 * T * cap * 3 * d * f
+            out["router"] = L * 2 * T * d * e
+        else:
+            out["mlp"] = L * 2 * T * 3 * d * f
+    elif cfg.family == "rwkv":
+        out["proj"] = L * 2 * T * 5 * d * d
+        Lc = cfg.rwkv_chunk if not decode else 1
+        # intra-chunk pairwise decay + A@v + state update
+        out["wkv"] = L * (2 * T * Lc * d * 2 + 2 * T * d * cfg.rwkv_head_dim * 2)
+        out["cmix"] = L * 2 * T * (2 * d * f + d * d)
+    elif cfg.family == "hybrid":
+        d_in = cfg.ssm_expand * d
+        N = cfg.ssm_state
+        out["ssm_proj"] = L * 2 * T * (d * (2 * d_in + 2 * N +
+                                            d_in // cfg.ssm_head_dim)
+                                       + d_in * d)
+        Lc = cfg.ssm_chunk if not decode else 1
+        out["ssd"] = L * (2 * T * Lc * (N + d_in) + 2 * T * d_in * N * 2)
+        n_inv = math.ceil(L / cfg.attn_every)
+        proj, scores = _attn_flops(B, S_q, S_kv, d, H, KV, hd)
+        out["shared_attn"] = n_inv * (proj + scores + 2 * B * S_q * (
+            3 * d * f + 2 * d * d))
+    elif cfg.family == "encdec":
+        S_enc = max(64, S // 4)
+        T_enc = B * S_enc
+        proj_e, scores_e = _attn_flops(B, S_enc, S_enc, d, H, KV, hd)
+        out["encoder"] = 0 if decode else cfg.n_enc_layers * (
+            proj_e + scores_e + 2 * T_enc * 3 * d * f)
+        proj_d, scores_d = _attn_flops(B, S_q, S_kv, d, H, KV, hd)
+        _, scores_x = _attn_flops(B, S_q, S_enc, d, H, KV, hd)
+        proj_x = 2 * B * S_q * (d * H * hd + H * hd * d) + (
+            0 if decode else 2 * T_enc * 2 * d * KV * hd)
+        out["decoder"] = cfg.n_dec_layers * (
+            proj_d + scores_d + proj_x + scores_x + 2 * T * 3 * d * f)
+    else:
+        raise ValueError(cfg.family)
+
+    out["logits"] = 2 * (B if decode else T) * d * V
+    return out
+
+
+def cell_cost(cfg: ModelConfig, shape: ShapeConfig,
+              n_pods: int = 1, tp: int = 16, dp: int = 16,
+              layout: str = "tp") -> CellCost:
+    """layout="tp" (default): megatron TP over the model axis — 2 activation
+    all-reduces/layer.  layout="dp": pure data/FSDP parallelism — no TP
+    collectives; per-chip wire cost = per-layer weight all-gather (bf16)
+    + gradient reduce-scatter (fp32) over all chips (the §Perf dp variant)."""
+    B, S, kind = shape.global_batch, shape.seq_len, shape.kind
+    n_params, n_active = param_counts(cfg)
+    comp = forward_flops(cfg, B, S, kind)
+    fwd = sum(comp.values())
+    decode = kind in ("decode", "long_decode")
+    train = kind == "train"
+
+    if train:
+        flops = 3 * fwd + 8 * n_params  # fwd + 2x bwd + fake-quant elementwise
+        tokens = B * S
+        model_flops = 6.0 * n_active * tokens
+    else:
+        flops = fwd
+        tokens = B * (1 if decode else S)
+        model_flops = 2.0 * n_active * tokens
+
+    # ---- HBM bytes (whole model per step) --------------------------------
+    d = cfg.d_model
+    act_layers = cfg.n_layers + getattr(cfg, "n_dec_layers", 0)
+    if train:
+        # fp32 master read (fwd+bwd) + grad/LAA write + bf16 activations
+        weight_traffic = n_params * 4 * 4
+        act_traffic = 3 * tokens * d * act_layers * 2 * 4  # saved+recompute
+        cache_traffic = 0.0
+    elif kind == "prefill":
+        weight_traffic = n_params * 2
+        act_traffic = tokens * d * act_layers * 2 * 4
+        cache_traffic = _cache_bytes(cfg, B, S)
+    else:
+        weight_traffic = n_active * 2          # bf16 stream (active weights)
+        act_traffic = tokens * d * act_layers * 2 * 8
+        cache_traffic = _cache_bytes(cfg, B, S) * 1.0   # read the full cache
+    hbm = weight_traffic + act_traffic + cache_traffic
+
+    # ---- collectives ------------------------------------------------------
+    if train:
+        # FSDP all-gather (bf16 compute copies) + reduce-scatter grads (fp32)
+        coll_data = n_params * 2 + n_params * 4
+        if n_pods > 1:
+            coll_data += n_params * 4  # cross-pod grad all-reduce
+        if layout == "dp":
+            coll_model = 0.0  # no TP activation collectives
+        else:
+            # TP: 2 activation all-reduces per layer, fwd+bwd
+            coll_model = 2 * act_layers * tokens * d * 2 * 3
+    elif kind == "prefill":
+        coll_data = 0.0
+        coll_model = 2 * act_layers * tokens * d * 2
+    else:
+        coll_data = 0.0
+        coll_model = 2 * act_layers * tokens * d * 2
+        # seq-sharded KV decode: per-layer partial-softmax combine
+        coll_model += act_layers * B * cfg.n_heads * cfg.hd * 4 * 2
+    return CellCost(flops=flops, hbm_bytes=hbm,
+                    coll_bytes_model=coll_model, coll_bytes_data=coll_data,
+                    model_flops=model_flops, n_params=n_params,
+                    n_active_params=n_active,
+                    detail={k: float(v) for k, v in comp.items()})
+
+
+def _cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
+    if cfg.family in ("dense", "vlm", "moe"):
+        return 2.0 * cfg.n_layers * B * S * cfg.n_kv_heads * cfg.hd * 2
+    if cfg.family == "rwkv":
+        hd = cfg.rwkv_head_dim
+        H = cfg.d_model // hd
+        return cfg.n_layers * B * (H * hd * hd * 4 + 2 * cfg.d_model * 2)
+    if cfg.family == "hybrid":
+        d_in = cfg.ssm_expand * cfg.d_model
+        Hs = d_in // cfg.ssm_head_dim
+        ssm = cfg.n_layers * B * (Hs * cfg.ssm_head_dim * cfg.ssm_state * 4)
+        n_inv = math.ceil(cfg.n_layers / cfg.attn_every)
+        attn = 2.0 * n_inv * B * S * cfg.n_kv_heads * cfg.hd * 2
+        return ssm + attn
+    if cfg.family == "encdec":
+        S_enc = max(64, S // 4)
+        self_kv = 2.0 * cfg.n_dec_layers * B * S * cfg.n_kv_heads * cfg.hd * 2
+        cross = 2.0 * cfg.n_dec_layers * B * S_enc * cfg.n_kv_heads * cfg.hd * 2
+        return self_kv + cross
+    raise ValueError(cfg.family)

@@ -1,0 +1,144 @@
+"""Roofline analysis: three-term model per (arch x shape) on the single-pod
+production mesh (16x16 = 256 TPU v5e chips).
+
+    compute term    = FLOPs / (chips x 197e12 FLOP/s bf16)
+    memory term     = HBM bytes / (chips x 819e9 B/s)
+    collective term = wire bytes per chip / 50e9 B/s per ICI link
+
+Primary source: the documented analytic cost model (benchmarks/costmodel.py)
+— XLA's cost_analysis counts while-loop bodies once (probe recorded in
+EXPERIMENTS.md §Dry-run), so HLO flops understate scanned stacks by ~L.  The
+dry-run's compiled artifacts supply per-device memory (loop-aware) and the
+collective op inventory; HLO collective bytes are reported with loop-body
+ops scaled by the dominant trip count as a cross-check.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--csv out]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Optional
+
+from repro import configs as C
+from repro.models.config import SHAPES, shape_applicable
+
+from benchmarks import costmodel
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+CHIPS = 256
+DP, TP = 16, 16
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def load_artifact(arch: str, shape: str, mesh: str) -> Optional[dict]:
+    p = os.path.join(ARTIFACT_DIR, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def roofline_row(arch: str, shape_name: str, mesh: str = "single") -> dict:
+    cfg = C.get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    row = {"arch": arch, "shape": shape_name}
+    if not ok:
+        row.update(status="skipped", reason=reason)
+        return row
+
+    cost = costmodel.cell_cost(cfg, shape, n_pods=1, tp=TP, dp=DP)
+    t_compute = cost.flops / (CHIPS * PEAK_FLOPS)
+    t_memory = cost.hbm_bytes / (CHIPS * HBM_BW)
+    # wire bytes per chip: TP all-reduce ~ 2x shard bytes (ring), shard =
+    # whole-tensor bytes / dp; FSDP/DP terms are already per-chip scale.
+    wire_model = 2.0 * cost.coll_bytes_model / DP
+    wire_data = cost.coll_bytes_data
+    t_coll = (wire_model + wire_data) / ICI_BW
+
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())  # perfect-overlap bound
+    mfu_bound = cost.model_flops / (CHIPS * PEAK_FLOPS) / step_time
+
+    row.update(
+        status="ok",
+        n_params=cost.n_params,
+        n_active=cost.n_active_params,
+        t_compute_s=t_compute,
+        t_memory_s=t_memory,
+        t_collective_s=t_coll,
+        dominant=dominant,
+        model_flops=cost.model_flops,
+        analytic_flops=cost.flops,
+        useful_flops_frac=cost.model_flops / max(cost.flops, 1.0),
+        roofline_fraction=mfu_bound,
+    )
+
+    art = load_artifact(arch, shape_name, mesh)
+    if art and art.get("status") == "ok":
+        L = cfg.n_layers
+        coll = art["collectives"]
+        row.update(
+            hlo_flops_per_dev=art.get("flops"),
+            hlo_bytes_per_dev=art.get("bytes_accessed"),
+            hlo_mem_per_dev_gib=art["memory"]["per_device_total"] / 2 ** 30,
+            hlo_coll_bytes_raw=coll.get("total_bytes"),
+            hlo_coll_bytes_loop_scaled=(coll.get("top_level_bytes", 0)
+                                        + coll.get("loop_bytes", 0) * L),
+            compile_s=art.get("compile_s"),
+        )
+    return row
+
+
+def full_table(mesh: str = "single"):
+    rows = []
+    for arch in C.ASSIGNED:
+        for shape_name in SHAPES:
+            rows.append(roofline_row(arch, shape_name, mesh))
+    return rows
+
+
+def format_table(rows) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'dom':10s} {'t_comp':>9s} "
+           f"{'t_mem':>9s} {'t_coll':>9s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'HLOmem/dev':>11s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} SKIPPED "
+                         f"({r.get('reason', '')[:60]})")
+            continue
+        mem = r.get("hlo_mem_per_dev_gib")
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['dominant']:10s} "
+            f"{r['t_compute_s']:9.2e} {r['t_memory_s']:9.2e} "
+            f"{r['t_collective_s']:9.2e} {r['useful_flops_frac']:7.2f} "
+            f"{100 * r['roofline_fraction']:6.1f}% "
+            f"{(f'{mem:8.2f}GiB' if mem is not None else '      n/a'):>11s}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = full_table(args.mesh)
+    print(format_table(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

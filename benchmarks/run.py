@@ -1,0 +1,63 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints a ``name,us_per_call,derived`` CSV summary at the end (per-benchmark
+detail tables are printed inline).  The roofline/dry-run artifacts are
+consumed by ``python -m benchmarks.roofline`` (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer fine-tuning steps (smoke mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    steps = 80 if args.quick else 300
+    rows = []
+
+    def bench(name, fn, derived_fn):
+        if args.only and args.only != name:
+            return
+        t0 = time.perf_counter()
+        out = fn()
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append((name, dt, derived_fn(out)))
+
+    from benchmarks import (bench_ablation, bench_bps_path, bench_gradients,
+                            bench_memory_speed, bench_task_ppl,
+                            bench_zeroshot)
+
+    bench("task_ppl_table8", lambda: bench_task_ppl.run(steps=steps),
+          lambda o: "otaro_avg_ppl=%.3f" % float(
+              np.mean(list(o["otaro"].values()))))
+    bench("zeroshot_table1", lambda: bench_zeroshot.run(steps=steps),
+          lambda o: "otaro_avg_acc=%.4f" % float(
+              np.mean(list(o["otaro"].values()))))
+    bench("bps_path_fig3", lambda: bench_bps_path.run(steps=steps),
+          lambda o: "bps_counts=" + str(o["bps_counts"]).replace(",", ";"))
+    bench("gradients_fig456", bench_gradients.run,
+          lambda o: "EY_ratio_m3=%.4f" % o["lsm"][3]["ratio"])
+    bench("ablation_fig8", lambda: bench_ablation.run(steps=steps),
+          lambda o: "otaro=%.3f;bps_only=%.3f" % (
+              o["strategies"]["otaro"], o["strategies"]["bps_only"]))
+    bench("memory_speed_table2", bench_memory_speed.run,
+          lambda o: "reduction=%.3f;speedup_bound=%.2f" % (
+              o["reduction"], o["speedup_bound"]))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Architecture registry: the 10 assigned architectures (+ paper's own
+LLaMA-style configs).  ``get_config(name)`` / ``list_archs()`` are the public
+API; ``--arch <id>`` in the launchers resolves here."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = [
+    "minitron_8b",
+    "qwen2_0_5b",
+    "qwen2_1_5b",
+    "yi_9b",
+    "zamba2_7b",
+    "grok_1_314b",
+    "granite_moe_1b_a400m",
+    "rwkv6_7b",
+    "pixtral_12b",
+    "seamless_m4t_large_v2",
+    # the paper's own evaluation models (LLaMA-family), used by benchmarks
+    "llama3_2_1b",
+    "llama3_8b",
+]
+
+_ALIASES = {
+    "minitron-8b": "minitron_8b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "yi-9b": "yi_9b",
+    "zamba2-7b": "zamba2_7b",
+    "grok-1-314b": "grok_1_314b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "rwkv6-7b": "rwkv6_7b",
+    "pixtral-12b": "pixtral_12b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "llama3.2-1b": "llama3_2_1b",
+    "llama3-8b": "llama3_8b",
+}
+
+# The 10 dry-run architectures (excludes the paper's eval models).
+ASSIGNED = ARCH_IDS[:10]
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    mod_name = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    if hasattr(mod, "REDUCED"):
+        return mod.REDUCED
+    return mod.CONFIG.reduced()
+
+
+def list_archs() -> List[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,38 @@
+"""Granite-3.0-1B-A400M [hf:ibm-granite/granite-3.0-1b-a400m-base; hf] —
+fine-grained MoE, 32 experts top-8.
+
+24L, d_model=1024, 16 heads (GQA kv=8), d_ff=512 per expert, vocab=49155.
+vocab 49155 is not divisible by the 16-way model axis; the sharding rules
+fall back to replicating the vocab dim (divisibility fallback, DESIGN.md §6)
+— at 50M unembed params the replication cost is negligible.
+
+The tiny per-expert d_ff makes one-hot dispatch FLOP-dominant, so this arch
+uses the scatter-based capacity dispatch for train/prefill like the others
+but profits most from the dense path at decode.
+
+Perf note (EXPERIMENTS.md §Perf cell A): under TP-16 the un-shardable
+dispatch math replicates ~8x; train this arch with the pure-DP layout
+(`batch_layout="dp"`) — 8x fewer per-device FLOPs.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49_155,
+    n_experts=32,
+    top_k=8,
+    moe_capacity_factor=1.25,
+    moe_dispatch="capacity",
+    rope_theta=10_000.0,
+    remat="full",
+)
+
+REDUCED = CONFIG.reduced(n_experts=8, top_k=2)

@@ -1,0 +1,28 @@
+"""Grok-1 (314B) [hf:xai-org/grok-1; unverified] — MoE, 8 experts top-2.
+
+64L, d_model=6144, 48 heads (GQA kv=8), d_ff=32768 per expert,
+vocab=131072.  SEFP's memory win is largest here: ~309B of the 314B params
+are expert weights, all packable to ~9.1 bits master / ~5.1 bits at E5M4.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131_072,
+    n_experts=8,
+    top_k=2,
+    moe_capacity_factor=1.25,
+    moe_dispatch="capacity",
+    rope_theta=10_000.0,
+    remat="full",
+)
+
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,21 @@
+"""LLaMA3.2-1B — the paper's task-specific fine-tuning model (Fig. 7 /
+Table 8).  16L, d_model=2048, 32 heads (GQA kv=8, head_dim=64), d_ff=8192,
+vocab=128256."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b",
+    family="dense",
+    n_layers=16,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=128_256,
+    rope_theta=500_000.0,
+    remat="full",
+)
+
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,21 @@
+"""LLaMA3-8B — one of the paper's zero-shot models (Table 1/5) and the
+subject of its Table 2 memory/throughput benchmark.  32L, d_model=4096,
+32 heads (GQA kv=8, head_dim=128), d_ff=14336, vocab=128256."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128_256,
+    rope_theta=500_000.0,
+    remat="full",
+)
+
+REDUCED = CONFIG.reduced()

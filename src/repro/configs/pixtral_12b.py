@@ -1,0 +1,28 @@
+"""Pixtral-12B [hf:mistralai/Pixtral-12B-2409; unverified] — pixtral-ViT
+frontend + Mistral-NeMo-style backbone.
+
+Backbone: 40L, d_model=5120, 32 heads (GQA kv=8, head_dim=128), d_ff=14336,
+vocab=131072.  The vision frontend is a STUB per the brief: batches carry
+precomputed patch embeddings ([B, 256, d_model] prefix); the decoder
+backbone (what the shapes exercise) is real.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131_072,
+    frontend="vision_stub",
+    n_prefix_embeds=256,
+    rope_theta=1_000_000.0,
+    remat="full",
+)
+
+REDUCED = CONFIG.reduced(n_prefix_embeds=4)

@@ -1,0 +1,26 @@
+"""Qwen2-0.5B [arXiv:2407.10671; hf] — GQA with QKV bias.
+
+24L, d_model=896, 14 heads (GQA kv=2), d_ff=4864, vocab=151936.
+head_dim=64.  Note 14 heads are not divisible by the model-parallel axis
+(16); the sharding rules fall back to replicated heads and carry TP on the
+MLP/vocab dims instead (DESIGN.md §6).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151_936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    remat="full",
+)
+
+REDUCED = CONFIG.reduced(qkv_bias=True)

@@ -1,0 +1,24 @@
+"""RWKV6-World-7B "Finch" [arXiv:2404.05892; hf] — attention-free,
+data-dependent decay.
+
+32L, d_model=4096 (64 heads x head_dim 64), d_ff=14336, vocab=65536.
+RWKV family: long_500k RUNS (recurrent state is O(1) per token).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="rwkv",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,            # informational: rwkv uses rwkv_head_dim
+    n_kv_heads=64,
+    d_ff=14336,
+    vocab_size=65_536,
+    rwkv_head_dim=64,
+    rwkv_chunk=32,
+    remat="full",
+)
+
+REDUCED = CONFIG.reduced()

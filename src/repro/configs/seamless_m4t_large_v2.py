@@ -1,0 +1,36 @@
+"""SeamlessM4T-large-v2 [arXiv:2308.11596; hf] — multimodal enc-dec backbone.
+
+24L encoder + 24L decoder, d_model=1024, 16 heads (kv=16, head_dim=64),
+d_ff=8192, vocab=256206.  The speech frontend is a STUB per the brief:
+batches carry precomputed frame embeddings [B, S/4, d_model]; decode shapes
+run the DECODER (self-attn KV cache + precomputed cross-attention K/V) —
+the arch is enc-dec, not encoder-only, so decode cells apply.
+
+vocab 256206 is not divisible by 64/16; embedding quantization groups fall
+back to the d_model axis and the vocab dim falls back to replication
+(divisibility fallback, DESIGN.md §6).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=48,           # informational: 24 enc + 24 dec
+    n_enc_layers=24,
+    n_dec_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=256_206,
+    frontend="audio_stub",
+    rope_theta=10_000.0,
+    remat="full",
+    # the 256206 vocab is replicated (non-divisible by TP-16); smaller CE
+    # chunks keep the [B, chunk, V] logits transient ~2 GiB/device
+    loss_chunk=128,
+)
+
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,39 @@
+"""Zamba2-7B [arXiv:2411.15242; unverified] — Mamba2 backbone + shared
+attention blocks.
+
+81L Mamba2, d_model=3584, shared attn: 32 heads (GQA kv=32, head_dim=112),
+d_ff=14336, vocab=32000, ssm_state=64.  Two shared attention blocks,
+alternating, invoked every 6 backbone layers (14 invocations).
+
+Hybrid family: long_500k RUNS (SSM state is O(1); the shared-attn KV cache
+is the only length-proportional state and is sharded over the model axis).
+
+Perf note (EXPERIMENTS.md §Perf cell B): the mamba stack is hostile to
+tensor parallelism under GSPMD (0.6 TB/step of residual-stream gathers);
+train this arch with the pure-DP layout (`--variant dp` in the dry-run,
+`batch_layout="dp"` in train/steps.py) — 12.4x fewer collective bytes.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32_000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    attn_every=6,
+    n_shared_attn_blocks=2,
+    rope_theta=10_000.0,
+    remat="full",
+)
+
+REDUCED = CONFIG.reduced(n_layers=4, n_kv_heads=4)

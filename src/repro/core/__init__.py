@@ -1,0 +1,25 @@
+"""OTARo core: SEFP quantization + BPS bit-width search + LAA accumulation."""
+
+from repro.core.sefp import (  # noqa: F401
+    EXP_MAX,
+    EXP_MIN,
+    GROUP_SIZE,
+    MANTISSA_WIDTHS,
+    quantize_tree,
+    sefp_quantize,
+    sefp_quantize_ste,
+)
+from repro.core.packed import (  # noqa: F401
+    PackedSEFP,
+    dequantize,
+    dequantize_tree,
+    pack,
+    pack_tree,
+)
+from repro.core.otaro import (  # noqa: F401
+    OTAROConfig,
+    OTAROState,
+    init_state,
+    make_eval_fn,
+    make_otaro_step,
+)

@@ -1,0 +1,83 @@
+"""BPS — Exploitation-Exploration Bit-Width Path Search (paper Eq. 5-9).
+
+A UCB-style bandit over the bit-width set B = {E5M8 .. E5M3}:
+
+    Score(b) = lambda * sqrt(ln t / t_b) - L_b
+
+where t is the global batch counter, t_b the number of times b was selected
+and L_b the latest observed training loss at b.  Bit-widths never tried have
+infinite score (must-explore).  As t grows the exploration term vanishes and
+the path converges to the higher bit-widths (smaller loss), matching the
+paper's convergence argument (Eq. 6-9).
+
+The controller state is a small pytree of replicated scalars and lives
+*inside* the jitted train step: selection, loss bookkeeping and the counter
+updates are all traced, so BPS adds no host round-trip and no recompilation
+(the selected mantissa width is a dynamic scalar — see core/sefp.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sefp import MANTISSA_WIDTHS
+
+
+class BPSState(NamedTuple):
+    t: jax.Array        # int32   — global batch counter (selections made)
+    t_b: jax.Array      # int32[B] — per-bit-width selection counts
+    loss_b: jax.Array   # float32[B] — latest (or EMA) loss per bit-width
+
+
+def init(num_widths: int = len(MANTISSA_WIDTHS)) -> BPSState:
+    return BPSState(
+        t=jnp.zeros((), jnp.int32),
+        t_b=jnp.zeros((num_widths,), jnp.int32),
+        loss_b=jnp.zeros((num_widths,), jnp.float32),
+    )
+
+
+def scores(state: BPSState, lam: float) -> jax.Array:
+    """Paper Eq. 5.  Unvisited arms get +inf (forced exploration)."""
+    t = jnp.maximum(state.t, 1).astype(jnp.float32)
+    t_b = state.t_b.astype(jnp.float32)
+    explore = lam * jnp.sqrt(jnp.log(t) / jnp.maximum(t_b, 1.0))
+    s = explore - state.loss_b
+    return jnp.where(state.t_b == 0, jnp.inf, s)
+
+
+def select(state: BPSState, lam: float = 5.0,
+           widths: Sequence[int] = MANTISSA_WIDTHS) -> tuple[jax.Array, jax.Array]:
+    """Pick the arm with the highest score.  Returns (arm_index int32,
+    mantissa_width int32).  Ties break toward the first (highest) width."""
+    idx = jnp.argmax(scores(state, lam)).astype(jnp.int32)
+    m = jnp.asarray(widths, jnp.int32)[idx]
+    return idx, m
+
+
+def update(state: BPSState, arm: jax.Array, loss: jax.Array,
+           loss_ema: float = 1.0) -> BPSState:
+    """Record the observed loss for the selected arm and bump counters.
+    loss_ema=1.0 reproduces the paper's 'real-time loss' (latest value)."""
+    onehot = jax.nn.one_hot(arm, state.t_b.shape[0], dtype=jnp.int32)
+    loss = loss.astype(jnp.float32)
+    old = state.loss_b[arm]
+    seen = state.t_b[arm] > 0
+    new_val = jnp.where(seen, loss_ema * loss + (1.0 - loss_ema) * old, loss)
+    loss_b = state.loss_b.at[arm].set(new_val)
+    return BPSState(
+        t=state.t + 1,
+        t_b=state.t_b + onehot,
+        loss_b=loss_b,
+    )
+
+
+def uniform_select(step: jax.Array,
+                   widths: Sequence[int] = MANTISSA_WIDTHS) -> tuple[jax.Array, jax.Array]:
+    """The paper's 'uniform sampling' baseline (Fig. 3): cycle through B."""
+    idx = (step % len(widths)).astype(jnp.int32)
+    m = jnp.asarray(widths, jnp.int32)[idx]
+    return idx, m

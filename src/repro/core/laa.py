@@ -1,0 +1,73 @@
+"""LAA — Low-Precision Asynchronous Accumulation (paper Algorithm 1, Eq. 16-18).
+
+At ultra-low bit-widths the SEFP quantization error is a sawtooth in each
+weight (period and amplitude 1/2^m, Appendix A), which injects a zero-mean
+residual perturbation Y into the gradients (paper Eq. 14-15).  LAA
+accumulates gradients produced by ultra-low-bit batches — *asynchronously*,
+i.e. across non-contiguous batches, the buffer survives interleaved
+high-precision steps — and releases one delayed update every N such batches,
+shrinking the relative perturbation like 1/sqrt(N) (Eq. 17).
+
+Implemented as a pure state machine usable inside a jitted step:
+
+    effective_grad, do_update, new_state = laa.step(state, grads, is_low)
+
+- ``is_low`` False  -> effective_grad = grads, do_update = True (standard path)
+- ``is_low`` True   -> grads go into the buffer; do_update is True only on the
+  N-th accumulated low-bit batch, and then effective_grad is the buffered
+  *sum* (Eq. 18 updates with the summed gradient).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LAAState(NamedTuple):
+    buf: Any            # pytree like grads (fp32) — the asynchronous accumulator
+    count: jax.Array    # int32 — low-bit batches accumulated since last release
+
+
+def init(grad_shapes: Any, dtype=jnp.float32) -> LAAState:
+    buf = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, dtype), grad_shapes)
+    return LAAState(buf=buf, count=jnp.zeros((), jnp.int32))
+
+
+def step(state: LAAState, grads: Any, is_low: jax.Array, n_delay: int,
+         average: bool = False):
+    """One LAA transition.  All branches are data-dependent `where`s so the
+    function stays a single traced program (no recompiles when BPS switches
+    precision).
+
+    Returns (effective_grad, do_update: bool[], new_state).
+    """
+    is_low = jnp.asarray(is_low, jnp.bool_)
+    count1 = jnp.where(is_low, state.count + 1, state.count)
+    release = jnp.logical_and(is_low, count1 >= n_delay)
+    do_update = jnp.logical_or(jnp.logical_not(is_low), release)
+
+    lowf = is_low.astype(jnp.float32)
+    relf = release.astype(jnp.float32)
+
+    def upd(buf, g):
+        g32 = g.astype(buf.dtype)
+        acc = buf + lowf * g32           # accumulate only on low-bit batches
+        return acc * (1.0 - relf)        # clear on release
+
+    def eff(buf, g):
+        g32 = g.astype(jnp.float32)
+        acc = buf + g32                   # buffered sum incl. this batch
+        scale = jnp.where(
+            jnp.asarray(average, jnp.bool_),
+            1.0 / jnp.maximum(count1.astype(jnp.float32), 1.0), 1.0)
+        low_grad = acc * scale
+        return jnp.where(relf > 0, low_grad, jnp.where(lowf > 0, 0.0, g32))
+
+    effective = jax.tree_util.tree_map(eff, state.buf, grads)
+    new_buf = jax.tree_util.tree_map(upd, state.buf, grads)
+    new_count = jnp.where(release, 0, count1)
+    return effective, do_update, LAAState(buf=new_buf, count=new_count)

@@ -1,0 +1,178 @@
+"""OTARo step policy: BPS bit-width selection -> quantized-loss gradient (STE)
+-> LAA delayed accumulation -> optimizer update.  (Paper Algorithm 1.)
+
+`make_otaro_step` builds a *pure* step function `(state, batch) -> (state,
+metrics)` suitable for `jax.jit` / `pjit`.  The selected mantissa width is a
+dynamic scalar, so one compiled executable covers every precision in B —
+BPS can switch precision every batch with zero recompilation (DESIGN.md §3).
+
+Training modes (used by the paper's baselines and ablations):
+  - "otaro"    : BPS + LAA (the full method)
+  - "bps_only" : BPS without LAA (ablation, Fig. 8)
+  - "uniform"  : cycle uniformly through B (Fig. 3 baseline)
+  - "fixed"    : a single fixed bit-width (fixed-precision fine-tuning)
+  - "fp16"     : no quantization in the loss (FP16 fine-tuning baseline)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bps as bps_lib
+from repro.core import laa as laa_lib
+from repro.core import sefp
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class OTAROConfig:
+    widths: Sequence[int] = sefp.MANTISSA_WIDTHS   # mantissa widths, high->low
+    lam: float = 5.0                  # BPS exploration coefficient (paper: 5)
+    laa_n: int = 10                   # LAA delay steps (paper: 10)
+    laa_threshold_m: int = 4          # widths <= this are "ultra-low"
+    laa_average: bool = False         # False = paper's summed update (Eq. 18)
+    group_size: int = sefp.GROUP_SIZE
+    group_axis: int = 0
+    min_size: int = 4096
+    exclude_substrings: Sequence[str] = sefp.DEFAULT_EXCLUDE
+    mode: str = "otaro"
+    fixed_m: int = 8                  # used when mode == "fixed"
+    loss_ema: float = 1.0             # BPS real-time loss (1.0 = latest)
+    grad_clip: Optional[float] = None
+
+
+class OTAROState(NamedTuple):
+    params: Any
+    opt_state: Any
+    bps: bps_lib.BPSState
+    laa: laa_lib.LAAState
+    step: jax.Array
+
+
+def init_state(params, optimizer: opt_lib.Optimizer,
+               cfg: OTAROConfig) -> OTAROState:
+    return OTAROState(
+        params=params,
+        opt_state=optimizer.init(params),
+        bps=bps_lib.init(len(cfg.widths)),
+        laa=_empty_laa(params, cfg),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _empty_laa(params, cfg: OTAROConfig) -> laa_lib.LAAState:
+    """Modes without LAA keep a zero-size buffer to preserve the state pytree
+    structure (checkpoint compatibility across modes)."""
+    if cfg.mode == "otaro":
+        return laa_lib.init(params)
+    buf = jax.tree_util.tree_map(lambda p: jnp.zeros((), jnp.float32), params)
+    return laa_lib.LAAState(buf=buf, count=jnp.zeros((), jnp.int32))
+
+
+def make_otaro_step(
+    loss_fn: Callable[[Any, Any], jax.Array],
+    optimizer: opt_lib.Optimizer,
+    cfg: OTAROConfig,
+    grad_transform: Optional[Callable[[Any], Any]] = None,
+    loss_transform: Optional[Callable[[jax.Array], jax.Array]] = None,
+):
+    """loss_fn(params_quantized, batch) -> scalar loss.
+
+    grad_transform/loss_transform: distribution hooks applied right after
+    the backward pass — e.g. the SEFP-compressed cross-pod all-reduce
+    (train/compression.py) when the step runs shard_map'ed over the pod
+    axis, paired with a pod-mean of the loss so BPS state stays replicated.
+    """
+    widths = tuple(cfg.widths)
+
+    def quantized_loss(params, batch, m):
+        qp = sefp.quantize_tree(
+            params, m, group_size=cfg.group_size, group_axis=cfg.group_axis,
+            min_size=cfg.min_size, exclude_substrings=cfg.exclude_substrings,
+            ste=True)
+        return loss_fn(qp, batch)
+
+    def step_fn(state: OTAROState, batch):
+        # --- 1. bit-width selection -------------------------------------
+        if cfg.mode in ("otaro", "bps_only"):
+            arm, m = bps_lib.select(state.bps, cfg.lam, widths)
+        elif cfg.mode == "uniform":
+            arm, m = bps_lib.uniform_select(state.step, widths)
+        elif cfg.mode == "fixed":
+            arm = jnp.asarray(widths.index(cfg.fixed_m), jnp.int32)
+            m = jnp.asarray(cfg.fixed_m, jnp.int32)
+        elif cfg.mode == "fp16":
+            arm = jnp.zeros((), jnp.int32)
+            m = jnp.asarray(max(widths), jnp.int32)
+        else:
+            raise ValueError(f"unknown mode {cfg.mode!r}")
+
+        # --- 2. quantized-loss gradient (STE) ---------------------------
+        if cfg.mode == "fp16":
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        else:
+            loss, grads = jax.value_and_grad(quantized_loss)(
+                state.params, batch, m)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        if loss_transform is not None:
+            loss = loss_transform(loss)
+
+        if cfg.grad_clip is not None:
+            grads, _ = opt_lib.clip_by_global_norm(grads, cfg.grad_clip)
+
+        # --- 3. BPS bookkeeping ------------------------------------------
+        new_bps = bps_lib.update(state.bps, arm, loss, cfg.loss_ema)
+
+        # --- 4. LAA delayed accumulation ---------------------------------
+        if cfg.mode == "otaro":
+            is_low = m <= cfg.laa_threshold_m
+            eff_grads, do_update, new_laa = laa_lib.step(
+                state.laa, grads, is_low, cfg.laa_n, cfg.laa_average)
+        else:
+            eff_grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+            do_update = jnp.asarray(True)
+            new_laa = state.laa
+
+        # --- 5. optimizer (masked on LAA-held batches) --------------------
+        updates, new_opt = optimizer.update(
+            eff_grads, state.opt_state, state.params)
+        new_params = opt_lib.apply_updates(state.params, updates)
+        params, opt_state = opt_lib.masked_apply(
+            state.params, state.opt_state, new_params, new_opt, do_update)
+
+        metrics = {
+            "loss": loss,
+            "mantissa_width": m,
+            "did_update": do_update.astype(jnp.int32),
+            "laa_count": new_laa.count,
+            "bps_t_b": new_bps.t_b,
+        }
+        new_state = OTAROState(params=params, opt_state=opt_state,
+                               bps=new_bps, laa=new_laa,
+                               step=state.step + 1)
+        return new_state, metrics
+
+    return step_fn
+
+
+def make_eval_fn(loss_fn: Callable[[Any, Any], jax.Array],
+                 cfg: OTAROConfig):
+    """Evaluation at an arbitrary precision: eval_fn(params, batch, m).
+    m = None-like sentinel is not supported — pass max(width) for 'fp' eval
+    with quantization, or use loss_fn directly for true full precision."""
+
+    def eval_fn(params, batch, m):
+        qp = sefp.quantize_tree(
+            params, m, group_size=cfg.group_size, group_axis=cfg.group_axis,
+            min_size=cfg.min_size, exclude_substrings=cfg.exclude_substrings,
+            ste=False)
+        return loss_fn(qp, batch)
+
+    return eval_fn

@@ -1,0 +1,191 @@
+"""PackedSEFP: the deployable SEFP master representation.
+
+Master format per weight tensor: the group axis is moved to the FRONT and
+arrays are stored "k-major" — exactly the layout the serving matmul kernel
+(repro/kernels/sefp_matmul) consumes without any transposition:
+
+  mag       uint8  [n, *rest]        M8 mantissa magnitudes (0..255)
+  sign_bits uint8  [n//8, *rest]     bit-packed signs along the group axis
+                                     (bit j of byte i -> element 8i + j; 1=neg)
+  exp       int8   [n//64, *rest]    per-group shared exponent E* (E5 range)
+
+For a 2-D weight W[K, N] grouped along the contraction axis (group_axis=0,
+the default used throughout the framework) this is mag[K, N],
+sign_bits[K//8, N], exp[K//64, N].
+
+Bits/param = 8 + 1 + 8/64 = 9.125 (paper: ~9.08 for E5M8).  Truncating the
+master to E5Mk is ``mag >> (8-k)`` — the paper's Fig. 1/2 mechanism — and is
+performed *on the fly* (fused into the serving matmul kernel), so switching
+precision at runtime moves zero bytes.
+
+Dequantized value: (1-2*sign) * (mag >> (8-k)) * 2^(E* - (k-1)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sefp
+
+MASTER_M = 8  # master mantissa width
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedSEFP:
+    """Packed SEFP tensor. ``shape``/``group_axis`` describe the logical
+    (unpacked) tensor; arrays are stored with the group axis moved to the
+    front (k-major)."""
+
+    mag: jax.Array        # uint8 [n, *rest]
+    sign_bits: jax.Array  # uint8 [n//8, *rest]
+    exp: jax.Array        # int8  [n//group_size, *rest]
+    shape: tuple          # logical shape
+    group_axis: int
+    group_size: int
+
+    def tree_flatten(self):
+        return (self.mag, self.sign_bits, self.exp), (
+            self.shape, self.group_axis, self.group_size)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        mag, sign_bits, exp = children
+        shape, group_axis, group_size = aux
+        return cls(mag, sign_bits, exp, shape, group_axis, group_size)
+
+    @property
+    def nbytes_packed(self) -> int:
+        """True deployed size in bytes (bit-packed accounting)."""
+        return int(self.mag.size + self.sign_bits.size + self.exp.size)
+
+    def bits_per_param(self, m: int = MASTER_M) -> float:
+        """Streaming bits/param when serving at mantissa width m (the kernel
+        reads the truncated magnitude lane-compressed to m bits, the sign bit,
+        and the amortized group exponent)."""
+        return (m + 1) + 8.0 / self.group_size
+
+
+def _norm_axis(axis: int, ndim: int) -> int:
+    return axis % ndim
+
+
+def pack(w: jax.Array, group_size: int = sefp.GROUP_SIZE,
+         group_axis: int = 0) -> PackedSEFP:
+    """Quantize ``w`` to the E5M8 master and pack it (k-major layout)."""
+    shape = tuple(w.shape)
+    ga = _norm_axis(group_axis, w.ndim)
+    wf = jnp.moveaxis(w.astype(jnp.float32), ga, 0)
+    n, *rest = wf.shape
+    if n % group_size != 0 or n % 8 != 0:
+        raise ValueError(f"group axis length {n} must be divisible by "
+                         f"{group_size}")
+    g = wf.reshape(n // group_size, group_size, *rest)
+    e = sefp.floor_log2(g).max(axis=1, keepdims=True)
+    e = jnp.clip(e, sefp.EXP_MIN, sefp.EXP_MAX)
+    quantum = sefp.exp2i(e - (MASTER_M - 1))
+    code = jnp.clip(jnp.round(g / quantum), -255.0, 255.0)
+    mag = jnp.abs(code).astype(jnp.uint8).reshape(n, *rest)
+    sign = (code < 0).astype(jnp.uint8).reshape(n, *rest)
+
+    sign8 = sign.reshape(n // 8, 8, *rest)
+    weights = (2 ** jnp.arange(8, dtype=jnp.uint32)).reshape(
+        1, 8, *([1] * len(rest)))
+    sign_bits = (sign8.astype(jnp.uint32) * weights).sum(axis=1).astype(
+        jnp.uint8)
+
+    exp = e.reshape(n // group_size, *rest).astype(jnp.int8)
+    return PackedSEFP(mag=mag, sign_bits=sign_bits, exp=exp, shape=shape,
+                      group_axis=ga, group_size=group_size)
+
+
+def unpack_signs(sign_bits: jax.Array) -> jax.Array:
+    """uint8 [n//8, *rest] -> float32 sign multipliers (+1/-1) [n, *rest]."""
+    nb, *rest = sign_bits.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, *([1] * len(rest)))
+    bits = (sign_bits[:, None] >> shifts) & jnp.uint8(1)
+    bits = bits.reshape(nb * 8, *rest)
+    return 1.0 - 2.0 * bits.astype(jnp.float32)
+
+
+def dequantize(p: PackedSEFP, m: jax.Array | int = MASTER_M,
+               dtype=jnp.float32) -> jax.Array:
+    """Dequantize the packed master at mantissa width ``m`` (<= 8, may be a
+    traced scalar).  Pure-jnp reference path; the serving hot path is the
+    Pallas kernel in repro/kernels/sefp_matmul."""
+    m = jnp.asarray(m, jnp.int32)
+    shift = (MASTER_M - m).astype(jnp.uint8)
+
+    n, *rest = p.mag.shape
+    magk = (p.mag >> shift).astype(jnp.float32)
+    signs = unpack_signs(p.sign_bits)
+    quantum = sefp.exp2i(p.exp.astype(jnp.int32) - (m - 1))
+    quantum = jnp.repeat(quantum, p.group_size, axis=0)
+    out = signs * magk * quantum
+    out = jnp.moveaxis(out, 0, p.group_axis)
+    return out.reshape(p.shape).astype(dtype)
+
+
+def to_int8_codes(p: PackedSEFP, m: jax.Array | int) -> tuple[jax.Array, jax.Array]:
+    """Truncate the master to width m<=7 and return (codes int8, exp int8)
+    in the k-major layout (codes [n, *rest], exp [n//64, *rest])."""
+    m = jnp.asarray(m, jnp.int32)
+    shift = (MASTER_M - m).astype(jnp.uint8)
+    magk = (p.mag >> shift).astype(jnp.int16)
+    signs = unpack_signs(p.sign_bits).astype(jnp.int16)
+    codes = (signs * magk).astype(jnp.int8)
+    return codes, p.exp
+
+
+def pack_tree(params, group_size: int = sefp.GROUP_SIZE, group_axis: int = 0,
+              min_size: int = 4096,
+              exclude_substrings=sefp.DEFAULT_EXCLUDE) -> Any:
+    """Pack every eligible weight of a pytree; ineligible leaves pass through
+    unchanged (they stay in their original dtype)."""
+
+    def visit(path, leaf):
+        if not sefp._is_eligible(path, leaf, min_size, exclude_substrings):
+            return leaf
+        ax = group_axis if leaf.shape[group_axis] % group_size == 0 else (
+            -1 if leaf.shape[-1] % group_size == 0 else None)
+        if ax is None:
+            return leaf
+        return pack(leaf, group_size=group_size, group_axis=ax)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def dequantize_tree(packed_params, m: jax.Array | int, dtype=jnp.bfloat16):
+    """Materialize a full pytree at precision m from a packed pytree."""
+
+    def visit(leaf):
+        if isinstance(leaf, PackedSEFP):
+            return dequantize(leaf, m, dtype=dtype)
+        return leaf
+
+    return jax.tree_util.tree_map(
+        visit, packed_params,
+        is_leaf=lambda x: isinstance(x, PackedSEFP))
+
+
+def tree_nbytes(packed_params) -> dict:
+    """Byte accounting for a (possibly partially) packed tree."""
+    packed_b = 0
+    raw_b = 0
+
+    def visit(leaf):
+        nonlocal packed_b, raw_b
+        if isinstance(leaf, PackedSEFP):
+            packed_b += leaf.nbytes_packed
+        elif hasattr(leaf, "nbytes"):
+            raw_b += int(leaf.nbytes)
+        return leaf
+
+    jax.tree_util.tree_map(visit, packed_params,
+                           is_leaf=lambda x: isinstance(x, PackedSEFP))
+    return {"packed_bytes": packed_b, "raw_bytes": raw_b,
+            "total_bytes": packed_b + raw_b}

@@ -1,0 +1,231 @@
+"""SEFP (Shared Exponent Floating Point) quantization numerics.
+
+This is the paper's core format (OTARo, AAAI 2026): each group of
+``group_size`` (default 64) parameters shares one 5-bit exponent — the maximum
+exponent in the group — and each parameter keeps a sign plus an ``m``-bit
+mantissa magnitude aligned to that shared exponent.  Every precision
+``E5M8 … E5M3`` is a mantissa truncation of the same representation, so
+precision switching requires no scaling factors.
+
+Normative definition (see DESIGN.md §4):
+
+    E*      = clamp(max_i floor(log2 |w_i|), EXP_MIN, EXP_MAX)   per group
+    quantum = 2^(E* - (m-1))
+    code_i  = clamp(round(w_i / quantum), -(2^m - 1), 2^m - 1)
+    ŵ_i     = code_i * quantum
+
+Key systems property exploited throughout this framework: ``m`` enters the
+computation only through ``2^(m-1)`` and the clamp bound ``2^m - 1``, both of
+which are cheap in-graph scalars.  We therefore treat the mantissa width as a
+*traced* int32 scalar, so a single compiled executable (train step or serve
+step) covers all precisions — no recompilation when BPS switches bit-width
+each batch, and no recompilation when an on-device request changes precision.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# E5 exponent field (FP16-compatible bias range for normals).
+EXP_MIN = -14
+EXP_MAX = 15
+
+GROUP_SIZE = 64
+
+# The paper's bit-width set B = {E5M8 .. E5M3}; indices into this tuple are
+# the canonical "bit-width ids" used by BPS.
+MANTISSA_WIDTHS = (8, 7, 6, 5, 4, 3)
+
+
+def _move_group_axis_last(w: jax.Array, group_axis: int) -> jax.Array:
+    if group_axis in (-1, w.ndim - 1):
+        return w
+    return jnp.moveaxis(w, group_axis, -1)
+
+
+def _restore_group_axis(w: jax.Array, group_axis: int, ndim: int) -> jax.Array:
+    if group_axis in (-1, ndim - 1):
+        return w
+    return jnp.moveaxis(w, -1, group_axis)
+
+
+def floor_log2(x: jax.Array) -> jax.Array:
+    """Exact floor(log2(|x|)) for positive finite x, via frexp.
+
+    frexp returns (mant, exp) with |x| = mant * 2^exp, mant in [0.5, 1), so
+    floor(log2|x|) = exp - 1 exactly (no log rounding pitfalls at powers of 2).
+    Zeros map to a very small exponent so they never win the group max.
+    """
+    x = jnp.abs(x)
+    _, e = jnp.frexp(x)
+    e = e.astype(jnp.int32) - 1
+    return jnp.where(x > 0, e, jnp.int32(-127))
+
+
+def group_shared_exponent(
+    w: jax.Array,
+    group_size: int = GROUP_SIZE,
+    group_axis: int = -1,
+) -> jax.Array:
+    """Per-group shared exponent E* (int32), shape = w.shape with the group
+    axis reduced by ``group_size``.  Group axis length must be divisible by
+    ``group_size`` (configs guarantee this; pad upstream otherwise)."""
+    wl = _move_group_axis_last(w, group_axis)
+    *lead, n = wl.shape
+    if n % group_size != 0:
+        raise ValueError(f"group axis length {n} not divisible by {group_size}")
+    g = wl.reshape(*lead, n // group_size, group_size)
+    e = floor_log2(g).max(axis=-1)
+    e = jnp.clip(e, EXP_MIN, EXP_MAX)
+    return e
+
+
+def exp2i(e: jax.Array) -> jax.Array:
+    """Exact 2**e for integer e in [-126, 127], built by placing e in the
+    fp32 exponent field.  (jnp.exp2 is NOT exact on all backends — it may
+    lower to exp(e*ln2) — and SEFP requires power-of-two quanta to be exact
+    or truncation/round-trip identities break.)"""
+    e = jnp.asarray(e, jnp.int32)
+    bits = (e + 127) << 23
+    return lax.bitcast_convert_type(bits.astype(jnp.int32), jnp.float32)
+
+
+def sefp_quantize(
+    w: jax.Array,
+    m: jax.Array | int,
+    group_size: int = GROUP_SIZE,
+    group_axis: int = -1,
+    rounding: str = "nearest",
+) -> jax.Array:
+    """Fake-quantize ``w`` to SEFP E5M``m`` and return the dequantized array.
+
+    ``m`` may be a Python int or a traced int32 scalar (dynamic precision).
+    ``rounding``: "nearest" (round-half-even, training; Eq. 11's [.]) or
+    "trunc" (round-toward-zero, deployment truncation semantics).
+    """
+    orig_dtype = w.dtype
+    ndim = w.ndim
+    wf = w.astype(jnp.float32)
+    wl = _move_group_axis_last(wf, group_axis)
+    *lead, n = wl.shape
+    g = wl.reshape(*lead, n // group_size, group_size)
+
+    e = floor_log2(g).max(axis=-1, keepdims=True)
+    e = jnp.clip(e, EXP_MIN, EXP_MAX)
+
+    m = jnp.asarray(m, jnp.int32)
+    quantum = exp2i(e - (m - 1))  # [..., G, 1]
+    maxmag = exp2i(m) - 1.0  # 2^m - 1, exact
+
+    scaled = g / quantum
+    if rounding == "nearest":
+        code = jnp.round(scaled)  # round-half-to-even
+    elif rounding == "trunc":
+        code = jnp.trunc(scaled)
+    else:
+        raise ValueError(f"unknown rounding mode {rounding!r}")
+    code = jnp.clip(code, -maxmag, maxmag)
+
+    out = (code * quantum).reshape(*lead, n)
+    out = _restore_group_axis(out, group_axis, ndim)
+    return out.astype(orig_dtype)
+
+
+def sefp_quantize_ste(
+    w: jax.Array,
+    m: jax.Array | int,
+    group_size: int = GROUP_SIZE,
+    group_axis: int = -1,
+    rounding: str = "nearest",
+) -> jax.Array:
+    """Straight-through-estimator variant: forward = Q(w, m), dw = identity
+    (paper Eq. 1-3)."""
+    q = sefp_quantize(w, m, group_size=group_size, group_axis=group_axis,
+                      rounding=rounding)
+    return w + lax.stop_gradient(q - w)
+
+
+# ---------------------------------------------------------------------------
+# Pytree application: quantize all eligible weights of a model.
+# ---------------------------------------------------------------------------
+
+def _is_eligible(path: tuple, leaf: jax.Array, min_size: int,
+                 exclude_substrings: Sequence[str]) -> bool:
+    if not isinstance(leaf, jax.Array) and not hasattr(leaf, "shape"):
+        return False
+    if leaf.ndim < 2:          # biases, norms, scalar gates stay full precision
+        return False
+    if leaf.size < min_size:
+        return False
+    name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+    for s in exclude_substrings:
+        if s in name:
+            return False
+    return True
+
+
+# Parameters whose names contain these substrings are never SEFP-quantized:
+# SSM/RWKV recurrence parameters gate exponentials (see DESIGN.md §5) and
+# norm scales / biases are tiny.
+DEFAULT_EXCLUDE = ("A_log", "ssm_dt", "decay", "time_", "norm", "scale",
+                   "bias", "ln_")
+
+
+def quantize_tree(
+    params,
+    m: jax.Array | int,
+    group_size: int = GROUP_SIZE,
+    group_axis: int = 0,
+    min_size: int = 4096,
+    exclude_substrings: Sequence[str] = DEFAULT_EXCLUDE,
+    ste: bool = True,
+):
+    """Apply SEFP fake-quant (with STE by default) to every eligible weight in
+    a parameter pytree.  2-D+ weights are grouped along ``group_axis``
+    (default 0 = contraction axis of ``x @ W`` weights).  Returns a new pytree.
+    """
+    fn = sefp_quantize_ste if ste else sefp_quantize
+
+    def visit(path, leaf):
+        if not _is_eligible(path, leaf, min_size, exclude_substrings):
+            return leaf
+        ax = group_axis if leaf.shape[group_axis] % group_size == 0 else (
+            -1 if leaf.shape[-1] % group_size == 0 else None)
+        if ax is None:
+            return leaf  # no groupable axis; leave full precision
+        return fn(leaf, m, group_size=group_size, group_axis=ax)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def eligible_param_fraction(params, **kw) -> float:
+    """Fraction of total parameters that quantize_tree() would quantize —
+    used by benchmarks/memory accounting."""
+    total = 0
+    quant = 0
+    min_size = kw.get("min_size", 4096)
+    excl = kw.get("exclude_substrings", DEFAULT_EXCLUDE)
+
+    def visit(path, leaf):
+        nonlocal total, quant
+        size = int(leaf.size)
+        total += size
+        if _is_eligible(path, leaf, min_size, excl):
+            quant += size
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return quant / max(total, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "group_axis",
+                                             "rounding"))
+def sefp_quantize_jit(w, m, group_size=GROUP_SIZE, group_axis=-1,
+                      rounding="nearest"):
+    return sefp_quantize(w, m, group_size=group_size, group_axis=group_axis,
+                         rounding=rounding)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the SEFP hot paths.
+
+Kernels target TPU (pl.pallas_call + explicit BlockSpec VMEM tiling with
+MXU-aligned dims); on this CPU-only container they are validated with
+``interpret=True`` (the default here is backend-derived).
+"""
+
+import jax
+
+# interpret=True executes kernel bodies in Python on CPU; on a real TPU this
+# resolves to False and the Mosaic path is used.
+INTERPRET = jax.default_backend() != "tpu"

@@ -1,0 +1,36 @@
+"""Shared in-kernel numeric helpers (exact power-of-two and exponent ops)."""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+EXP_MIN = -14
+EXP_MAX = 15
+GROUP = 64
+
+
+def exp2i(e):
+    """Exact 2**e for integer e in [-126, 127] via fp32 exponent-field
+    construction (jnp.exp2 is not exact on every backend)."""
+    bits = (jnp.asarray(e, jnp.int32) + 127) << 23
+    return lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def floor_log2_bits(x_abs):
+    """floor(log2 x) for x > 0 via the fp32 exponent field.  Exact for
+    normals; subnormals return <= -127 which the E5 clamp absorbs."""
+    bits = lax.bitcast_convert_type(x_abs.astype(jnp.float32), jnp.int32)
+    return ((bits >> 23) & 0xFF) - 127
+
+
+def pick_block(dim: int, preferred: int, multiple: int = 1) -> int:
+    """Largest divisor of ``dim`` that is <= preferred and a multiple of
+    ``multiple`` (keeps grids exact without padding for the shapes used in
+    this repo).  Returns 0 if no such block exists."""
+    b = min(preferred, dim)
+    b -= b % multiple
+    while b >= multiple:
+        if dim % b == 0:
+            return b
+        b -= multiple
+    return 0

@@ -1,0 +1,1 @@
+from repro.kernels.sefp_matmul.ops import sefp_matmul  # noqa: F401

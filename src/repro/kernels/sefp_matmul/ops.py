@@ -1,0 +1,54 @@
+"""Jitted public wrapper for the fused SEFP dequant-matmul kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels
+from repro.core.packed import PackedSEFP
+from repro.kernels.common import pick_block
+from repro.kernels.sefp_matmul.sefp_matmul import sefp_matmul_raw
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def _call(x, mag, sign_bits, exp, m, block_m, block_n, block_k, interpret):
+    return sefp_matmul_raw(x, mag, sign_bits, exp, m, block_m=block_m,
+                           block_n=block_n, block_k=block_k,
+                           interpret=interpret)
+
+
+def sefp_matmul(x: jax.Array, packed: PackedSEFP, m, *,
+                block_m: int = 128, block_n: int = 256, block_k: int = 512,
+                interpret: bool | None = None) -> jax.Array:
+    """``x @ dequantize(packed, m)`` with on-the-fly truncation to mantissa
+    width ``m`` (python int or traced int32 scalar).
+
+    x: [M, K] (or [..., K]; leading dims are flattened), packed: k-major
+    PackedSEFP of a [K, N] weight grouped along axis 0.  Returns f32 [..., N].
+    """
+    if interpret is None:
+        interpret = kernels.INTERPRET
+    if packed.group_axis != 0 or len(packed.shape) != 2:
+        raise ValueError("sefp_matmul expects a 2-D weight packed along "
+                         "axis 0 (k-major)")
+    k_dim, n_dim = packed.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m_rows = x2.shape[0]
+    if x2.shape[1] != k_dim:
+        raise ValueError(f"x K={x2.shape[1]} vs packed K={k_dim}")
+
+    bm = pick_block(m_rows, block_m)
+    bn = pick_block(n_dim, block_n)
+    bk = pick_block(k_dim, block_k, multiple=64)
+    if bk == 0:
+        raise ValueError(f"K={k_dim} must allow a 64-divisible block")
+
+    m_arr = jnp.asarray(m, jnp.int32).reshape((1,))
+    out = _call(x2, packed.mag, packed.sign_bits, packed.exp, m_arr,
+                bm, bn, bk, interpret)
+    return out.reshape(*lead, n_dim)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the sefp_matmul kernel.
+
+Defines the semantic contract: truncate the M8 master to width m (shift),
+dequantize, cast weights AND activations to bf16 (MXU input precision),
+matmul with fp32 accumulation.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.common import GROUP, exp2i
+
+
+def dequant_ref(mag, sign_bits, exp, m):
+    """k-major packed arrays -> dequantized f32 weight [K, N]."""
+    m = jnp.asarray(m, jnp.int32)
+    shift = (8 - m).astype(jnp.uint32)
+    magk = lax.shift_right_logical(mag.astype(jnp.uint32),
+                                   shift).astype(jnp.float32)
+    kb, n = sign_bits.shape
+    shifts = jnp.arange(8, dtype=jnp.int32).reshape(1, 8, 1)
+    bits = (sign_bits.astype(jnp.int32)[:, None, :] >> shifts) & 1
+    sign = 1.0 - 2.0 * bits.reshape(kb * 8, n).astype(jnp.float32)
+    quantum = exp2i(jnp.repeat(exp.astype(jnp.int32), GROUP, axis=0)
+                    - (m - 1))
+    return sign * magk * quantum
+
+
+def sefp_matmul_ref(x, mag, sign_bits, exp, m):
+    w = dequant_ref(mag, sign_bits, exp, m).astype(jnp.bfloat16)
+    return jnp.dot(x.astype(jnp.bfloat16), w,
+                   preferred_element_type=jnp.float32)

@@ -1,0 +1,1 @@
+from repro.kernels.sefp_pack.ops import sefp_pack_pallas  # noqa: F401

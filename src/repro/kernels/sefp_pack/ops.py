@@ -1,0 +1,35 @@
+"""Jitted public wrapper: pack a weight into a PackedSEFP master on-device."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro import kernels
+from repro.core.packed import PackedSEFP
+from repro.kernels.common import pick_block
+from repro.kernels.sefp_pack.sefp_pack import sefp_pack_raw
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_k", "block_n", "interpret"))
+def _call(w, block_k, block_n, interpret):
+    return sefp_pack_raw(w, block_k=block_k, block_n=block_n,
+                         interpret=interpret)
+
+
+def sefp_pack_pallas(w: jax.Array, *, block_k: int = 256,
+                     block_n: int = 512,
+                     interpret: bool | None = None) -> PackedSEFP:
+    """Pack a [K, N] weight (K % 64 == 0) into the E5M8 master, k-major."""
+    if interpret is None:
+        interpret = kernels.INTERPRET
+    k_dim, n_dim = w.shape
+    bk = pick_block(k_dim, block_k, multiple=64)
+    if bk == 0:
+        raise ValueError(f"K={k_dim} must allow a 64-divisible block")
+    bn = pick_block(n_dim, block_n)
+    mag, sign_bits, exp = _call(w, bk, bn, interpret)
+    return PackedSEFP(mag=mag, sign_bits=sign_bits, exp=exp,
+                      shape=(k_dim, n_dim), group_axis=0, group_size=64)

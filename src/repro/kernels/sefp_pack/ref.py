@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the sefp_pack kernel (standalone; the framework-wide
+reference is core/packed.pack — tests assert all three agree bitwise)."""
+
+import jax.numpy as jnp
+
+from repro.kernels.common import EXP_MAX, EXP_MIN, GROUP, exp2i
+
+MASTER_M = 8
+
+
+def sefp_pack_ref(w):
+    k, n = w.shape
+    g = w.astype(jnp.float32).reshape(k // GROUP, GROUP, n)
+    absmax = jnp.abs(g).max(axis=1, keepdims=True)
+    mant, e = jnp.frexp(absmax)
+    e = jnp.where(absmax > 0, e.astype(jnp.int32) - 1, -127)
+    e = jnp.clip(e, EXP_MIN, EXP_MAX)
+    quantum = exp2i(e - (MASTER_M - 1))
+    code = jnp.clip(jnp.round(g / quantum), -255.0, 255.0)
+    mag = jnp.abs(code).astype(jnp.uint8).reshape(k, n)
+    sign = (code < 0).astype(jnp.uint32).reshape(k // 8, 8, n)
+    weights = (2 ** jnp.arange(8, dtype=jnp.uint32))[None, :, None]
+    sign_bits = (sign * weights).sum(axis=1).astype(jnp.uint8)
+    exp = e.reshape(k // GROUP, n).astype(jnp.int8)
+    return mag, sign_bits, exp

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: pack weights into the deployable SEFP M8 master.
+
+Deployment-preparation hot path: after (or during) OTARo fine-tuning the
+master weights are packed ONCE into (mag uint8, bit-packed signs, group
+exponents) — the representation every serving precision truncates from
+(core/packed.py).  On-device packing matters for the paper's edge story:
+an OTA-updated model is packed on the device itself, and periodic
+re-packing during on-device fine-tuning must not stall training.
+
+Layout matches PackedSEFP k-major: w [K, N] grouped along K (64/group),
+outputs mag [K, N] u8, sign_bits [K//8, N] u8 (bit j of byte i -> row
+8i+j), exp [K//64, N] i8.
+
+TPU mapping: one grid cell owns a (bk, bn) tile with bk a multiple of 64;
+group reductions are static row-slices; sign packing is 8 static masked
+adds per group (VPU integer ops); exponents via fp32 bit tricks (exact).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import EXP_MAX, EXP_MIN, GROUP, exp2i, floor_log2_bits
+
+MASTER_M = 8
+
+
+def _pack_kernel(w_ref, mag_ref, sgn_ref, exp_ref):
+    bk, bn = w_ref.shape
+    for g in range(bk // GROUP):
+        rows = slice(g * GROUP, (g + 1) * GROUP)
+        blk = w_ref[rows, :].astype(jnp.float32)
+        absmax = jnp.max(jnp.abs(blk), axis=0, keepdims=True)   # [1, bn]
+        e = jnp.clip(floor_log2_bits(absmax), EXP_MIN, EXP_MAX)
+        quantum = exp2i(e - (MASTER_M - 1))
+        code = jnp.clip(jnp.round(blk / quantum), -255.0, 255.0)
+        mag_ref[rows, :] = jnp.abs(code).astype(jnp.uint8)
+        exp_ref[g:g + 1, :] = e.astype(jnp.int8)
+        neg = (code < 0).astype(jnp.uint32)                     # [64, bn]
+        for b in range(GROUP // 8):
+            byte = jnp.zeros((1, bn), jnp.uint32)
+            for j in range(8):
+                byte = byte + (neg[b * 8 + j][None, :] << j)
+            sgn_ref[g * 8 + b:g * 8 + b + 1, :] = byte.astype(jnp.uint8)
+
+
+def sefp_pack_raw(w: jax.Array, *, block_k: int, block_n: int,
+                  interpret: bool):
+    k_dim, n_dim = w.shape
+    grid = (k_dim // block_k, n_dim // block_n)
+    out_shape = (
+        jax.ShapeDtypeStruct((k_dim, n_dim), jnp.uint8),          # mag
+        jax.ShapeDtypeStruct((k_dim // 8, n_dim), jnp.uint8),     # signs
+        jax.ShapeDtypeStruct((k_dim // GROUP, n_dim), jnp.int8),  # exp
+    )
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_k, block_n), lambda i, j: (i, j))],
+        out_specs=(
+            pl.BlockSpec((block_k, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_k // 8, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_k // GROUP, block_n), lambda i, j: (i, j)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+    )(w)

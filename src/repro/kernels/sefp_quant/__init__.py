@@ -1,0 +1,1 @@
+from repro.kernels.sefp_quant.ops import sefp_quantize_pallas  # noqa: F401

@@ -1,0 +1,34 @@
+"""Jitted public wrapper for the SEFP fake-quant kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels
+from repro.kernels.common import pick_block
+from repro.kernels.sefp_quant.sefp_quant import sefp_quant_raw
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_k", "block_n", "interpret"))
+def _call(w, m, block_k, block_n, interpret):
+    return sefp_quant_raw(w, m, block_k=block_k, block_n=block_n,
+                          interpret=interpret)
+
+
+def sefp_quantize_pallas(w: jax.Array, m, *, block_k: int = 256,
+                         block_n: int = 512, interpret: bool | None = None):
+    """SEFP fake-quantize a [K, N] weight (groups of 64 along K) at mantissa
+    width ``m`` (python int or int32 scalar — dynamic, no recompile)."""
+    if interpret is None:
+        interpret = kernels.INTERPRET
+    k_dim, n_dim = w.shape
+    bk = pick_block(k_dim, block_k, multiple=64)
+    if bk == 0:
+        raise ValueError(f"K={k_dim} must allow a block divisible by 64")
+    bn = pick_block(n_dim, block_n)
+    m_arr = jnp.asarray(m, jnp.int32).reshape((1,))
+    return _call(w, m_arr, bk, bn, interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the sefp_quant kernel (standalone reimplementation of
+the SEFP fake-quant semantics; intentionally does not import the kernel)."""
+
+import jax.numpy as jnp
+
+from repro.kernels.common import EXP_MAX, EXP_MIN, GROUP, exp2i
+
+
+def sefp_quantize_ref(w, m):
+    """w: [K, N], groups of 64 along axis 0, mantissa width m (int or traced
+    scalar).  Returns the dequantized fake-quant of w."""
+    k, n = w.shape
+    wf = w.astype(jnp.float32).reshape(k // GROUP, GROUP, n)
+    absmax = jnp.abs(wf).max(axis=1, keepdims=True)
+    mant, e = jnp.frexp(absmax)
+    e = jnp.where(absmax > 0, e.astype(jnp.int32) - 1, -127)
+    e = jnp.clip(e, EXP_MIN, EXP_MAX)
+    m = jnp.asarray(m, jnp.int32)
+    quantum = exp2i(e - (m - 1))
+    maxmag = exp2i(m) - 1.0
+    code = jnp.clip(jnp.round(wf / quantum), -maxmag, maxmag)
+    return (code * quantum).reshape(k, n).astype(w.dtype)

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: SEFP group-shared-exponent fake quantization.
+
+Training hot path — every OTARo step fake-quantizes every weight matrix at
+the BPS-selected mantissa width.  The width ``m`` arrives via scalar
+prefetch, so one compiled kernel serves every precision E5M8..E5M3.
+
+Layout: weights [K, N] grouped along axis 0 (the contraction axis, matching
+PackedSEFP's k-major layout); one grid cell owns a (bk, bn) VMEM tile with
+bk a multiple of the group size 64, so every group is resident in VMEM and
+the group max-exponent reduction never crosses tiles.
+
+TPU mapping notes:
+  * the group reduction is a static python loop over bk//64 row-slices —
+    each slice is a [64, bn] sublane-contiguous block (Mosaic-friendly, no
+    dynamic shapes);
+  * exponents are extracted from the fp32 bit pattern (VPU integer ops) —
+    exact, unlike a log2 polynomial;
+  * quanta 2^e are built by placing e in the exponent field — exact, and
+    avoids the transcendental unit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import EXP_MAX, EXP_MIN, GROUP, exp2i, floor_log2_bits
+
+
+def _quant_kernel(m_ref, w_ref, o_ref):
+    m = m_ref[0]
+    maxmag = exp2i(m) - 1.0
+    bk = w_ref.shape[0]
+    for g in range(bk // GROUP):
+        sl = slice(g * GROUP, (g + 1) * GROUP)
+        blk = w_ref[sl, :].astype(jnp.float32)
+        absmax = jnp.max(jnp.abs(blk), axis=0, keepdims=True)
+        e = floor_log2_bits(absmax)
+        e = jnp.clip(e, EXP_MIN, EXP_MAX)
+        quantum = exp2i(e - (m - 1))
+        code = jnp.clip(jnp.round(blk / quantum), -maxmag, maxmag)
+        o_ref[sl, :] = (code * quantum).astype(o_ref.dtype)
+
+
+def sefp_quant_raw(w: jax.Array, m: jax.Array, *, block_k: int, block_n: int,
+                   interpret: bool) -> jax.Array:
+    """w: [K, N] (K % block_k == 0, N % block_n == 0, block_k % 64 == 0).
+    m: int32[1] mantissa width. Returns dequantized fake-quant of w."""
+    k_dim, n_dim = w.shape
+    grid = (k_dim // block_k, n_dim // block_n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_k, block_n), lambda i, j, s: (i, j))],
+        out_specs=pl.BlockSpec((block_k, block_n), lambda i, j, s: (i, j)),
+    )
+    return pl.pallas_call(
+        _quant_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+    )(m, w)

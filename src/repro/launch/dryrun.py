@@ -1,0 +1,345 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax ---------------------------------------
+# Multi-pod dry-run: for every (architecture x input-shape x mesh) cell,
+# lower + compile the real step function (OTARo train step, prefill step, or
+# serve step), print memory/cost analysis, parse collective bytes from the
+# optimized HLO, and persist one JSON artifact per cell for the roofline
+# harness (benchmarks/roofline.py).
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch minitron_8b \
+#       --shape train_4k --mesh single
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--force]
+#
+# Artifacts: benchmarks/artifacts/<arch>__<shape>__<mesh>.json
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs as C                      # noqa: E402
+from repro.core import otaro as otaro_lib           # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model_zoo as Z             # noqa: E402
+from repro.models.config import SHAPES, shape_applicable  # noqa: E402
+from repro.sharding import partition as SH          # noqa: E402
+from repro.train import optimizer as opt_lib        # noqa: E402
+from repro.train import steps as steps_lib          # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "benchmarks", "artifacts")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|"
+                       r"pred|c64|c128)\[([0-9,]*)\]")
+_COLL_RE = re.compile(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=(]+?)\s+"
+                      r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                      r"collective-permute)(-start)?\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_BODY_REF_RE = re.compile(r"body=%?([\w.\-]+)")
+_CALL_REF_RE = re.compile(r"(?:to_apply|calls|body|condition)=%?([\w.\-]+)")
+
+
+def _shape_bytes(outshape: str) -> int:
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(outshape):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        nbytes += n * _DTYPE_BYTES[dt]
+    return nbytes
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the optimized HLO,
+    split into top-level vs inside-while-loop-body (the latter execute once
+    per loop trip but are counted once in the text — the roofline scales
+    them by the dominant trip count, see benchmarks/roofline.py).  Tuple
+    outputs contribute every element; ring all-reduce/all-gather move
+    ~(n-1)/n of these bytes on the wire."""
+    # 1. split into computations
+    comps: dict[str, list[str]] = {}
+    cur = "__toplevel__"
+    comps[cur] = []
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps.setdefault(cur, [])
+            continue
+        comps[cur].append(line)
+
+    # 2. loop-body computations + transitive callees
+    text_of = {name: "\n".join(lines) for name, lines in comps.items()}
+    loop_roots = set()
+    for body in text_of.values():
+        loop_roots.update(_BODY_REF_RE.findall(body))
+    in_loop = set()
+    frontier = [r for r in loop_roots if r in text_of]
+    while frontier:
+        name = frontier.pop()
+        if name in in_loop:
+            continue
+        in_loop.add(name)
+        for callee in _CALL_REF_RE.findall(text_of.get(name, "")):
+            if callee in text_of and callee not in in_loop:
+                frontier.append(callee)
+
+    # 3. collect collectives per computation
+    out = {k: {"count": 0, "bytes": 0, "loop_count": 0, "loop_bytes": 0}
+           for k in _COLLECTIVES}
+    for name, lines in comps.items():
+        looped = name in in_loop
+        for line in lines:
+            m = _COLL_RE.match(line.strip())
+            if not m:
+                continue
+            outshape, op = m.group(1), m.group(2)
+            nbytes = _shape_bytes(outshape)
+            out[op]["count"] += 1
+            out[op]["bytes"] += nbytes
+            if looped:
+                out[op]["loop_count"] += 1
+                out[op]["loop_bytes"] += nbytes
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    out["loop_bytes"] = sum(v["loop_bytes"] for v in out.values()
+                            if isinstance(v, dict))
+    out["top_level_bytes"] = out["total_bytes"] - out["loop_bytes"]
+    return out
+
+
+def _mem_dict(ma) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    d = {}
+    for k in keys:
+        d[k] = int(getattr(ma, k, -1))
+    d["per_device_total"] = (max(d["argument_size_in_bytes"], 0)
+                             + max(d["output_size_in_bytes"], 0)
+                             + max(d["temp_size_in_bytes"], 0)
+                             - max(d["alias_size_in_bytes"], 0))
+    return d
+
+
+def _serve_param_shapes(cfg):
+    """Serving weights in bf16 (the deployed dtype)."""
+    shapes = jax.eval_shape(lambda: Z.init_params(cfg, jax.random.PRNGKey(0)))
+
+    def cast(x):
+        if x.dtype == jnp.float32:
+            return jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+        return x
+
+    return jax.tree_util.tree_map(cast, shapes)
+
+
+def build_cell(cfg, shape, mesh, variant: str = ""):
+    """Returns (lowered, state_summary: dict).
+
+    Perf-iteration variants (EXPERIMENTS.md §Perf):
+      "dp"         train: batch sharded over ALL mesh axes (pure DP/FSDP;
+                   the TP activation all-reduces disappear)
+      "bf16master" train: bf16 master weights + LAA buffer (capacity)
+      "compress8"  train, multi-pod: SEFP-compressed cross-pod grads
+      "kvheads"    decode: KV cache sharded over heads instead of sequence
+      "packed"     decode: SEFP int8 weight streaming w/ in-scan dequant
+    """
+    batch_shapes = Z.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        ocfg = otaro_lib.OTAROConfig(mode="otaro")
+        opt = opt_lib.sgd(1e-5)
+        kw = {}
+        if variant in ("dp", "dp128"):
+            kw["batch_layout"] = "dp"
+        if variant == "dp128":
+            import dataclasses as _dc
+            cfg = _dc.replace(cfg, ssm_chunk=128)
+        if variant == "bf16master":
+            kw["master_dtype"] = jnp.bfloat16
+        if variant == "compress8":
+            kw["compress_pods_m"] = 8
+        if variant == "accum4":
+            kw["grad_accum"] = 4
+            kw["master_dtype"] = jnp.bfloat16  # composes with bf16 master
+        step, state_shapes, state_shardings = steps_lib.train_step_artifacts(
+            cfg, ocfg, opt, mesh, batch_shapes, **kw)
+        lowered = step.lower(state_shapes, batch_shapes)
+        return lowered, {"step": "otaro_train_step"}
+
+    if shape.kind == "prefill":
+        pre = Z.make_prefill_step(cfg, max_len=shape.seq_len)
+        params_shapes = _serve_param_shapes(cfg)
+        pspecs = SH.param_pspecs(params_shapes, mesh)
+        bspecs = SH.batch_pspecs(batch_shapes, mesh)
+        # the produced decode cache must leave the step sharded like the
+        # decode cells consume it (otherwise XLA materializes it replicated)
+        logits_shapes, cache_shapes = jax.eval_shape(pre, params_shapes,
+                                                     batch_shapes)
+        cspecs = SH.cache_pspecs(cache_shapes, mesh)
+        lspec = SH.batch_pspecs(logits_shapes, mesh)
+        step = jax.jit(
+            pre,
+            in_shardings=(SH.to_named_sharding(pspecs, mesh),
+                          SH.to_named_sharding(bspecs, mesh)),
+            out_shardings=(SH.to_named_sharding(lspec, mesh),
+                           SH.to_named_sharding(cspecs, mesh)))
+        lowered = step.lower(params_shapes, batch_shapes)
+        return lowered, {"step": "prefill_step"}
+
+    # decode / long_decode
+    if variant == "packed":
+        from repro.serve import packed_step as PS
+        serve = PS.make_packed_serve_step(cfg)
+        params_shapes = PS.packed_param_shapes(cfg, m=7)
+    else:
+        serve = Z.make_serve_step(cfg)
+        params_shapes = _serve_param_shapes(cfg)
+    # "kv8": SEFP-style 8-bit KV cache (f8_e4m3 storage, bf16 compute) —
+    # at decode_32k the memory roofline is KV-bound, not weight-bound, so
+    # this is the lever that halves the dominant term (EXPERIMENTS §Perf C)
+    kv_dtype = jnp.float8_e4m3fn if variant == "kv8" else jnp.bfloat16
+    cache_shapes = Z.cache_specs(cfg, shape, dtype=kv_dtype)
+    kv_layout = "heads" if variant == "kvheads" else "seq"
+    pspecs = SH.param_pspecs(params_shapes, mesh)
+    cspecs = SH.cache_pspecs(cache_shapes, mesh, kv_layout=kv_layout)
+    tspecs = SH.batch_pspecs(batch_shapes, mesh)
+    step = jax.jit(
+        serve,
+        in_shardings=(SH.to_named_sharding(pspecs, mesh),
+                      SH.to_named_sharding(cspecs, mesh),
+                      SH.to_named_sharding(tspecs["token"], mesh)),
+        donate_argnums=(1,))
+    lowered = step.lower(params_shapes, cache_shapes, batch_shapes["token"])
+    return lowered, {"step": f"serve_step{'_' + variant if variant else ''}"}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             artifact_dir: str, force: bool = False,
+             variant: str = "") -> dict:
+    suffix = f"__{variant}" if variant else ""
+    path = os.path.join(artifact_dir,
+                        f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") in ("ok", "skipped"):
+            print(f"[cached ] {arch} x {shape_name} x {mesh_kind}{suffix}: "
+                  f"{rec['status']}")
+            return rec
+
+    cfg = C.get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "variant": variant, "family": cfg.family}
+
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        _write(path, rec)
+        print(f"[skipped] {arch} x {shape_name} x {mesh_kind}: {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            lowered, info = build_cell(cfg, shape, mesh, variant)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            ma = compiled.memory_analysis()
+            print(ma)
+            ca = compiled.cost_analysis() or {}
+            print({k: v for k, v in ca.items()
+                   if k in ("flops", "bytes accessed")})
+            hlo = compiled.as_text()
+            coll = parse_collective_bytes(hlo)
+
+        rec.update(
+            status="ok",
+            step=info["step"],
+            n_devices=int(mesh.devices.size),
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=_mem_dict(ma),
+            flops=float(ca.get("flops", -1)),
+            bytes_accessed=float(ca.get("bytes accessed", -1)),
+            collectives=coll,
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec.update(status="error", error=repr(e),
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[ERROR  ] {arch} x {shape_name} x {mesh_kind}: {e!r}")
+    _write(path, rec)
+    if rec["status"] == "ok":
+        print(f"[ok     ] {arch} x {shape_name} x {mesh_kind}{suffix}: "
+              f"flops={rec['flops']:.3e} "
+              f"mem/dev={rec['memory']['per_device_total']/2**30:.2f}GiB "
+              f"coll={rec['collectives']['total_bytes']/2**20:.1f}MiB "
+              f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s)")
+    return rec
+
+
+def _write(path: str, rec: dict):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(rec, f, indent=1)
+    os.replace(tmp, path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all 10)")
+    ap.add_argument("--shape", default=None,
+                    help="shape name (default: all 4)")
+    ap.add_argument("--mesh", default=None, choices=["single", "multi"],
+                    help="default: both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="perf variant: dp | bf16master | compress8 | "
+                         "kvheads | packed (see build_cell)")
+    ap.add_argument("--artifact-dir", default=None)
+    args = ap.parse_args()
+
+    artifact_dir = args.artifact_dir or os.path.normpath(ARTIFACT_DIR)
+    archs = [args.arch] if args.arch else C.ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                results.append(run_cell(arch, shape, mesh_kind, artifact_dir,
+                                        force=args.force,
+                                        variant=args.variant))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"of {len(results)} cells")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

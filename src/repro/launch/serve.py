@@ -1,0 +1,66 @@
+"""Serving launcher: load (or initialize) weights, pack the SEFP master,
+serve batched synthetic requests with a precision policy.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --reduced \
+        --precision 4 --batch 8 --new-tokens 16
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint dir from launch/train.py (optional)")
+    ap.add_argument("--precision", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro import configs as C
+    from repro.models import init_params
+    from repro.serve import SwitchableServer
+    from repro.train.data import SyntheticCorpus
+
+    cfg = C.get_reduced(args.arch) if args.reduced else C.get_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    if args.ckpt:
+        from repro.core import otaro as otaro_lib
+        from repro.train import checkpoint as CKPT
+        from repro.train import optimizer as opt_lib
+        like = jax.eval_shape(lambda: otaro_lib.init_state(
+            params, opt_lib.sgd(1e-5), otaro_lib.OTAROConfig()))
+        state, meta = CKPT.restore_checkpoint(args.ckpt, like)
+        params = state.params
+        print(f"restored checkpoint step {meta['step']} from {args.ckpt}")
+
+    server = SwitchableServer(
+        cfg, params, max_len=args.prompt_len + args.new_tokens + 1)
+    server.set_precision(args.precision)
+    rep = server.memory_report()
+    print(f"serving {cfg.name} at E5M{args.precision}: master "
+          f"{rep['master_bytes']/1e6:.2f} MB "
+          f"(fp16 {rep['fp16_bytes']/1e6:.2f} MB)")
+
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=3)
+    prompts = np.asarray(
+        corpus.batch(0, args.batch, args.prompt_len + 1)["inputs"]
+        [:, :args.prompt_len])
+    res = server.generate(prompts, max_new=args.new_tokens)
+    tput = args.batch * args.new_tokens / max(res.decode_seconds, 1e-9)
+    print(f"generated {args.new_tokens} tokens x {args.batch} requests "
+          f"in {res.decode_seconds:.2f}s ({tput:.1f} tok/s)")
+    for i in range(min(2, args.batch)):
+        print(f"  req{i}: {res.tokens[i].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+from repro.models.config import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    shape_applicable,
+)
+from repro.models.model_zoo import (  # noqa: F401
+    act_dtype,
+    cache_specs,
+    init_cache,
+    init_params,
+    input_specs,
+    make_loss_fn,
+    make_prefill,
+    make_serve_step,
+    param_count,
+)

@@ -1,0 +1,128 @@
+"""Model/arch configuration dataclasses and the assigned input-shape sets."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | rwkv | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    qkv_bias: bool = False
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_dispatch: str = "capacity"          # capacity | dense
+
+    # SSM (Mamba2) / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+    attn_every: int = 6                     # hybrid: shared attn cadence
+    n_shared_attn_blocks: int = 2
+
+    # RWKV6
+    rwkv_head_dim: int = 64
+    rwkv_chunk: int = 64
+
+    # encoder-decoder
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+
+    # modality frontend (stub: inputs arrive as embeddings)
+    frontend: str = "none"                  # none | vision_stub | audio_stub
+    n_prefix_embeds: int = 0                # prefix embeddings per example
+
+    rope_theta: float = 500_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    dtype: str = "bfloat16"                 # activation/compute dtype
+    param_dtype: str = "float32"            # master weight dtype
+    remat: str = "full"                     # none | dots | full
+
+    # loss / head
+    loss_chunk: int = 512                   # sequence chunking for CE loss
+
+    # attention blocking (flash-style)
+    q_block: int = 512
+    kv_block: int = 1024
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.family in ("encdec",)
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family variant for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 2),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            d_ff=256,
+            vocab_size=512,
+            head_dim=32,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32,
+            ssm_chunk=16,
+            rwkv_head_dim=32,
+            rwkv_chunk=8,
+            attn_every=2,
+            n_enc_layers=min(self.n_enc_layers, 2) if self.n_enc_layers else 0,
+            n_dec_layers=min(self.n_dec_layers, 2) if self.n_dec_layers else 0,
+            n_prefix_embeds=min(self.n_prefix_embeds, 4),
+            q_block=32,
+            kv_block=32,
+            loss_chunk=32,
+            remat="none",
+            name=self.name + "-reduced",
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode | long_decode
+
+
+# The assigned input-shape set (LM-family: seq_len x global_batch).
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "long_decode"),
+}
+
+# Families allowed to run long_500k (sub-quadratic sequence mixing).
+SUBQUADRATIC_FAMILIES = ("hybrid", "rwkv")
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether (arch, shape) is a runnable cell; returns (ok, reason)."""
+    if shape.kind == "long_decode" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, ("pure full-attention arch: 500k dense-KV decode "
+                       "requires sub-quadratic mixing (DESIGN.md §5)")
+    return True, ""

@@ -1,0 +1,128 @@
+"""Encoder-decoder backbone (Seamless-M4T-v2 text/speech backbone).
+
+The speech frontend is a STUB per the brief: the encoder consumes
+precomputed frame embeddings [B, S_enc, d] (as if produced by the conformer
+feature extractor).  The decoder is a standard causal transformer with
+cross-attention; decode shapes run the DECODER (self-attn KV cache +
+precomputed cross-attention K/V), since the arch is enc-dec, not
+encoder-only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.transformer import (_fit_block, _remat, _stack_init,
+                                      attn_cache_init, dense_layer_init)
+
+
+def dec_layer_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(k1, cfg),
+        "lnx": L.rmsnorm_init(cfg.d_model),
+        "xattn": L.attention_init(k2, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    return {
+        "dec_embed": L.embedding_init(ks[0], cfg.vocab_size, cfg.d_model),
+        "enc_layers": _stack_init(lambda k: dense_layer_init(k, cfg), ks[1],
+                                  cfg.n_enc_layers),
+        "dec_layers": _stack_init(lambda k: dec_layer_init(k, cfg), ks[2],
+                                  cfg.n_dec_layers),
+        "ln_enc": L.rmsnorm_init(cfg.d_model),
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+        "unembed": L.unembed_init(ks[3], cfg.d_model, cfg.vocab_size),
+    }
+
+
+def encode(params, enc_embeds, cfg: ModelConfig):
+    """enc_embeds: [B, S_enc, d] (frontend stub output) -> [B, S_enc, d]."""
+    S = enc_embeds.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(x, lp):
+        def f(p, x):
+            x = x + L.attention_apply(
+                p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
+                positions, causal=False)
+            x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["ln2"],
+                                                    cfg.norm_eps))
+            return x
+        return _remat(f, cfg)(lp, x), None
+
+    x, _ = lax.scan(body, enc_embeds, params["enc_layers"])
+    return L.rmsnorm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def decode_train(params, enc_out, dec_tokens, cfg: ModelConfig):
+    """Teacher-forced decoder pass -> hidden [B, S_dec, d]."""
+    x = L.embed(params["dec_embed"], dec_tokens, enc_out.dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(x, lp):
+        def f(p, x):
+            x = x + L.attention_apply(
+                p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
+                positions, causal=True)
+            k, v = L.cross_kv(p["xattn"], enc_out, cfg)
+            x = x + L.cross_attention_apply(
+                p["xattn"], L.rmsnorm(x, p["lnx"], cfg.norm_eps), cfg, k, v)
+            x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["ln2"],
+                                                    cfg.norm_eps))
+            return x
+        return _remat(f, cfg)(lp, x), None
+
+    x, _ = lax.scan(body, x, params["dec_layers"])
+    return L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+
+
+def encdec_init_cache(params, enc_out, cfg: ModelConfig, max_len: int,
+                      dtype=jnp.bfloat16):
+    """Build the decoder cache: per-layer self-attn KV (empty, max_len) +
+    per-layer precomputed cross K/V from the encoder output."""
+    def xkv(lp):
+        return L.cross_kv(lp["xattn"], enc_out, cfg)
+
+    xk, xv = jax.vmap(xkv)(params["dec_layers"])  # [L, B, S_enc, KV, hd]
+    B = enc_out.shape[0]
+    self_cache = jax.vmap(
+        lambda _: attn_cache_init(cfg, B, max_len, dtype))(
+        jnp.arange(cfg.n_dec_layers))
+    return {"self": self_cache,
+            "cross_k": xk.astype(dtype), "cross_v": xv.astype(dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def encdec_decode_hidden(params, x_emb, cache, cfg: ModelConfig):
+    """One decoder token. x_emb: [B,1,d] -> (hidden, new cache)."""
+    pos = cache["pos"]
+
+    def body(x, inp):
+        lp, sc, xk, xv = inp
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        o, kc, vc = L.attention_decode(lp["attn"], h, cfg, sc["k"], sc["v"],
+                                       pos)
+        x = x + o
+        x = x + L.cross_attention_apply(
+            lp["xattn"], L.rmsnorm(x, lp["lnx"], cfg.norm_eps), cfg, xk, xv)
+        x = x + L.mlp_apply(lp["mlp"], L.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+        return x, {"k": kc, "v": vc}
+
+    x, new_self = lax.scan(
+        body, x_emb,
+        (params["dec_layers"], cache["self"], cache["cross_k"],
+         cache["cross_v"]))
+    h = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return h, {**cache, "self": new_self, "pos": pos + 1}

@@ -1,0 +1,350 @@
+"""Shared neural-net layers: norms, rotary, blockwise (flash) attention,
+GQA projections, SwiGLU MLP, embeddings, chunked cross-entropy.
+
+All weights are stored ``[in_features, out_features]`` (``x @ W``), so the
+SEFP group/contraction axis is axis 0 — matching PackedSEFP's k-major layout
+and the sefp_matmul kernel.
+
+Attention is blockwise with an online-softmax (flash) formulation: nested
+scans over query and key/value blocks keep live attention memory at
+O(q_block * kv_block) regardless of sequence length — required for the
+32k-prefill cells and friendly to remat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.sharding.constraints import constrain_batch
+
+NEG_INF = -1e30
+
+
+def truncated_normal(key, shape, std, dtype=jnp.float32):
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                       jnp.float32).astype(dtype) * std
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int):
+    return {"norm_scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(x, params, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps) * params["norm_scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise (flash) attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.checkpoint, static_argnums=(5, 6))
+def _attend_block(q_blk, k_blk, v_blk, qpos, kpos, causal, scale):
+    """q_blk [B,qb,KV,G,hd]; k_blk/v_blk [B,kb,KV,hd]; returns un-normalized
+    (m, l, o) contribution of this kv block.  checkpointed: the backward
+    pass recomputes the O(qb*kb) score/prob tensors instead of saving one
+    per (q-block, kv-block) pair — without this, training memory scales as
+    O(S^2) again and the 32k cells blow past HBM."""
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk.astype(jnp.float32),
+                   k_blk.astype(jnp.float32)) * scale  # [B,KV,G,qb,kb]
+    if causal:
+        mask = kpos[None, :] > qpos[:, None]            # [qb, kb]
+        s = jnp.where(mask[None, None, None], NEG_INF, s)
+    m = jnp.max(s, axis=-1)                              # [B,KV,G,qb]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)                              # [B,KV,G,qb]
+    o = jnp.einsum("bkgqs,bskh->bkgqh", p, v_blk.astype(jnp.float32))
+    return m, l, o
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 512,
+                    kv_block: int = 1024, q_offset=0) -> jax.Array:
+    """q: [B,Sq,H,hd]; k,v: [B,Skv,KV,hd] with H % KV == 0 (GQA).
+    q_offset: global position of q[0] (for chunked prefill).  Requires
+    Sq % q_block == 0 and Skv % kv_block == 0."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+    q = constrain_batch(q.reshape(B, Sq, KV, G, hd))
+    k = constrain_batch(k)
+    v = constrain_batch(v)
+    nqb, nkb = Sq // q_block, Skv // kv_block
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+
+    def q_step(_, qi):
+        q_blk = lax.dynamic_slice_in_dim(q, qi * q_block, q_block, axis=1)
+        qpos = q_offset + qi * q_block + jnp.arange(q_block, dtype=jnp.int32)
+
+        def kv_step(carry, ki):
+            m, l, o = carry
+            k_blk = lax.dynamic_slice_in_dim(k, ki * kv_block, kv_block, 1)
+            v_blk = lax.dynamic_slice_in_dim(v, ki * kv_block, kv_block, 1)
+            kpos = ki * kv_block + jnp.arange(kv_block, dtype=jnp.int32)
+            bm, bl, bo = _attend_block(q_blk, k_blk, v_blk, qpos, kpos,
+                                       causal, scale)
+            new_m = jnp.maximum(m, bm)
+            alpha = jnp.exp(m - new_m)
+            beta = jnp.exp(bm - new_m)
+            new_l = l * alpha + bl * beta
+            new_o = o * alpha[..., None] + bo * beta[..., None]
+            return (new_m, new_l, new_o), None
+
+        # constrained inits: GSPMD's propagation through while-loop carries
+        # is weak — without these the whole attention runs batch-replicated.
+        init = (
+            constrain_batch(jnp.full((B, KV, G, q_block), NEG_INF,
+                                     jnp.float32)),
+            constrain_batch(jnp.zeros((B, KV, G, q_block), jnp.float32)),
+            constrain_batch(jnp.zeros((B, KV, G, q_block, hd), jnp.float32)),
+        )
+        (m, l, o), _ = lax.scan(kv_step, init, jnp.arange(nkb))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        # [B,KV,G,qb,hd] -> [B,qb,KV,G,hd]
+        return None, jnp.transpose(o, (0, 3, 1, 2, 4))
+
+    _, outs = lax.scan(q_step, None, jnp.arange(nqb))  # [nqb,B,qb,KV,G,hd]
+    out = jnp.transpose(outs, (1, 0, 2, 3, 4, 5)).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len=None) -> jax.Array:
+    """Single-token attention: q [B,1,H,hd] vs cache [B,S,KV,hd].
+    kv_len: optional int32 — number of valid cache positions."""
+    B, _, H, hd = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+    qr = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qr.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    if kv_len is not None:
+        pos = jnp.arange(S, dtype=jnp.int32)
+        s = jnp.where(pos[None, None, None] >= kv_len, NEG_INF, s)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + rope + attention)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {
+        "wq": truncated_normal(ks[0], (d, H * hd), std),
+        "wk": truncated_normal(ks[1], (d, KV * hd), std),
+        "wv": truncated_normal(ks[2], (d, KV * hd), std),
+        "wo": truncated_normal(ks[3], (H * hd, d), (H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["q_bias"] = jnp.zeros((H * hd,), jnp.float32)
+        p["k_bias"] = jnp.zeros((KV * hd,), jnp.float32)
+        p["v_bias"] = jnp.zeros((KV * hd,), jnp.float32)
+    return p
+
+
+def qkv_project(params, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt))
+    k = (x @ params["wk"].astype(dt))
+    v = (x @ params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["q_bias"].astype(dt)
+        k = k + params["k_bias"].astype(dt)
+        v = v + params["v_bias"].astype(dt)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_apply(params, x, cfg: ModelConfig, positions=None,
+                    causal: bool = True):
+    """Full-sequence attention (train / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    q, k, v = qkv_project(params, x, cfg, positions)
+    qb = min(cfg.q_block, S)
+    kb = min(cfg.kv_block, S)
+    while S % qb:
+        qb //= 2
+    while S % kb:
+        kb //= 2
+    o = flash_attention(q, k, v, causal=causal, q_block=qb, kv_block=kb)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    return o @ params["wo"].astype(x.dtype)
+
+
+def attention_decode(params, x, cfg: ModelConfig, k_cache, v_cache, pos):
+    """x: [B,1,d]; caches [B,S,KV,hd]; pos: int32[] current position.
+    Returns (out [B,1,d], new_k_cache, new_v_cache)."""
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    q, k, v = qkv_project(params, x, cfg, positions)
+    k_cache = lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    o = decode_attention(q, k_cache, v_cache, kv_len=pos + 1)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd)
+    return o @ params["wo"].astype(x.dtype), k_cache, v_cache
+
+
+def cross_attention_apply(params, x, cfg: ModelConfig, k, v):
+    """Decoder cross-attention against precomputed encoder k/v
+    [B,S_enc,KV,hd].  Non-causal; x may be [B,S,d] or [B,1,d]."""
+    B, S, _ = x.shape
+    hd, H = cfg.hd, cfg.n_heads
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(B, S, H, hd)
+    if S == 1:
+        o = decode_attention(q, k, v)
+    else:
+        kb = min(cfg.kv_block, k.shape[1])
+        while k.shape[1] % kb:
+            kb //= 2
+        qb = min(cfg.q_block, S)
+        while S % qb:
+            qb //= 2
+        o = flash_attention(q, k, v, causal=False, q_block=qb, kv_block=kb)
+    o = o.reshape(B, S, H * hd)
+    return o @ params["wo"].astype(dt)
+
+
+def cross_kv(params, enc_out, cfg: ModelConfig):
+    B, S, _ = enc_out.shape
+    dt = enc_out.dtype
+    k = (enc_out @ params["wk"].astype(dt)).reshape(
+        B, S, cfg.n_kv_heads, cfg.hd)
+    v = (enc_out @ params["wv"].astype(dt)).reshape(
+        B, S, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": truncated_normal(ks[0], (d, f), d ** -0.5),
+        "w_up": truncated_normal(ks[1], (d, f), d ** -0.5),
+        "w_down": truncated_normal(ks[2], (f, d), f ** -0.5),
+    }
+
+
+def mlp_apply(params, x):
+    dt = x.dtype
+    g = jax.nn.silu(x @ params["w_gate"].astype(dt))
+    u = x @ params["w_up"].astype(dt)
+    return (g * u) @ params["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings + chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int):
+    return {"embedding": truncated_normal(key, (vocab, d), 0.02)}
+
+
+def embed(params, ids, dtype):
+    return jnp.take(params["embedding"], ids, axis=0).astype(dtype)
+
+
+def unembed_init(key, d: int, vocab: int):
+    return {"w_unembed": truncated_normal(key, (d, vocab), d ** -0.5)}
+
+
+def chunked_softmax_xent(h, unembed_params, labels, chunk: int,
+                         label_mask=None):
+    """Mean next-token cross-entropy without materializing [B,S,V] logits:
+    scan over sequence chunks, rematerializing logits in backward.
+    h: [B,S,d]; labels: [B,S] int32."""
+    B, S, d = h.shape
+    w = unembed_params["w_unembed"]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n = S // chunk
+    h = h.reshape(B, n, chunk, d)
+    labels = labels.reshape(B, n, chunk)
+    if label_mask is not None:
+        label_mask = label_mask.reshape(B, n, chunk)
+
+    @jax.checkpoint
+    def chunk_loss(h_c, y_c, m_c):
+        h_c = constrain_batch(h_c)
+        logits = (h_c.astype(jnp.float32)
+                  @ w.astype(jnp.float32))            # [B,chunk,V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # target logit via masked reduction (NOT take_along_axis: a gather
+        # over the vocab-sharded dim makes GSPMD replicate the batch and
+        # all-gather multi-GiB logits; an iota-compare reduce shards clean).
+        vocab_iota = lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        tgt = jnp.sum(jnp.where(vocab_iota == y_c[..., None], logits, 0.0),
+                      axis=-1)
+        nll = lse - tgt
+        if m_c is not None:
+            nll = nll * m_c
+            return nll.sum(), m_c.sum()
+        return nll.sum(), jnp.asarray(nll.size, jnp.float32)
+
+    def body(carry, i):
+        tot, cnt = carry
+        m_c = None if label_mask is None else label_mask[:, i]
+        s, c = chunk_loss(h[:, i], labels[:, i], m_c)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                             jnp.arange(n))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def logits_for_last(h_last, unembed_params):
+    """h_last: [B,1,d] -> [B,vocab] (decode head)."""
+    w = unembed_params["w_unembed"]
+    return (h_last[:, 0].astype(jnp.float32) @ w.astype(jnp.float32))

@@ -1,0 +1,227 @@
+"""Mamba2 (SSD) block — chunked state-space scan.
+
+Per-layer structure (simplified-but-faithful Mamba2, n_groups=1):
+  in_proj d -> [z(d_in), x(d_in), B(N), C(N), dt(H)]  (d_in = expand*d)
+  causal depthwise conv (width 4) over [x, B, C]
+  SSD recurrence with per-head scalar decay:
+      h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * (x_t ⊗ B_t)   h: [H, P, N]
+      y_t = (h_t · C_t) + D_h * x_t
+  gated RMSNorm (silu(z)) then out_proj d_in -> d.
+
+Training/prefill use the chunked SSD algorithm: within a chunk the
+contribution is an attention-like causal matmul with pairwise decay, across
+chunks a [B, H, P, N] state is carried by lax.scan — O(S) time, O(chunk^2)
+memory, which is what makes the 500k-token cells feasible.
+
+Recurrence parameters (A_log, ssm_dt_bias, ssm_D, conv kernels) are excluded
+from SEFP quantization (DESIGN.md §5); the large in/out projections are
+quantized like any other weight.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.layers import truncated_normal
+from repro.sharding.constraints import constrain_batch
+
+
+def dims(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    d_in = cfg.ssm_expand * d
+    P = cfg.ssm_head_dim
+    H = d_in // P
+    N = cfg.ssm_state
+    return d, d_in, H, P, N
+
+
+def mamba2_init(key, cfg: ModelConfig, d: int | None = None):
+    d, d_in, H, P, N = dims(cfg, d)
+    ks = jax.random.split(key, 7)
+    conv_ch = d_in + 2 * N
+    # separate projections per output (NOT one fused [d, 2*d_in+2N+H]
+    # matrix): the fused form's split boundaries cross 16-way TP shard
+    # boundaries, forcing GSPMD to all-gather the full projection every
+    # layer (~0.6 TB/step observed on the zamba2-7b train dry-run); the
+    # split matrices shard independently and stay aligned.
+    return {
+        "in_proj_z": truncated_normal(ks[0], (d, d_in), d ** -0.5),
+        "in_proj_x": truncated_normal(ks[1], (d, d_in), d ** -0.5),
+        "in_proj_B": truncated_normal(ks[2], (d, N), d ** -0.5),
+        "in_proj_C": truncated_normal(ks[3], (d, N), d ** -0.5),
+        "in_proj_dt": truncated_normal(ks[5], (d, H), d ** -0.5),
+        "conv_kernel": truncated_normal(ks[4], (cfg.ssm_conv_width, conv_ch),
+                                        0.1),
+        "conv_bias": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "ssm_D": jnp.ones((H,), jnp.float32),
+        "ssm_dt_bias": jnp.log(jnp.expm1(
+            jnp.full((H,), 0.01, jnp.float32))),  # softplus^-1(0.01)
+        "gate_norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": truncated_normal(ks[6], (d_in, d), d_in ** -0.5),
+    }
+
+
+def _split_proj(params, x, cfg: ModelConfig, d: int):
+    dt_ = x.dtype
+    z = x @ params["in_proj_z"].astype(dt_)
+    xi = x @ params["in_proj_x"].astype(dt_)
+    Bc = x @ params["in_proj_B"].astype(dt_)
+    Cc = x @ params["in_proj_C"].astype(dt_)
+    dt = x @ params["in_proj_dt"].astype(dt_)
+    return z, xi, Bc, Cc, dt
+
+
+def _causal_conv(u, kernel, bias, width: int):
+    """u: [B, S, C]; depthwise causal conv via stacked shifts."""
+    out = u * kernel[width - 1][None, None, :]
+    for i in range(1, width):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :u.shape[1]]
+        out = out + shifted * kernel[width - 1 - i][None, None, :]
+    return out + bias[None, None, :]
+
+
+def _gated_norm(y, z, scale, eps):
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yn = yf * lax.rsqrt(var + eps) * scale
+    return (yn * jax.nn.silu(z.astype(jnp.float32))).astype(y.dtype)
+
+
+def mamba2_apply(params, x, cfg: ModelConfig, d: int | None = None):
+    """Full-sequence (train). x: [B, S, d] -> [B, S, d]."""
+    y, _ = _mamba2_forward(params, x, cfg, d, want_state=False)
+    return y
+
+
+def mamba2_apply_with_state(params, x, cfg: ModelConfig,
+                            d: int | None = None):
+    """Full-sequence prefill; also returns the decode cache
+    {ssm_state, conv_state}."""
+    return _mamba2_forward(params, x, cfg, d, want_state=True)
+
+
+def _mamba2_forward(params, x, cfg: ModelConfig, d: int | None,
+                    want_state: bool):
+    d, d_in, H, P, N = dims(cfg, d)
+    B, S, _ = x.shape
+    dt_ = x.dtype
+    z, xi, Bc, Cc, dtr = _split_proj(params, x, cfg, d)
+    conv_in = jnp.concatenate([xi, Bc, Cc], axis=-1)
+    conv = jax.nn.silu(_causal_conv(conv_in, params["conv_kernel"],
+                                    params["conv_bias"], cfg.ssm_conv_width))
+    xi, Bc, Cc = jnp.split(conv, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + params["ssm_dt_bias"])        # [B,S,H]
+    A = -jnp.exp(params["A_log"])                        # [H], negative
+    xh = xi.reshape(B, S, H, P).astype(jnp.float32)
+    Bc = Bc.astype(jnp.float32)
+    Cc = Cc.astype(jnp.float32)
+
+    L = min(cfg.ssm_chunk, S)
+    while S % L:
+        L //= 2
+    nc = S // L
+    # reshape into chunks
+    dt_c = dt.reshape(B, nc, L, H)
+    x_c = xh.reshape(B, nc, L, H, P)
+    B_c = Bc.reshape(B, nc, L, N)
+    C_c = Cc.reshape(B, nc, L, N)
+
+    @jax.checkpoint
+    def chunk_step(h0, inp):
+        # checkpointed: backward recomputes the O(L^2) intra-chunk decay
+        # tensors instead of saving one per chunk.
+        dtk, xk, Bk, Ck = inp                            # [B,L,H],[B,L,H,P],..
+        loga = dtk * A[None, None, :]                    # [B,L,H]  (<= 0)
+        lcum = jnp.cumsum(loga, axis=1)                  # [B,L,H]
+        # intra-chunk: y[t] += sum_{s<=t} exp(lcum_t - lcum_s) dt_s (C_t.B_s) x_s
+        G = jnp.einsum("btn,bsn->bts", Ck, Bk)           # [B,L,L]
+        decay = jnp.exp(lcum[:, :, None, :] - lcum[:, None, :, :])  # [B,L,L,H]
+        causal = jnp.tril(jnp.ones((L, L), jnp.float32))
+        M = G[..., None] * decay * dtk[:, None, :, :] * causal[None, :, :,
+                                                               None]
+        y = jnp.einsum("btsh,bshp->bthp", M, xk)         # [B,L,H,P]
+        # inter-chunk: contribution of incoming state
+        y = y + jnp.exp(lcum)[..., None] * jnp.einsum(
+            "btn,bhpn->bthp", Ck, h0)
+        # state update
+        ltot = lcum[:, -1]                               # [B,H]
+        w_s = jnp.exp(ltot[:, None, :] - lcum) * dtk     # [B,L,H]
+        h_new = (jnp.exp(ltot)[:, :, None, None] * h0
+                 + jnp.einsum("bsh,bshp,bsn->bhpn", w_s, xk, Bk))
+        return h_new, y
+
+    # constrained carries/inputs: GSPMD propagation through while-loop
+    # carries is weak — without these the chunk scan runs batch-replicated
+    # (observed: ~0.6 TB/step of all-gathers on zamba2-7b train).  Heads
+    # shard over the model axis when divisible.
+    h0 = constrain_batch(jnp.zeros((B, H, P, N), jnp.float32),
+                         extra=((1, "model"),))
+    dt_c = constrain_batch(dt_c, extra=((3, "model"),))
+    x_c = constrain_batch(x_c, extra=((3, "model"),))
+    B_c = constrain_batch(B_c)
+    C_c = constrain_batch(C_c)
+    # scan over chunks
+    inps = (jnp.moveaxis(dt_c, 1, 0), jnp.moveaxis(x_c, 1, 0),
+            jnp.moveaxis(B_c, 1, 0), jnp.moveaxis(C_c, 1, 0))
+    h_final, ys = lax.scan(chunk_step, h0, inps)         # [nc,B,L,H,P]
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    y = y + params["ssm_D"][None, None, :, None] * xh
+    y = y.reshape(B, S, d_in).astype(dt_)
+    y = _gated_norm(y, z, params["gate_norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    if not want_state:
+        return out, None
+    # decode cache: final ssm state + last (width-1) conv inputs
+    w = cfg.ssm_conv_width
+    tail = conv_in[:, -(w - 1):] if S >= w - 1 else jnp.pad(
+        conv_in, ((0, 0), (w - 1 - S, 0), (0, 0)))
+    cache = {"ssm_state": h_final, "conv_state": tail.astype(dt_)}
+    return out, cache
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, d: int | None = None,
+                      dtype=jnp.float32):
+    d, d_in, H, P, N = dims(cfg, d)
+    conv_ch = d_in + 2 * N
+    return {
+        "ssm_state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv_state": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch),
+                                dtype),
+    }
+
+
+def mamba2_decode(params, x, cache, cfg: ModelConfig, d: int | None = None):
+    """Single-token step. x: [B, 1, d]; returns (y [B,1,d], new_cache)."""
+    d, d_in, H, P, N = dims(cfg, d)
+    B = x.shape[0]
+    dt_ = x.dtype
+    z, xi, Bc, Cc, dtr = _split_proj(params, x, cfg, d)
+    u = jnp.concatenate([xi, Bc, Cc], axis=-1)           # [B,1,C]
+    hist = jnp.concatenate([cache["conv_state"], u.astype(
+        cache["conv_state"].dtype)], axis=1)             # [B,W,C]
+    kernel = params["conv_kernel"]
+    conv = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                      kernel.astype(jnp.float32)) + params["conv_bias"]
+    conv = jax.nn.silu(conv)[:, None, :]
+    xi, Bc, Cc = jnp.split(conv, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32)
+                         + params["ssm_dt_bias"])        # [B,H]
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A[None, :])                         # [B,H]
+    xh = xi.reshape(B, H, P).astype(jnp.float32)
+    h = cache["ssm_state"]
+    h = (a[:, :, None, None] * h
+         + (dt[:, :, None] * xh)[..., None] * Bc[:, 0][:, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", h, Cc[:, 0].astype(jnp.float32))
+    y = y + params["ssm_D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_in).astype(dt_)
+    y = _gated_norm(y, z, params["gate_norm_scale"], cfg.norm_eps)
+    new_cache = {"ssm_state": h, "conv_state": hist[:, 1:]}
+    return y @ params["out_proj"].astype(dt_), new_cache

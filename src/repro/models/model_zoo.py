@@ -1,0 +1,229 @@
+"""Model facade: loss functions, serve steps and input specs per family.
+
+This is the single entry point the trainer, the serving engine, the dry-run
+launcher and the benchmarks all use:
+
+    loss_fn   = make_loss_fn(cfg)            # loss_fn(params, batch)
+    serve_fn  = make_serve_step(cfg)          # serve_fn(params, cache, token)
+    specs     = input_specs(cfg, shape)       # ShapeDtypeStruct stand-ins
+
+Frontend stubs (per brief): [vlm] batches carry precomputed patch embeddings,
+[audio] batches carry precomputed frame embeddings; the backbone is real.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeConfig
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def act_dtype(cfg: ModelConfig):
+    return DTYPES[cfg.dtype]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if cfg.is_encdec:
+        return ED.encdec_init(key, cfg)
+    return T.lm_init(key, cfg)
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# losses (training)
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg: ModelConfig):
+    dt = act_dtype(cfg)
+
+    if cfg.is_encdec:
+        def loss_fn(params, batch):
+            enc_out = ED.encode(params, batch["enc_embeds"].astype(dt), cfg)
+            h = ED.decode_train(params, enc_out, batch["inputs"], cfg)
+            return L.chunked_softmax_xent(h, params["unembed"],
+                                          batch["targets"], cfg.loss_chunk)
+        return loss_fn
+
+    if cfg.family == "vlm":
+        def loss_fn(params, batch):
+            tok = L.embed(params["embed"], batch["inputs"], dt)
+            x = jnp.concatenate([batch["patch_embeds"].astype(dt), tok],
+                                axis=1)
+            h = T.lm_apply_hidden(params, x, cfg)
+            npfx = batch["patch_embeds"].shape[1]
+            h_txt = h[:, npfx:]
+            return L.chunked_softmax_xent(h_txt, params["unembed"],
+                                          batch["targets"], cfg.loss_chunk)
+        return loss_fn
+
+    def loss_fn(params, batch):
+        x = L.embed(params["embed"], batch["inputs"], dt)
+        h = T.lm_apply_hidden(params, x, cfg)
+        mask = batch.get("mask")
+        return L.chunked_softmax_xent(h, params["unembed"],
+                                      batch["targets"], cfg.loss_chunk,
+                                      label_mask=mask)
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, params, batch: int, max_len: int,
+               enc_out=None, dtype=jnp.bfloat16):
+    if cfg.is_encdec:
+        assert enc_out is not None
+        return ED.encdec_init_cache(params, enc_out, cfg, max_len, dtype)
+    return T.lm_init_cache(cfg, batch, max_len, dtype)
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_fn(params, cache, token[B] int32) -> (logits [B,V], new_cache).
+    One new token against the current cache (the decode shapes' step)."""
+    dt = act_dtype(cfg)
+
+    def serve_fn(params, cache, token):
+        if cfg.is_encdec:
+            x = L.embed(params["dec_embed"], token[:, None], dt)
+            h, cache = ED.encdec_decode_hidden(params, x, cache, cfg)
+        else:
+            x = L.embed(params["embed"], token[:, None], dt)
+            h, cache = T.lm_decode_hidden(params, x, cache, cfg)
+        logits = L.logits_for_last(h, params["unembed"])
+        return logits, cache
+
+    return serve_fn
+
+
+def make_prefill(cfg: ModelConfig):
+    """prefill(params, tokens [B,S]) -> (last_logits [B,V], cache)."""
+    dt = act_dtype(cfg)
+
+    def prefill_fn(params, tokens, max_len: int):
+        x = L.embed(params["embed"], tokens, dt)
+        h, cache = T.lm_prefill_hidden(params, x, cfg, max_len)
+        logits = L.logits_for_last(h[:, -1:], params["unembed"])
+        return logits, cache
+
+    return prefill_fn
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def enc_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    """Encoder frame count for enc-dec cells (documented: seq/4)."""
+    return max(64, seq_len // 4)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the batch of a given shape cell.
+    For train/prefill kinds this is the training batch; decode kinds get
+    {token} (the cache spec comes from cache_specs())."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = act_dtype(cfg)
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            return {
+                "enc_embeds": _sds((B, enc_len_for(cfg, S), cfg.d_model), dt),
+                "inputs": _sds((B, S), i32),
+                "targets": _sds((B, S), i32),
+            }
+        if cfg.family == "vlm":
+            npfx = cfg.n_prefix_embeds
+            return {
+                "patch_embeds": _sds((B, npfx, cfg.d_model), dt),
+                "inputs": _sds((B, S - npfx), i32),
+                "targets": _sds((B, S - npfx), i32),
+            }
+        return {"inputs": _sds((B, S), i32), "targets": _sds((B, S), i32)}
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            return {
+                "enc_embeds": _sds((B, enc_len_for(cfg, S), cfg.d_model), dt),
+                "inputs": _sds((B, S), i32),
+            }
+        if cfg.family == "vlm":
+            npfx = cfg.n_prefix_embeds
+            return {
+                "patch_embeds": _sds((B, npfx, cfg.d_model), dt),
+                "inputs": _sds((B, S - npfx), i32),
+            }
+        return {"inputs": _sds((B, S), i32)}
+    # decode kinds
+    return {"token": _sds((B,), i32)}
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    """prefill_step(params, batch) -> (last_logits, cache): process the full
+    prompt and build the decode cache (the inference-prefill cell)."""
+    dt = act_dtype(cfg)
+
+    if cfg.is_encdec:
+        def step(params, batch):
+            enc_out = ED.encode(params, batch["enc_embeds"].astype(dt), cfg)
+            h = ED.decode_train(params, enc_out, batch["inputs"], cfg)
+            cache = ED.encdec_init_cache(params, enc_out, cfg, max_len)
+            return L.logits_for_last(h[:, -1:], params["unembed"]), cache
+        return step
+
+    if cfg.family == "vlm":
+        def step(params, batch):
+            tok = L.embed(params["embed"], batch["inputs"], dt)
+            x = jnp.concatenate([batch["patch_embeds"].astype(dt), tok], 1)
+            h, cache = T.lm_prefill_hidden(params, x, cfg, max_len)
+            return L.logits_for_last(h[:, -1:], params["unembed"]), cache
+        return step
+
+    def step(params, batch):
+        x = L.embed(params["embed"], batch["inputs"], dt)
+        h, cache = T.lm_prefill_hidden(params, x, cfg, max_len)
+        return L.logits_for_last(h[:, -1:], params["unembed"]), cache
+
+    return step
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct pytree of the decode cache at this shape."""
+    B, S = shape.global_batch, shape.seq_len
+
+    def shapes_of(tree):
+        return jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+    if cfg.is_encdec:
+        def build():
+            params = ED.encdec_init(jax.random.PRNGKey(0), cfg)
+            enc_out = jnp.zeros((B, enc_len_for(cfg, S), cfg.d_model), dtype)
+            return ED.encdec_init_cache(params, enc_out, cfg, S, dtype)
+        return jax.eval_shape(build)
+
+    def build():
+        return T.lm_init_cache(cfg, B, S, dtype)
+
+    return jax.eval_shape(build)

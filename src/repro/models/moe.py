@@ -1,0 +1,132 @@
+"""Mixture-of-Experts layer with two dispatch strategies.
+
+"capacity" (train/prefill): scatter-based token dispatch — tokens are routed
+to fixed-capacity expert buffers via cumsum positions and gather/scatter, so
+HLO FLOPs stay proportional to top_k (not n_experts) and everything is
+static-shaped / pjit-friendly.  Dispatch is chunked along the sequence
+(capacity is per chunk) to bound the transient [E, C, d] buffers.
+
+"dense" (decode / tiny models): every expert runs on every token and
+non-selected contributions are zeroed by the combine weights.  For decode
+this is the right call: with realistic batches every expert's weights must
+stream from HBM anyway (the memory roofline is unchanged), and it avoids
+gather/scatter latency on a tiny-FLOP step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.layers import truncated_normal
+
+
+def moe_init(key, cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    f, e = cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": truncated_normal(ks[0], (d, e), d ** -0.5),
+        "w_gate": truncated_normal(ks[1], (e, d, f), d ** -0.5),
+        "w_up": truncated_normal(ks[2], (e, d, f), d ** -0.5),
+        "w_down": truncated_normal(ks[3], (e, f, d), f ** -0.5),
+    }
+
+
+def _route(params, x, cfg: ModelConfig):
+    """x: [T, d] -> (weights [T, k], sel [T, k]) with normalized top-k."""
+    logits = x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, sel = lax.top_k(probs, cfg.top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, sel
+
+
+def _expert_ffn(params, xe, dt):
+    """xe: [E, C, d] -> [E, C, d]; batched SwiGLU over experts."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe,
+                               params["w_gate"].astype(dt)))
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(dt))
+    return jnp.einsum("ecf,efd->ecd", g * u, params["w_down"].astype(dt))
+
+
+def _moe_chunk_capacity(params, x, cfg: ModelConfig):
+    """x: [T, d] (one dispatch chunk). Returns [T, d]."""
+    T, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(T * k / e * cfg.moe_capacity_factor)
+    cap = max(8, -(-cap // 8) * 8)  # round up to 8
+    dt = x.dtype
+
+    w, sel = _route(params, x, cfg)                     # [T, k]
+    flat_sel = sel.reshape(-1)                          # [T*k]
+    flat_w = w.reshape(-1)
+    # position of each assignment within its expert (priority = token order)
+    onehot = jax.nn.one_hot(flat_sel, e, dtype=jnp.int32)      # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - 1                       # [T*k, E]
+    pos = jnp.take_along_axis(pos, flat_sel[:, None], axis=1)[:, 0]
+    valid = pos < cap
+    dest = jnp.where(valid, flat_sel * cap + pos, e * cap)     # overflow slot
+
+    # token index for each (expert, capacity) slot
+    tok_of_assign = jnp.arange(T * k, dtype=jnp.int32) // k
+    idx_buf = jnp.zeros((e * cap + 1,), jnp.int32).at[dest].set(
+        tok_of_assign, mode="drop")
+    gate_buf = jnp.zeros((e * cap + 1,), jnp.float32).at[dest].set(
+        flat_w, mode="drop")
+
+    xe = jnp.take(x, idx_buf[:-1].reshape(e, cap), axis=0)     # [E, C, d]
+    ye = _expert_ffn(params, xe, dt)                           # [E, C, d]
+    ye = ye.reshape(e * cap, d) * gate_buf[:-1, None].astype(dt)
+    out = jnp.zeros((T, d), dt).at[idx_buf[:-1]].add(ye, mode="drop")
+    return out
+
+
+def _moe_dense(params, x, cfg: ModelConfig):
+    """x: [T, d]. All experts computed; combine weights zero the rest."""
+    T, d = x.shape
+    e = cfg.n_experts
+    dt = x.dtype
+    w, sel = _route(params, x, cfg)                      # [T, k]
+    combine = jnp.zeros((T, e), jnp.float32)
+    combine = combine.at[jnp.arange(T)[:, None], sel].add(w)   # [T, E]
+    ye = _expert_ffn(params, jnp.broadcast_to(x, (e, T, d)).astype(dt)
+                     .reshape(e, T, d), dt)              # [E, T, d]
+    return jnp.einsum("etd,te->td", ye, combine.astype(dt))
+
+
+def moe_apply(params, x, cfg: ModelConfig, dispatch_chunk: int = 4096):
+    """x: [B, S, d] -> [B, S, d]."""
+    B, S, d = x.shape
+    use_dense = cfg.moe_dispatch == "dense" or S == 1 or (B * S) <= 64
+    if use_dense:
+        out = _moe_dense(params, x.reshape(B * S, d), cfg)
+        return out.reshape(B, S, d)
+
+    chunk = min(dispatch_chunk, S)
+    while S % chunk:
+        chunk //= 2
+    rows = x.reshape(B * (S // chunk), chunk, d)
+
+    @jax.checkpoint
+    def row_fn(xr):
+        # checkpointed: backward recomputes the [E, C, d] dispatch buffers
+        # per chunk instead of saving them all.
+        return _moe_chunk_capacity(params, xr, cfg)
+
+    out = lax.map(row_fn, rows)
+    return out.reshape(B, S, d)
+
+
+def aux_load_balance_loss(params, x, cfg: ModelConfig):
+    """Standard Switch-style load-balance auxiliary (mean over tokens)."""
+    T = x.shape[0] * x.shape[1]
+    xf = x.reshape(T, -1)
+    logits = xf.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, sel = lax.top_k(probs, cfg.top_k)
+    frac = jax.nn.one_hot(sel, cfg.n_experts).sum((0, 1)) / (T * cfg.top_k)
+    imp = probs.mean(0)
+    return cfg.n_experts * jnp.sum(frac * imp)

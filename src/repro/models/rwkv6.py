@@ -1,0 +1,193 @@
+"""RWKV6 "Finch" block — attention-free time mixing with data-dependent decay.
+
+Per-head (hd=64) linear-attention-style recurrence over state S [hd_k, hd_v]:
+
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+    y_t[j]   = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j])
+
+with the decay w_t = exp(-exp(w0 + lora_w(x_mix))) *data-dependent* (the
+Finch contribution).  Training/prefill use a chunked formulation: within a
+chunk the output is a causal pairwise-decay einsum (all decay exponents are
+<= 0, so nothing overflows), across chunks the [B, H, hd, hd] state is
+carried by lax.scan — O(S) time, constant state, which is what makes the
+500k cells feasible.
+
+The decay parameters (time_decay_*, lora) and bonus u are excluded from SEFP
+(DESIGN.md §5); the d x d projections are quantized.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.layers import truncated_normal
+from repro.sharding.constraints import constrain_batch
+
+
+def rdims(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    return d, H, hd
+
+
+def rwkv6_init(key, cfg: ModelConfig, d: int | None = None):
+    d, H, hd = rdims(cfg, d)
+    ks = jax.random.split(key, 8)
+    lora = 64 if d >= 1024 else 16
+    return {
+        # token-shift mixing coefficients (static part)
+        "time_mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "time_mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "time_mix_v": jnp.full((d,), 0.5, jnp.float32),
+        "time_mix_w": jnp.full((d,), 0.5, jnp.float32),
+        "time_mix_g": jnp.full((d,), 0.5, jnp.float32),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "time_decay_w0": jnp.full((d,), -3.0, jnp.float32),
+        "time_decay_A": truncated_normal(ks[0], (d, lora), d ** -0.5),
+        "time_decay_B": truncated_normal(ks[1], (lora, d), lora ** -0.5),
+        "time_bonus_u": truncated_normal(ks[2], (H, hd), 0.1),
+        "wr": truncated_normal(ks[3], (d, d), d ** -0.5),
+        "wk": truncated_normal(ks[4], (d, d), d ** -0.5),
+        "wv": truncated_normal(ks[5], (d, d), d ** -0.5),
+        "wg": truncated_normal(ks[6], (d, d), d ** -0.5),
+        "wo": truncated_normal(ks[7], (d, d), d ** -0.5),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _mix(x, x_prev, mu):
+    """token shift: lerp(x_t, x_{t-1}, mu) (mu toward previous token)."""
+    return x + (x_prev - x) * mu[None, None, :].astype(x.dtype)
+
+
+def _project(params, x, x_prev):
+    dt = x.dtype
+    xr = _mix(x, x_prev, params["time_mix_r"]) @ params["wr"].astype(dt)
+    xk = _mix(x, x_prev, params["time_mix_k"]) @ params["wk"].astype(dt)
+    xv = _mix(x, x_prev, params["time_mix_v"]) @ params["wv"].astype(dt)
+    xg = _mix(x, x_prev, params["time_mix_g"]) @ params["wg"].astype(dt)
+    xw = _mix(x, x_prev, params["time_mix_w"])
+    loga = -jnp.exp(
+        params["time_decay_w0"][None, None]
+        + jnp.tanh(xw.astype(jnp.float32) @ params["time_decay_A"])
+        @ params["time_decay_B"])                        # [B,S,d]  (<= 0)
+    return xr, xk, xv, xg, loga
+
+
+def _group_norm(y, scale, H, hd, eps):
+    """per-head layer norm of the wkv output."""
+    B, S, d = y.shape
+    yf = y.astype(jnp.float32).reshape(B, S, H, hd)
+    mean = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yn = (yf - mean) * lax.rsqrt(var + eps)
+    return (yn.reshape(B, S, d) * scale).astype(y.dtype)
+
+
+def rwkv6_apply(params, x, cfg: ModelConfig, d: int | None = None):
+    """Full-sequence (train). x: [B, S, d] -> [B, S, d]."""
+    y, _ = _rwkv6_forward(params, x, cfg, d, want_state=False)
+    return y
+
+
+def rwkv6_apply_with_state(params, x, cfg: ModelConfig, d: int | None = None):
+    """Full-sequence prefill; also returns the final wkv state
+    [B, H, hd, hd]."""
+    return _rwkv6_forward(params, x, cfg, d, want_state=True)
+
+
+def _rwkv6_forward(params, x, cfg: ModelConfig, d: int | None,
+                   want_state: bool):
+    d, H, hd = rdims(cfg, d)
+    B, S, _ = x.shape
+    dt_ = x.dtype
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, loga = _project(params, x, x_prev)
+
+    rf = r.astype(jnp.float32).reshape(B, S, H, hd)
+    kf = k.astype(jnp.float32).reshape(B, S, H, hd)
+    vf = v.astype(jnp.float32).reshape(B, S, H, hd)
+    la = loga.reshape(B, S, H, hd)
+    u = params["time_bonus_u"]                          # [H,hd]
+
+    L = min(cfg.rwkv_chunk, S)
+    while S % L:
+        L //= 2
+    nc = S // L
+
+    @jax.checkpoint
+    def chunk_step(S0, inp):
+        # checkpointed: backward recomputes the O(L^2 * d) pairwise-decay
+        # tensor instead of saving one per chunk.
+        rk, kk, vk, lak = inp                            # [B,L,H,hd] each
+        lcum = jnp.cumsum(lak, axis=1)                   # [B,L,H,hd]
+        # pairwise decay exponent for s < t:  lcum_{t-1} - lcum_s  (<= 0)
+        # (prod of w over u in (s, t-1]); for s = t-1 it is 0.
+        lq = lcum - lak                                  # lcum_{t-1} rel chunk
+        e = lq[:, :, None] - lcum[:, None, :]            # [B,L,L,H,hd]
+        strict = jnp.tril(jnp.ones((L, L), jnp.float32), -1)
+        decay = jnp.exp(e) * strict[None, :, :, None, None]
+        A = jnp.einsum("bthi,bshi,btshi->bhts", rk, kk, decay)
+        # bonus diagonal
+        diag = jnp.einsum("bthi,hi,bthi->bth", rk, u, kk)
+        y = jnp.einsum("bhts,bshj->bthj", A, vk)
+        y = y + diag[..., None] * vk
+        # initial-state contribution: r_t * exp(lcum_{t-1}) . S0
+        rdec = rk * jnp.exp(lq)
+        y = y + jnp.einsum("bthi,bhij->bthj", rdec, S0)
+        # state update: S_L = exp(lcum_L) S0 + sum_s exp(lcum_L - lcum_s) k_s v_s
+        ltot = lcum[:, -1]                               # [B,H,hd]
+        kdec = kk * jnp.exp(ltot[:, None] - lcum)
+        S_new = (jnp.exp(ltot)[..., None] * S0
+                 + jnp.einsum("bshi,bshj->bhij", kdec, vk))
+        return S_new, y
+
+    # constrained carry/inputs (see mamba2.py — while-carry batch sharding)
+    S0 = constrain_batch(jnp.zeros((B, H, hd, hd), jnp.float32),
+                         extra=((1, "model"),))
+    inps = tuple(jnp.moveaxis(
+        constrain_batch(a.reshape(B, nc, L, H, hd), extra=((3, "model"),)),
+        1, 0) for a in (rf, kf, vf, la))
+    S_final, ys = lax.scan(chunk_step, S0, inps)         # [nc,B,L,H,hd]
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d)
+    y = _group_norm(y, params["ln_x_scale"], H, hd, cfg.norm_eps)
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(dt_)
+    out = y @ params["wo"].astype(dt_)
+    return out, (S_final if want_state else None)
+
+
+def rwkv6_init_cache(cfg: ModelConfig, batch: int, d: int | None = None,
+                     dtype=jnp.float32):
+    d, H, hd = rdims(cfg, d)
+    return {
+        "wkv_state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "shift_state": jnp.zeros((batch, 1, d), dtype),
+    }
+
+
+def rwkv6_decode(params, x, cache, cfg: ModelConfig, d: int | None = None):
+    """Single token. x: [B,1,d] -> (y [B,1,d], new_cache)."""
+    d, H, hd = rdims(cfg, d)
+    B = x.shape[0]
+    dt_ = x.dtype
+    x_prev = cache["shift_state"].astype(dt_)
+    r, k, v, g, loga = _project(params, x, x_prev)
+    rf = r.astype(jnp.float32).reshape(B, H, hd)
+    kf = k.astype(jnp.float32).reshape(B, H, hd)
+    vf = v.astype(jnp.float32).reshape(B, H, hd)
+    w = jnp.exp(loga.reshape(B, H, hd))                  # decay in (0,1)
+    u = params["time_bonus_u"]
+    S0 = cache["wkv_state"]
+    kv = kf[..., :, None] * vf[..., None, :]             # [B,H,hd,hd]
+    y = jnp.einsum("bhi,bhij->bhj", rf, S0 + u[None, :, :, None] * kv)
+    S_new = w[..., None] * S0 + kv
+    y = y.reshape(B, 1, d)
+    y = _group_norm(y, params["ln_x_scale"], H, hd, cfg.norm_eps)
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(dt_)
+    new_cache = {"wkv_state": S_new, "shift_state": x.astype(
+        cache["shift_state"].dtype)}
+    return y @ params["wo"].astype(dt_), new_cache

@@ -1,0 +1,488 @@
+"""Model assembly: per-family blocks + scan-over-layers stacks + decode.
+
+Families
+  dense / vlm : pre-norm GQA attention + SwiGLU MLP (vlm adds a stubbed
+                patch-embedding prefix; the backbone is identical)
+  moe         : pre-norm GQA attention + MoE FFN
+  hybrid      : Mamba2 backbone; every ``attn_every`` layers one of
+                ``n_shared_attn_blocks`` *shared* attention blocks is invoked
+                on concat(h, first-layer embeddings) (Zamba2 wiring)
+  rwkv        : RWKV6 time mix + RWKV channel mix
+  encdec      : see repro/models/encdec.py
+
+Homogeneous stacks are scanned (lax.scan over stacked layer params) with a
+configurable remat policy — one layer's HLO regardless of depth, which keeps
+512-device dry-run compiles tractable and is how the real deployment would
+be built anyway.
+
+Three execution modes per family:
+  apply   : full sequence -> hidden states (training)
+  prefill : full sequence -> (hidden, cache)   (serving, padded to max_len)
+  decode  : one token + cache -> (hidden, new cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R6
+from repro.models.config import ModelConfig
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _stack_init(layer_init, key, n_layers: int):
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(layer_init)(keys)
+
+
+# ---------------------------------------------------------------------------
+# dense / moe layers
+# ---------------------------------------------------------------------------
+
+def dense_layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def moe_layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "moe": MOE.moe_init(k2, cfg),
+    }
+
+
+def _ffn_apply(p, h, cfg: ModelConfig):
+    if "moe" in p:
+        return MOE.moe_apply(p["moe"], h, cfg)
+    return L.mlp_apply(p["mlp"], h)
+
+
+def attn_layer_apply(p, x, cfg: ModelConfig, positions=None, causal=True):
+    x = x + L.attention_apply(p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                              cfg, positions, causal)
+    x = x + _ffn_apply(p, L.rmsnorm(x, p["ln2"], cfg.norm_eps), cfg)
+    return x
+
+
+def attn_layer_prefill(p, x, cfg: ModelConfig, max_len: int, positions=None):
+    """Like apply, but also returns the (padded) kv cache for this layer."""
+    B, S, _ = x.shape
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    q, k, v = L.qkv_project(p["attn"], h, cfg, positions)
+    qb = _fit_block(cfg.q_block, S)
+    kb = _fit_block(cfg.kv_block, S)
+    o = L.flash_attention(q, k, v, causal=True, q_block=qb, kv_block=kb)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    x = x + o @ p["attn"]["wo"].astype(x.dtype)
+    x = x + _ffn_apply(p, L.rmsnorm(x, p["ln2"], cfg.norm_eps), cfg)
+    pad = max_len - S
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return x, {"k": kc, "v": vc}
+
+
+def attn_layer_decode(p, x, cache, cfg: ModelConfig, pos):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    o, kc, vc = L.attention_decode(p["attn"], h, cfg, cache["k"], cache["v"],
+                                   pos)
+    x = x + o
+    x = x + _ffn_apply(p, L.rmsnorm(x, p["ln2"], cfg.norm_eps), cfg)
+    return x, {"k": kc, "v": vc}
+
+
+def _fit_block(b, s):
+    b = min(b, s)
+    while s % b:
+        b //= 2
+    return max(b, 1)
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    kv = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# rwkv layer (time mix + channel mix)
+# ---------------------------------------------------------------------------
+
+def rwkv_channel_mix_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "time_mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "time_mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "wk_ffn": L.truncated_normal(k1, (d, f), d ** -0.5),
+        "wv_ffn": L.truncated_normal(k2, (f, d), f ** -0.5),
+        "wr_ffn": L.truncated_normal(k3, (d, d), d ** -0.5),
+    }
+
+
+def rwkv_channel_mix(p, x, x_prev):
+    dt = x.dtype
+    xk = x + (x_prev - x) * p["time_mix_k"][None, None, :].astype(dt)
+    xr = x + (x_prev - x) * p["time_mix_r"][None, None, :].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ p["wk_ffn"].astype(dt)))
+    r = jax.nn.sigmoid((xr @ p["wr_ffn"].astype(dt)).astype(jnp.float32))
+    return r.astype(dt) * (k @ p["wv_ffn"].astype(dt))
+
+
+def rwkv_layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "tmix": R6.rwkv6_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "cmix": rwkv_channel_mix_init(k2, cfg),
+    }
+
+
+def rwkv_layer_apply(p, x, cfg: ModelConfig):
+    x = x + R6.rwkv6_apply(p["tmix"], L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                           cfg)
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    x = x + rwkv_channel_mix(p["cmix"], h, h_prev)
+    return x
+
+
+def rwkv_layer_decode(p, x, cache, cfg: ModelConfig):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    o, tcache = R6.rwkv6_decode(p["tmix"], h, cache["tmix"], cfg)
+    x = x + o
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    o = rwkv_channel_mix(p["cmix"], h, cache["cmix_shift"].astype(h.dtype))
+    x = x + o
+    return x, {"tmix": tcache,
+               "cmix_shift": h.astype(cache["cmix_shift"].dtype)}
+
+
+def rwkv_cache_init(cfg: ModelConfig, batch: int, dtype):
+    return {"tmix": R6.rwkv6_init_cache(cfg, batch, dtype=dtype),
+            "cmix_shift": jnp.zeros((batch, 1, cfg.d_model), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# hybrid (zamba2) layer pieces
+# ---------------------------------------------------------------------------
+
+def hybrid_layer_init(key, cfg: ModelConfig):
+    return {
+        "ln": L.rmsnorm_init(cfg.d_model),
+        "mamba": M2.mamba2_init(key, cfg),
+    }
+
+
+def hybrid_shared_block_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "fuse_proj": L.truncated_normal(k1, (2 * d, d), (2 * d) ** -0.5),
+        "ln1": L.rmsnorm_init(d),
+        "attn": L.attention_init(k2, cfg),
+        "ln2": L.rmsnorm_init(d),
+        "mlp": L.mlp_init(k3, d, cfg.d_ff),
+    }
+
+
+def hybrid_shared_block_apply(p, x, emb0, cfg: ModelConfig, positions=None):
+    dt = x.dtype
+    h = jnp.concatenate([x, emb0], axis=-1) @ p["fuse_proj"].astype(dt)
+    h = h + L.attention_apply(p["attn"], L.rmsnorm(h, p["ln1"], cfg.norm_eps),
+                              cfg, positions, causal=True)
+    h = h + L.mlp_apply(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps))
+    return x + h
+
+
+def hybrid_shared_block_decode(p, x, emb0, cache, cfg: ModelConfig, pos):
+    dt = x.dtype
+    h = jnp.concatenate([x, emb0], axis=-1) @ p["fuse_proj"].astype(dt)
+    hn = L.rmsnorm(h, p["ln1"], cfg.norm_eps)
+    o, kc, vc = L.attention_decode(p["attn"], hn, cfg, cache["k"], cache["v"],
+                                   pos)
+    h = h + o
+    h = h + L.mlp_apply(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps))
+    return x + h, {"k": kc, "v": vc}
+
+
+def n_attn_invocations(cfg: ModelConfig) -> int:
+    return len(range(0, cfg.n_layers, cfg.attn_every))
+
+
+# ---------------------------------------------------------------------------
+# decoder-only LM
+# ---------------------------------------------------------------------------
+
+def lm_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": L.embedding_init(ks[0], cfg.vocab_size, cfg.d_model),
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+        "unembed": L.unembed_init(ks[1], cfg.d_model, cfg.vocab_size),
+    }
+    if cfg.family == "hybrid":
+        params["layers"] = _stack_init(
+            lambda k: hybrid_layer_init(k, cfg), ks[2], cfg.n_layers)
+        params["shared"] = _stack_init(
+            lambda k: hybrid_shared_block_init(k, cfg), ks[3],
+            cfg.n_shared_attn_blocks)
+    elif cfg.family == "rwkv":
+        params["layers"] = _stack_init(
+            lambda k: rwkv_layer_init(k, cfg), ks[2], cfg.n_layers)
+    elif cfg.family == "moe":
+        params["layers"] = _stack_init(
+            lambda k: moe_layer_init(k, cfg), ks[2], cfg.n_layers)
+    else:  # dense / vlm
+        params["layers"] = _stack_init(
+            lambda k: dense_layer_init(k, cfg), ks[2], cfg.n_layers)
+    return params
+
+
+def _hybrid_apply(params, x_emb, cfg: ModelConfig, positions):
+    """Segment structure: shared attention BEFORE mamba layers 0,
+    attn_every, 2*attn_every, ... then a scan over that segment's mamba
+    layers — the same cadence prefill/decode use.
+
+    Deliberately NOT a single scan with lax.cond over the attention: a cond
+    inside a scanned layer makes autodiff save the attention branch's
+    residuals for every one of the n_layers iterations instead of the ~14
+    real invocations (observed: 227 GiB/device on the zamba2-7b train_4k
+    dry-run; segments + remat bring it back to layer-boundary scale)."""
+    emb0 = x_emb
+    nshared = cfg.n_shared_attn_blocks
+    x = x_emb
+
+    from repro.sharding.constraints import constrain_batch
+
+    def mamba_seg_body(x, lp):
+        def f(lp, x):
+            return x + M2.mamba2_apply(
+                lp["mamba"], L.rmsnorm(x, lp["ln"], cfg.norm_eps), cfg)
+        # pin the residual stream to batch-sharded / d-replicated at block
+        # boundaries (canonical megatron annotation) — otherwise GSPMD keeps
+        # x sharded on d and emits fp32 all-gathers around every block
+        # (~0.6 TB/step observed on zamba2-7b train).
+        return constrain_batch(_remat(f, cfg)(lp, x)), None
+
+    def attn_block(sp, x):
+        return hybrid_shared_block_apply(sp, x, emb0, cfg, positions)
+
+    for inv_idx, start in enumerate(range(0, cfg.n_layers, cfg.attn_every)):
+        end = min(start + cfg.attn_every, cfg.n_layers)
+        sp = jax.tree_util.tree_map(
+            lambda a, i=inv_idx % nshared: a[i], params["shared"])
+        x = constrain_batch(_remat(attn_block, cfg)(sp, x))
+        seg = jax.tree_util.tree_map(lambda a: a[start:end],
+                                     params["layers"])
+        x, _ = lax.scan(mamba_seg_body, x, seg)
+    return x
+
+
+def lm_apply_hidden(params, x_emb, cfg: ModelConfig, positions=None):
+    """Run the stack on embeddings [B,S,d] -> final hidden [B,S,d]."""
+    if cfg.family == "hybrid":
+        x = _hybrid_apply(params, x_emb, cfg, positions)
+    elif cfg.family == "rwkv":
+        def body(x, lp):
+            return _remat(lambda p, x: rwkv_layer_apply(p, x, cfg), cfg)(
+                lp, x), None
+        x, _ = lax.scan(body, x_emb, params["layers"])
+    else:
+        def body(x, lp):
+            return _remat(
+                lambda p, x: attn_layer_apply(p, x, cfg, positions), cfg)(
+                lp, x), None
+        x, _ = lax.scan(body, x_emb, params["layers"])
+    return L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+
+
+# -- caches ------------------------------------------------------------------
+
+def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    """Stacked decode cache for the whole model + position counter."""
+    if cfg.family == "hybrid":
+        def one_layer(_):
+            return M2.mamba2_init_cache(cfg, batch, dtype=dtype)
+        layer_caches = jax.vmap(one_layer)(jnp.arange(cfg.n_layers))
+        n_inv = n_attn_invocations(cfg)
+        attn_caches = jax.vmap(
+            lambda _: attn_cache_init(cfg, batch, max_len, dtype))(
+            jnp.arange(n_inv))
+        return {"layers": layer_caches, "attn": attn_caches,
+                "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "rwkv":
+        layer_caches = jax.vmap(
+            lambda _: rwkv_cache_init(cfg, batch, dtype))(
+            jnp.arange(cfg.n_layers))
+        return {"layers": layer_caches, "pos": jnp.zeros((), jnp.int32)}
+    layer_caches = jax.vmap(
+        lambda _: attn_cache_init(cfg, batch, max_len, dtype))(
+        jnp.arange(cfg.n_layers))
+    return {"layers": layer_caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+# -- decode (one token) --------------------------------------------------------
+
+def lm_decode_hidden(params, x_emb, cache, cfg: ModelConfig):
+    """x_emb: [B,1,d]; returns (hidden [B,1,d], new_cache)."""
+    pos = cache["pos"]
+    if cfg.family == "hybrid":
+        emb0 = x_emb
+        nshared = cfg.n_shared_attn_blocks
+        # shared attention interleaves the mamba stack at a static cadence;
+        # run scan over each mamba segment, python loop over segments.
+        x = x_emb
+        new_layer_caches = []
+        new_attn_caches = []
+        seg_bounds = list(range(0, cfg.n_layers, cfg.attn_every))
+        for inv_idx, start in enumerate(seg_bounds):
+            end = min(start + cfg.attn_every, cfg.n_layers)
+            seg = jax.tree_util.tree_map(lambda a: a[start:end],
+                                         params["layers"])
+            seg_cache = jax.tree_util.tree_map(lambda a: a[start:end],
+                                               cache["layers"])
+
+            def seg_layer(x, inp):
+                lp, lcache = inp
+                h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+                o, new_lcache = M2.mamba2_decode(lp["mamba"], h, lcache, cfg)
+                return x + o, new_lcache
+
+            # shared attention first (cadence: at layer index start)
+            sp = jax.tree_util.tree_map(
+                lambda a, i=inv_idx % nshared: a[i], params["shared"])
+            ac = jax.tree_util.tree_map(lambda a, i=inv_idx: a[i],
+                                        cache["attn"])
+            x, new_ac = hybrid_shared_block_decode(sp, x, emb0, ac, cfg, pos)
+            new_attn_caches.append(new_ac)
+            x, new_seg_cache = lax.scan(seg_layer, x, (seg, seg_cache))
+            new_layer_caches.append(new_seg_cache)
+
+        new_cache = {
+            "layers": jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *new_layer_caches),
+            "attn": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs, axis=0), *new_attn_caches),
+            "pos": pos + 1,
+        }
+        h = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return h, new_cache
+
+    if cfg.family == "rwkv":
+        def body(x, inp):
+            lp, lcache = inp
+            x, new_lcache = rwkv_layer_decode(lp, x, lcache, cfg)
+            return x, new_lcache
+        x, new_layer_caches = lax.scan(body, x_emb,
+                                       (params["layers"], cache["layers"]))
+    else:
+        def body(x, inp):
+            lp, lcache = inp
+            x, new_lcache = attn_layer_decode(lp, x, lcache, cfg, pos)
+            return x, new_lcache
+        x, new_layer_caches = lax.scan(body, x_emb,
+                                       (params["layers"], cache["layers"]))
+    h = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return h, {**cache, "layers": new_layer_caches, "pos": pos + 1}
+
+
+# -- prefill (sequence -> cache) ----------------------------------------------
+
+def lm_prefill_hidden(params, x_emb, cfg: ModelConfig, max_len: int):
+    """Run the full stack, returning (hidden [B,S,d], decode cache)."""
+    B, S, d = x_emb.shape
+    dtype = x_emb.dtype
+    if cfg.family == "rwkv":
+        def body(x, lp):
+            def f(lp, x):
+                h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                y, st = R6.rwkv6_apply_with_state(lp["tmix"], h, cfg)
+                x = x + y
+                h2 = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                h2_prev = jnp.pad(h2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+                x = x + rwkv_channel_mix(lp["cmix"], h2, h2_prev)
+                cache = {"tmix": {"wkv_state": st,
+                                  "shift_state": h[:, -1:].astype(dtype)},
+                         "cmix_shift": h2[:, -1:].astype(dtype)}
+                return x, cache
+            return _remat(f, cfg)(lp, x)
+
+        x, caches = lax.scan(body, x_emb, params["layers"])
+        cache = {"layers": caches, "pos": jnp.asarray(S, jnp.int32)}
+        return L.rmsnorm(x, params["ln_f"], cfg.norm_eps), cache
+
+    if cfg.family == "hybrid":
+        emb0 = x_emb
+        nshared = cfg.n_shared_attn_blocks
+        x = x_emb
+        attn_caches = []
+        seg_caches = []
+        seg_bounds = list(range(0, cfg.n_layers, cfg.attn_every))
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+        def mamba_seg_body(x, lp):
+            def f(lp, x):
+                h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+                y, st = M2.mamba2_apply_with_state(lp["mamba"], h, cfg)
+                return x + y, st
+            return _remat(f, cfg)(lp, x)
+
+        for inv_idx, start in enumerate(seg_bounds):
+            end = min(start + cfg.attn_every, cfg.n_layers)
+            sp = jax.tree_util.tree_map(
+                lambda a, i=inv_idx % nshared: a[i], params["shared"])
+            dt = x.dtype
+            hcat = jnp.concatenate([x, emb0], -1) @ sp["fuse_proj"].astype(dt)
+            hh, ac = attn_layer_prefill(sp, hcat, cfg, max_len, positions)
+            x = x + hh
+            attn_caches.append(ac)
+            seg = jax.tree_util.tree_map(lambda a: a[start:end],
+                                         params["layers"])
+            x, st = lax.scan(mamba_seg_body, x, seg)
+            seg_caches.append(st)
+        cache = {
+            "layers": jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *seg_caches),
+            "attn": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs, 0), *attn_caches),
+            "pos": jnp.asarray(S, jnp.int32),
+        }
+        return L.rmsnorm(x, params["ln_f"], cfg.norm_eps), cache
+
+    # dense / moe / vlm
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(x, lp):
+        x, c = attn_layer_prefill(lp, x, cfg, max_len, positions)
+        return x, c
+
+    x, layer_caches = lax.scan(body, x_emb, params["layers"])
+    cache = {"layers": layer_caches, "pos": jnp.asarray(S, jnp.int32)}
+    return L.rmsnorm(x, params["ln_f"], cfg.norm_eps), cache

@@ -1,0 +1,1 @@
+from repro.quant.int_quant import int_quantize, int_quantize_ste  # noqa: F401

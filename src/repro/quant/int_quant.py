@@ -1,0 +1,50 @@
+"""Conventional per-group scaled integer quantization — the baseline format
+OTARo argues against (scales are bit-width-specific, so precision switching
+requires re-quantization from the master weights).
+
+Provided so benchmarks/tests can demonstrate the paper's Fig. 1 point
+quantitatively: reinterpreting an INT-b2 model's scales at b1 != b2 is
+catastrophically wrong, while SEFP truncation is exact re-quantization.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def int_quantize(w: jax.Array, bits: int, group_size: int = 64,
+                 group_axis: int = -1):
+    """Symmetric per-group int quantization.  Returns (dequantized, codes,
+    scales)."""
+    wf = jnp.moveaxis(w.astype(jnp.float32), group_axis, -1)
+    *lead, n = wf.shape
+    g = wf.reshape(*lead, n // group_size, group_size)
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.abs(g).max(axis=-1, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(g / scale), -qmax, qmax)
+    deq = (codes * scale).reshape(*lead, n)
+    deq = jnp.moveaxis(deq, -1, group_axis) if group_axis not in (
+        -1, w.ndim - 1) else deq
+    return deq.astype(w.dtype), codes, scale
+
+
+def int_quantize_ste(w: jax.Array, bits: int, group_size: int = 64,
+                     group_axis: int = -1) -> jax.Array:
+    deq, _, _ = int_quantize(w, bits, group_size, group_axis)
+    return w + lax.stop_gradient(deq - w)
+
+
+def naive_bitwidth_switch(codes: jax.Array, scale: jax.Array,
+                          from_bits: int, to_bits: int) -> jax.Array:
+    """What a device WOULD have to do to switch an int-quantized model's
+    precision without re-deriving scales: shift the codes and reuse the old
+    scale.  This is wrong because the scale is anchored to qmax(from_bits) —
+    exactly the incompatibility the paper's Fig. 1 illustrates."""
+    shift = from_bits - to_bits
+    if shift <= 0:
+        raise ValueError("only downshifts are meaningful here")
+    new_codes = jnp.trunc(codes / (2.0 ** shift))
+    return new_codes * scale * (2.0 ** shift)

@@ -1,0 +1,139 @@
+"""Switchable-precision serving engine — the paper's deployment story.
+
+One PackedSEFP master (~9.1 bits/param) is kept resident; serving at any
+precision E5M8..E5M3 is a mantissa truncation of that master:
+
+  * `set_precision(m)` rebuilds the live weights with a single cheap
+    elementwise pass (shift + dequant) — no scale refits, no re-quantization,
+    no second model copy (contrast: conventional int quantization needs a
+    per-bit-width model zoo, tests/test_sefp_core.py demonstrates why);
+  * precision can be switched *mid-generation* — prefill at high precision,
+    decode at low (the paper's prefill/decode asymmetry), or per-request by
+    task type (generation vs understanding);
+  * requests are served in fixed batch slots with a shared KV cache; the
+    decode step is one jitted call per token for the whole batch.
+
+The fused HBM-streaming path (dequant inside the matmul kernel,
+repro/kernels/sefp_matmul) is what a real TPU serving binary would run for
+the big projections; benchmarks/bench_memory_speed.py measures it.  This
+engine uses the materialize-on-switch path, which is numerically identical
+(tests/test_serving.py asserts it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packed as packed_lib
+from repro.models import model_zoo as Z
+from repro.models.config import ModelConfig
+from repro.serve.sampler import sample_token
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # [B, new]
+    prompt_len: int
+    precision_trace: List[int]  # mantissa width used at each decode step
+    decode_seconds: float
+
+
+class SwitchableServer:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
+                 cache_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        # pack once: the single multi-precision master
+        self.master = packed_lib.pack_tree(params)
+        self.master_bytes = packed_lib.tree_nbytes(self.master)
+        self._m: Optional[int] = None
+        self._live = None
+        self._serve = jax.jit(Z.make_serve_step(cfg))
+        self._prefill = jax.jit(Z.make_prefill(cfg),
+                                static_argnames=("max_len",))
+        self.set_precision(8)
+
+    # -- precision switching ------------------------------------------------
+    def set_precision(self, m: int):
+        """Truncate the master to E5M<m>.  One elementwise pass; no scale
+        refits (the SEFP property)."""
+        if m == self._m:
+            return
+        self._live = packed_lib.dequantize_tree(
+            self.master, jnp.int32(m), dtype=jnp.bfloat16)
+        self._m = m
+
+    @property
+    def precision(self) -> int:
+        return self._m
+
+    # -- serving --------------------------------------------------------------
+    def prefill(self, prompts: np.ndarray):
+        """prompts: [B, S] int32 (equal-length batch slot).  Returns
+        (last_logits, cache)."""
+        toks = jnp.asarray(prompts, jnp.int32)
+        return self._prefill(self._live, toks, max_len=self.max_len)
+
+    def generate(self, prompts: np.ndarray, max_new: int,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 precision_schedule=None) -> GenerationResult:
+        """Batched generation.  ``precision_schedule``: optional callable
+        step_idx -> mantissa width, enabling mid-generation switching
+        (e.g. prefill/high, decode/low)."""
+        B, S = prompts.shape
+        assert S + max_new <= self.max_len
+        logits, cache = self.prefill(prompts)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        trace = []
+        t0 = time.perf_counter()
+        tok = sample_token(logits, key, temperature, top_k)
+        for i in range(max_new):
+            if precision_schedule is not None:
+                self.set_precision(int(precision_schedule(i)))
+            trace.append(self._m)
+            out.append(np.asarray(tok))
+            logits, cache = self._serve(self._live, cache, tok)
+            key, sub = jax.random.split(key)
+            tok = sample_token(logits, sub, temperature, top_k)
+        dt = time.perf_counter() - t0
+        return GenerationResult(tokens=np.stack(out, axis=1), prompt_len=S,
+                                precision_trace=trace, decode_seconds=dt)
+
+    # -- accounting ------------------------------------------------------------
+    def memory_report(self) -> dict:
+        """Bytes: fp16 baseline vs packed master vs truncated stream at the
+        current precision (paper Table 2 accounting)."""
+        n_params = 0
+        packed_bytes = self.master_bytes["packed_bytes"]
+        raw_bytes = self.master_bytes["raw_bytes"]
+
+        def count(leaf):
+            nonlocal n_params
+            if isinstance(leaf, packed_lib.PackedSEFP):
+                n_params += int(np.prod(leaf.shape))
+            elif hasattr(leaf, "size"):
+                n_params += int(leaf.size)
+            return leaf
+
+        jax.tree_util.tree_map(
+            count, self.master,
+            is_leaf=lambda x: isinstance(x, packed_lib.PackedSEFP))
+        m = self._m or 8
+        stream_bits = (m + 1) + 8.0 / 64
+        return {
+            "n_params": n_params,
+            "fp16_bytes": 2 * n_params,
+            "master_bytes": packed_bytes + raw_bytes,
+            "stream_bytes_at_precision": int(
+                stream_bits / 8 * (packed_bytes / (9.125 / 8))) + raw_bytes,
+            "precision": m,
+        }

@@ -1,0 +1,136 @@
+"""Packed-weight decode step: SEFP weight streaming at the HLO level.
+
+The baseline decode step streams bf16 weights (16 bits/param).  This variant
+keeps the big per-layer weights in SEFP int8 codes (+ per-64-group int8
+exponents ≈ 8.125 bits/param) and dequantizes EACH LAYER'S SLICE inside the
+scan body, so the int8->bf16 convert + group-scale multiply sit right next
+to their consuming matmuls (XLA fuses elementwise producers into dot
+operands) and HBM weight traffic drops ~2x.  This is the XLA-level
+realization of the paper's Table 2 mechanism; the Pallas kernel
+(repro/kernels/sefp_matmul) is the fully-fused TPU form with runtime
+mantissa truncation on top.
+
+Supports the dense/vlm/moe families (scan-over-layers with attention KV
+caches).  Serving precision m <= 7 (int8 two's-complement codes).  Used by
+the dry-run's "packed" variant (hillclimb cell C) and covered by
+tests/test_serving.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import sefp
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+PACK_KEY = "sefp_codes"
+
+
+def _eligible(name: str, leaf, min_size: int) -> bool:
+    # per-layer stacked weights [L, K, N] (or [L, E, K, N] for MoE experts)
+    # plus the unembed head [d, V]; the input embedding stays unpacked (it
+    # is gathered, not matmul'd).
+    if not (hasattr(leaf, "ndim") and leaf.ndim >= 2
+            and leaf.dtype in (jnp.float32, jnp.bfloat16)
+            and leaf.shape[-2] % sefp.GROUP_SIZE == 0
+            and leaf.size >= min_size):
+        return False
+    if name.endswith("w_unembed"):
+        return True
+    return leaf.ndim >= 3
+
+
+def pack_leaf(w: jax.Array, m: int) -> dict:
+    """Quantize [..., K, N] along K into int8 codes + int8 group exps."""
+    *lead, K, N = w.shape
+    g = w.astype(jnp.float32).reshape(*lead, K // sefp.GROUP_SIZE,
+                                      sefp.GROUP_SIZE, N)
+    e = jnp.clip(sefp.floor_log2(g).max(axis=-2, keepdims=True),
+                 sefp.EXP_MIN, sefp.EXP_MAX)
+    quantum = sefp.exp2i(e - (m - 1))
+    maxmag = float(2 ** m - 1)
+    codes = jnp.clip(jnp.round(g / quantum), -maxmag, maxmag)
+    return {PACK_KEY: codes.astype(jnp.int8).reshape(*lead, K, N),
+            "exp": e.astype(jnp.int8).reshape(*lead, K // sefp.GROUP_SIZE,
+                                              N)}
+
+
+def dequant_leaf(packed: dict, m: int, dtype=jnp.bfloat16) -> jax.Array:
+    codes = packed[PACK_KEY]
+    e = packed["exp"].astype(jnp.int32)
+    quantum = sefp.exp2i(e - (m - 1))
+    quantum = jnp.repeat(quantum, sefp.GROUP_SIZE, axis=-2)
+    return (codes.astype(jnp.float32) * quantum).astype(dtype)
+
+
+def _is_packed(x) -> bool:
+    return isinstance(x, dict) and PACK_KEY in x
+
+
+def pack_params(params: Any, m: int = 7, min_size: int = 1 << 16) -> Any:
+    """Pack every eligible stacked weight; other leaves stay as-is (cast to
+    bf16 if float32, matching the deployed dtype).  The serving width m is
+    baked in (int8 codes); runtime truncation below m is still free via
+    code >> k (the master path in core/packed.py keeps the full M8)."""
+
+    def visit(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if _eligible(name, leaf, min_size):
+            return pack_leaf(leaf, m)
+        if hasattr(leaf, "dtype") and leaf.dtype == jnp.float32:
+            return leaf.astype(jnp.bfloat16)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def dequant_tree(tree: Any, m: int, dtype=jnp.bfloat16) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: dequant_leaf(x, m, dtype) if _is_packed(x) else x,
+        tree, is_leaf=_is_packed)
+
+
+def make_packed_serve_step(cfg: ModelConfig, m: int = 7):
+    """serve(packed_params, cache, token) -> (logits, cache): per-layer
+    in-scan dequant so only int8 codes stream from HBM."""
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise NotImplementedError(
+            "packed serving currently targets attention-family stacks")
+    dt = jnp.bfloat16
+
+    def serve(params, cache, token):
+        x = L.embed(params["embed"], token[:, None], dt)
+        pos = cache["pos"]
+
+        def body(xc, inp):
+            lp_packed, lcache = inp
+            lp = dequant_tree(lp_packed, m, dt)  # this layer's slice only
+            xc, nc = T.attn_layer_decode(lp, xc, lcache, cfg, pos)
+            return xc, nc
+
+        x, new_layers = lax.scan(body, x, (params["layers"],
+                                           cache["layers"]))
+        h = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        unemb = dequant_tree(params["unembed"], m, dt)
+        logits = L.logits_for_last(h, unemb)
+        return logits, {**cache, "layers": new_layers, "pos": pos + 1}
+
+    return serve
+
+
+def packed_param_shapes(cfg: ModelConfig, m: int = 7) -> Any:
+    """ShapeDtypeStruct tree of the packed serving params (dry-run)."""
+    from repro.models import model_zoo as Z
+
+    def build():
+        params = Z.init_params(cfg, jax.random.PRNGKey(0))
+        return pack_params(params, m)
+
+    return jax.eval_shape(build)

@@ -1,0 +1,7 @@
+from repro.sharding.partition import (  # noqa: F401
+    batch_pspecs,
+    cache_pspecs,
+    param_pspecs,
+    state_pspecs,
+    to_named_sharding,
+)

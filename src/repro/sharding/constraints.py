@@ -1,0 +1,86 @@
+"""Activation sharding constraints (mesh-optional helpers).
+
+GSPMD propagation is weakest through while-loop carries and gather/scatter
+ops; without hints it can silently replicate the batch dimension inside
+scanned layers (observed on the 256-chip dry-run: f32[global_batch, ...]
+temporaries and multi-GiB all-gathers in the loss/attention).  These helpers
+apply `with_sharding_constraint` only when an ambient mesh is active, so the
+same model code runs unsharded on CPU tests and fully sharded under pjit.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Which mesh axes may carry the batch dim.  "tp" (default) reserves the
+# model axis for tensor parallelism; "dp" lets the batch span it (pure
+# data/FSDP parallelism).  Set at TRACE time by the step builder
+# (train/steps.py) so in-model constraints agree with the input layout.
+_LAYOUT = contextvars.ContextVar("batch_layout", default="tp")
+
+
+@contextlib.contextmanager
+def batch_layout(layout: str):
+    tok = _LAYOUT.set(layout)
+    try:
+        yield
+    finally:
+        _LAYOUT.reset(tok)
+
+
+def _ambient_mesh():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover
+        return None
+    if mesh is None or mesh.empty:
+        return None
+    return mesh
+
+
+def _axis_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain_batch(x, extra=()):
+    """Shard dim 0 over the layout's batch axes when divisible; dims listed
+    in ``extra`` as (dim_index, axis_name) are constrained too (when
+    divisible and not already carrying batch)."""
+    mesh = _ambient_mesh()
+    if mesh is None or x.ndim == 0:
+        return x
+    layout = _LAYOUT.get()
+    pool = (("pod", "data", "model") if layout == "dp"
+            else ("pod", "data"))
+    # axes already manual (e.g. inside shard_map over pod) cannot appear in
+    # sharding constraints
+    try:
+        manual = {a for a, t in zip(mesh.axis_names, mesh.axis_types)
+                  if "Manual" in str(t)}
+    except Exception:  # pragma: no cover
+        manual = set()
+    baxes = tuple(a for a in pool
+                  if a in mesh.axis_names and a not in manual)
+    spec = [None] * x.ndim
+    used = set()
+    if baxes and x.shape[0] % _axis_size(mesh, baxes) == 0:
+        spec[0] = baxes
+        used.update(baxes)
+    for dim, axis in extra:
+        if (axis in mesh.axis_names and axis not in used and dim < x.ndim
+                and x.shape[dim] % mesh.shape[axis] == 0):
+            spec[dim] = axis
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_tree_batch(tree, extra=()):
+    return jax.tree_util.tree_map(lambda x: constrain_batch(x, extra), tree)

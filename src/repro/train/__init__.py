@@ -1,0 +1,8 @@
+from repro.train.optimizer import (  # noqa: F401
+    adam,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    momentum,
+    sgd,
+)

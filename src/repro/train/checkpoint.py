@@ -1,0 +1,140 @@
+"""Atomic, resumable, elastic checkpointing.
+
+Layout:  <dir>/step_<N>/arrays.npz + meta.json + DONE
+
+* atomic: written into a tmp dir, fsync'd, then os.replace'd; a DONE marker
+  guards against torn writes (a crash mid-save leaves no valid checkpoint).
+* resumable: `meta` carries the data-pipeline cursor and user extras.
+* elastic: arrays are saved as FULL (unsharded) numpy arrays and restored
+  with jax.device_put against whatever mesh/shardings the new job uses —
+  restoring onto a different device count / mesh shape re-shards for free
+  (the elastic-scaling path: checkpoint on 512 chips, resume on 256).
+* keep-k: old steps are garbage-collected after a successful save.
+
+On a multi-host deployment each host would save only its addressable shards
+(jax.experimental.multihost_utils); this container is single-process, so
+full-array save/restore is both correct and the simplest elastic format.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(state) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(state)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten(like_state, arrays: dict):
+    paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        like_state)
+    leaves = []
+    for path, leaf in paths_and_leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing array for {key!r}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint shape mismatch at {key!r}: "
+                f"{arr.shape} vs expected {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Any,
+                    extra: Optional[dict] = None, keep: int = 3) -> str:
+    """Atomically persist `state` (any pytree) at `step`."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        arrays = _flatten(jax.device_get(state))
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        meta = {"step": step, "extra": extra or {},
+                "n_arrays": len(arrays)}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        open(os.path.join(tmp, "DONE"), "w").close()
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _cleanup(ckpt_dir, keep)
+    return final
+
+
+def _valid(path: str) -> bool:
+    return os.path.exists(os.path.join(path, "DONE"))
+
+
+def list_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and _valid(os.path.join(ckpt_dir, name)):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, like_state: Any,
+                       step: Optional[int] = None,
+                       shardings: Any = None) -> Tuple[Any, dict]:
+    """Restore onto the current topology.  `like_state` provides the pytree
+    structure/shapes (e.g. from jax.eval_shape of the init fn); `shardings`
+    (optional pytree of NamedSharding) places each array — pass the NEW
+    mesh's shardings to restore elastically onto a different topology."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no valid checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    if not _valid(path):
+        raise FileNotFoundError(f"checkpoint {path} is incomplete")
+    with np.load(os.path.join(path, "arrays.npz")) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    state_np = _unflatten(like_state, arrays)
+    if shardings is not None:
+        state = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), state_np, shardings)
+    else:
+        state = jax.tree_util.tree_map(jax.numpy.asarray, state_np)
+    return state, meta
+
+
+def _cleanup(ckpt_dir: str, keep: int):
+    steps = list_steps(ckpt_dir)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)
+    # remove stale tmp dirs from crashed saves
+    for name in os.listdir(ckpt_dir):
+        if name.startswith(".tmp_"):
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)

@@ -1,0 +1,93 @@
+"""SEFP-compressed cross-pod gradient reduction (beyond-paper extension).
+
+The paper's own format applied to the slowest links: inter-pod (DCN/ICI)
+all-reduce moves bf16 gradients (16 bits/param).  Here each pod packs its
+pod-local gradient into SEFP (sign + m-bit mantissa + shared exponent per
+64-group ≈ m+1.125 bits), all-gathers the packed representation across the
+``pod`` axis, and dequant-sums locally:
+
+    bytes_on_pod_links(m=8) = 9.125/16  ≈ 0.57x of bf16
+    bytes_on_pod_links(m=4) = 5.125/16  ≈ 0.32x
+
+Quantization error only affects the *cross-pod* term; within-pod reduction
+stays full precision.  Wire-in point: ``train.steps.make_train_step(...,
+compress_pods_m=8)`` wraps the whole OTARo step in shard_map over the pod
+axis and applies ``compressed_allreduce`` to the pod-local gradients.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import sefp
+
+GROUP = 64
+
+
+def _quant_flat(g: jax.Array, m: int):
+    """flatten + pad + SEFP-quantize; returns (codes, exps int8, n)."""
+    n = g.size
+    pad = (-n) % GROUP
+    flat = jnp.pad(g.reshape(-1).astype(jnp.float32), (0, pad))
+    grp = flat.reshape(-1, GROUP)
+    e = sefp.floor_log2(grp).max(axis=-1, keepdims=True)
+    e = jnp.clip(e, sefp.EXP_MIN, sefp.EXP_MAX)
+    quantum = sefp.exp2i(e - (m - 1))
+    maxmag = float(2 ** m - 1)
+    codes = jnp.clip(jnp.round(grp / quantum), -maxmag, maxmag)
+    return codes.astype(jnp.int8 if m <= 7 else jnp.int16), \
+        e.astype(jnp.int8), n
+
+
+def _dequant_flat(codes, exps, m: int, n: int, shape, dtype):
+    quantum = sefp.exp2i(exps.astype(jnp.int32) - (m - 1))
+    flat = (codes.astype(jnp.float32) * quantum).reshape(-1)[:n]
+    return flat.reshape(shape).astype(dtype)
+
+
+def compressed_allreduce(grads: Any, axis_name: str, n_shards: int,
+                         m: int = 8, mean: bool = True) -> Any:
+    """For use INSIDE shard_map over ``axis_name``: SEFP-quantize the local
+    gradient, all-gather the packed codes, dequant-sum locally."""
+
+    def one(g):
+        shape, dtype = g.shape, g.dtype
+        codes, exps, n = _quant_flat(g, m)
+        all_codes = lax.all_gather(codes, axis_name)   # packed bits on wire
+        all_exps = lax.all_gather(exps, axis_name)
+        total = jnp.zeros(g.shape, jnp.float32)
+        for p in range(n_shards):
+            total = total + _dequant_flat(all_codes[p], all_exps[p], m, n,
+                                          shape, jnp.float32)
+        if mean:
+            total = total / n_shards
+        return total.astype(dtype)
+
+    return jax.tree_util.tree_map(one, grads)
+
+
+def compressed_psum_pods(grads: Any, mesh: Mesh, m: int = 8,
+                         mean: bool = False) -> Any:
+    """Standalone wrapper (must run under jit): cross-pod reduce a pytree of
+    replicated-over-pod... pod-local gradients with compressed traffic."""
+    if "pod" not in mesh.axis_names:
+        return grads
+    n_pods = mesh.shape["pod"]
+    if n_pods == 1:
+        return grads
+
+    def body(g):
+        return compressed_allreduce(g, "pod", n_pods, m=m, mean=mean)
+
+    return jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                         axis_names={"pod"}, check_vma=False)(grads)
+
+
+def compression_ratio(m: int) -> float:
+    """bits on the wire per parameter vs bf16."""
+    return ((m + 1) + 8.0 / GROUP) / 16.0

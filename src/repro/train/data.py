@@ -1,0 +1,102 @@
+"""Deterministic synthetic corpus with learnable structure.
+
+Real LLaMA/Qwen checkpoints and Alpaca/WikiText2 are unavailable offline, so
+the paper's *learning-dynamics* claims are validated on a synthetic language
+with genuine structure (DESIGN.md §9):
+
+  * Zipfian unigram marginals,
+  * a sparse first-order Markov transition (each token has K preferred
+    successors with Zipf-weighted probabilities),
+  * copy motifs: segments repeat earlier n-grams with probability p_copy
+    (gives in-context structure that rewards a real sequence model).
+
+Everything is a pure function of (seed, step), so the data pipeline is
+trivially resumable and identical across hosts — each host slices its own
+batch shard (`host_batch_slice`).  A "task" corpus is the same family with a
+different seed/transition — fine-tuning moves a pretrained model onto it,
+mirroring the paper's pretrain -> fine-tune protocol.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticCorpus:
+    vocab_size: int
+    seed: int = 0
+    branching: int = 20       # successors per token
+    zipf_a: float = 1.2       # successor weight decay
+    p_copy: float = 0.10      # chance to start copying an earlier span
+    copy_len: int = 16
+
+    K_MAX = 32  # successor table width; `branching` selects a prefix, so
+    #             corpora with the same seed but different branching share
+    #             structure (fine-tuning = distribution shift, not a new
+    #             language — mirrors the paper's pretrain->task protocol)
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        V = self.vocab_size
+        K = self.branching
+        assert K <= self.K_MAX
+        self.successors = rng.integers(0, V, size=(V, self.K_MAX))[:, :K]
+        w = 1.0 / np.arange(1, K + 1) ** self.zipf_a
+        self.succ_p = w / w.sum()
+        # Zipfian start distribution
+        sw = 1.0 / np.arange(1, V + 1) ** 1.1
+        self.start_p = sw / sw.sum()
+        self.start_ids = rng.permutation(V)
+
+    def _sample_stream(self, rng: np.random.Generator, length: int):
+        out = np.empty(length + 1, np.int64)
+        out[0] = self.start_ids[rng.choice(self.vocab_size, p=self.start_p)]
+        t = 1
+        while t <= length:
+            if t > self.copy_len * 2 and rng.random() < self.p_copy:
+                src = rng.integers(0, t - self.copy_len)
+                n = min(self.copy_len, length + 1 - t)
+                out[t:t + n] = out[src:src + n]
+                t += n
+                continue
+            nxt = self.successors[out[t - 1],
+                                  rng.choice(self.branching, p=self.succ_p)]
+            out[t] = nxt
+            t += 1
+        return out
+
+    def batch(self, step: int, batch_size: int, seq_len: int) -> dict:
+        """Batch for a given global step — pure function of (seed, step)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        toks = np.stack([self._sample_stream(rng, seq_len)
+                         for _ in range(batch_size)])
+        return {"inputs": toks[:, :-1].astype(np.int32),
+                "targets": toks[:, 1:].astype(np.int32)}
+
+    def eval_batches(self, n: int, batch_size: int, seq_len: int):
+        """Held-out batches (disjoint step space from training)."""
+        return [self.batch(10_000_000 + i, batch_size, seq_len)
+                for i in range(n)]
+
+
+def host_batch_slice(batch: dict, host_id: int, n_hosts: int) -> dict:
+    """Each host materializes only its slice of the global batch (the
+    multi-host data path; on this single-process container n_hosts=1)."""
+    def sl(x):
+        b = x.shape[0]
+        per = b // n_hosts
+        return x[host_id * per:(host_id + 1) * per]
+    return {k: sl(v) for k, v in batch.items()}
+
+
+@dataclasses.dataclass
+class DataCursor:
+    """Resumable pipeline position — checkpointed with the model state."""
+    step: int = 0
+
+    def advance(self) -> "DataCursor":
+        return DataCursor(self.step + 1)

@@ -1,0 +1,164 @@
+"""Optimizers, built from scratch (no optax offline).
+
+Interface (optax-like GradientTransformation):
+
+    opt = sgd(1e-5)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+The paper fine-tunes with plain SGD at lr=1e-5; SGD is therefore the default
+and — being stateless — composes with LAA's delayed updates for free.  Adam
+and momentum are provided for the wider framework; their states are masked on
+LAA-skipped batches in train/steps.py so skipped batches leave them untouched.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, step: jax.Array) -> jax.Array:
+    if callable(lr):
+        return jnp.asarray(lr(step), jnp.float32)
+    return jnp.asarray(lr, jnp.float32)
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+
+
+class MomentumState(NamedTuple):
+    step: jax.Array
+    mu: Any
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def sgd(lr: Schedule = 1e-5) -> Optimizer:
+    def init(params):
+        del params
+        return SGDState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        del params
+        eta = _lr_at(lr, state.step)
+        updates = jax.tree_util.tree_map(lambda g: -eta * g.astype(jnp.float32),
+                                         grads)
+        return updates, SGDState(step=state.step + 1)
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: Schedule = 1e-5, beta: float = 0.9,
+             nesterov: bool = False) -> Optimizer:
+    def init(params):
+        mu = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return MomentumState(step=jnp.zeros((), jnp.int32), mu=mu)
+
+    def update(grads, state, params=None):
+        del params
+        eta = _lr_at(lr, state.step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state.mu, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda m, g: -eta * (beta * m + g.astype(jnp.float32)),
+                mu, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: -eta * m, mu)
+        return upd, MomentumState(step=state.step + 1, mu=mu)
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Schedule = 1e-5, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree_util.tree_map(zeros, params),
+                         nu=jax.tree_util.tree_map(zeros, params))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        eta = _lr_at(lr, state.step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def u(m, v, p):
+            upd = -eta * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                upd = upd - eta * weight_decay * p.astype(jnp.float32)
+            return upd
+
+        if params is not None and weight_decay:
+            updates = jax.tree_util.tree_map(u, mu, nu, params)
+        else:
+            updates = jax.tree_util.tree_map(lambda m, v: u(m, v, None), mu, nu)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def masked_apply(params, opt_state, new_params, new_opt_state, do_update):
+    """Select between (new_params, new_opt_state) and the originals, per
+    LAA's do_update flag, without re-tracing."""
+    sel = lambda old, new: jax.tree_util.tree_map(
+        lambda o, n: jnp.where(do_update, n, o), old, new)
+    return sel(params, new_params), sel(opt_state, new_opt_state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+# -- learning-rate schedules -------------------------------------------------
+
+def cosine_schedule(peak_lr: float, total_steps: int,
+                    warmup_steps: int = 0, floor: float = 0.0) -> Schedule:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return f

@@ -1,0 +1,135 @@
+"""Fault-tolerant training runner.
+
+Responsibilities beyond the bare step loop:
+  * auto-resume: on start, restore the newest valid checkpoint (params,
+    optimizer, BPS, LAA *and* the data cursor) — a preempted/failed job
+    relaunches with the same command and continues;
+  * periodic + final checkpoints (atomic, keep-k);
+  * per-step watchdog: a step that throws (device OOM, numerical panic,
+    simulated fault in tests) triggers an emergency checkpoint of the last
+    good state, then re-raises for the scheduler to restart the job;
+  * metrics: JSONL log (loss, selected bit-width, LAA releases, steps/s).
+
+Straggler/elastic posture at real scale (documented in DESIGN.md §6): SPMD
+steps are synchronous, so per-step stragglers are handled below the JAX
+level (ICI flow control); *persistent* stragglers and node failures are
+handled by this runner's restart path, and elastic resizing works because
+checkpoints are topology-free (train/checkpoint.py) — restore with the new
+mesh's shardings and keep going.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.train import checkpoint as CKPT
+
+
+@dataclasses.dataclass
+class JobConfig:
+    total_steps: int
+    out_dir: str
+    ckpt_every: int = 200
+    keep: int = 3
+    log_every: int = 10
+    resume: bool = True
+    # test hook: raise RuntimeError after this many steps (once)
+    simulate_failure_at: Optional[int] = None
+
+
+class MetricsLogger:
+    def __init__(self, path: str):
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        self.path = path
+        self.history = []
+
+    def log(self, record: dict):
+        self.history.append(record)
+        with open(self.path, "a") as f:
+            f.write(json.dumps(record) + "\n")
+
+
+def run_training(
+    step_fn: Callable,
+    init_state_fn: Callable[[], Any],
+    batch_fn: Callable[[int], Any],
+    job: JobConfig,
+    state_shapes: Any = None,
+    shardings: Any = None,
+    hooks: Optional[dict] = None,
+) -> Any:
+    """Drive training to job.total_steps with checkpoint/restart semantics.
+
+    step_fn(state, batch) -> (state, metrics);  batch_fn(step) -> batch
+    (a pure function of the step index — the resumable data pipeline).
+    """
+    ckpt_dir = os.path.join(job.out_dir, "checkpoints")
+    logger = MetricsLogger(os.path.join(job.out_dir, "metrics.jsonl"))
+    failed_once = {"done": False}
+
+    start_step = 0
+    state = None
+    if job.resume and CKPT.latest_step(ckpt_dir) is not None:
+        like = state_shapes if state_shapes is not None else jax.eval_shape(
+            init_state_fn)
+        state, meta = CKPT.restore_checkpoint(ckpt_dir, like,
+                                              shardings=shardings)
+        start_step = int(meta["extra"]["data_step"])
+        logger.log({"event": "resumed", "step": start_step})
+    if state is None:
+        state = init_state_fn()
+
+    last_good = state
+    last_good_step = start_step
+    t0 = time.time()
+    step = start_step
+    try:
+        while step < job.total_steps:
+            if (job.simulate_failure_at is not None
+                    and not failed_once["done"]
+                    and step == job.simulate_failure_at):
+                failed_once["done"] = True
+                raise RuntimeError(f"simulated node failure at step {step}")
+
+            batch = batch_fn(step)
+            state, metrics = step_fn(state, batch)
+            step += 1
+
+            if step % job.log_every == 0 or step == job.total_steps:
+                rec = {"step": step,
+                       "loss": float(metrics["loss"]),
+                       "m": int(metrics["mantissa_width"]),
+                       "did_update": int(metrics["did_update"]),
+                       "steps_per_s": job.log_every / max(
+                           time.time() - t0, 1e-9)}
+                t0 = time.time()
+                logger.log(rec)
+                if hooks and "on_log" in hooks:
+                    hooks["on_log"](rec, state)
+
+            if step % job.ckpt_every == 0 or step == job.total_steps:
+                CKPT.save_checkpoint(ckpt_dir, step, state,
+                                     extra={"data_step": step},
+                                     keep=job.keep)
+                last_good = state
+                last_good_step = step
+    except Exception as e:
+        # watchdog: persist the last good state for the restart, then
+        # surface the failure to the scheduler.
+        logger.log({"event": "failure", "step": step, "error": repr(e)})
+        try:
+            CKPT.save_checkpoint(ckpt_dir, last_good_step, last_good,
+                                 extra={"data_step": last_good_step},
+                                 keep=job.keep)
+        except Exception:
+            pass
+        raise
+
+    return state, logger.history

@@ -1,0 +1,166 @@
+"""Distributed OTARo train-step construction.
+
+Wires together: model loss (model_zoo) -> gradient-accumulation microbatching
+-> OTARo policy (BPS + STE quantized loss + LAA + optimizer) -> sharding
+(param/batch/state pspecs) -> jit with donation.  Optionally wraps the whole
+step in shard_map over the ``pod`` axis with SEFP-compressed cross-pod
+gradient reduction (train/compression.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import otaro as otaro_lib
+from repro.models import model_zoo as Z
+from repro.models.config import ModelConfig
+from repro.sharding import partition as SH
+from repro.sharding.constraints import batch_layout as batch_layout_ctx
+from repro.train import compression as CM
+from repro.train import optimizer as opt_lib
+
+
+def microbatched(loss_fn, accum: int):
+    """Mean loss over `accum` microbatches via scan — bounds live
+    activations to one microbatch (plus remat'd recompute in backward)."""
+    if accum <= 1:
+        return loss_fn
+
+    def f(params, batch):
+        mb = jax.tree_util.tree_map(
+            lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+            batch)
+
+        def body(tot, b):
+            return tot + loss_fn(params, b), None
+
+        tot, _ = lax.scan(body, jnp.float32(0), mb)
+        return tot / accum
+
+    return f
+
+
+def make_train_step(
+    model_cfg: ModelConfig,
+    ocfg: otaro_lib.OTAROConfig,
+    optimizer: opt_lib.Optimizer,
+    mesh: Optional[Mesh] = None,
+    grad_accum: int = 1,
+    compress_pods_m: Optional[int] = None,
+    donate: bool = True,
+    batch_layout: str = "tp",
+):
+    """Returns (jitted_step, init_fn).
+
+    jitted_step(state, batch) -> (state, metrics)
+    init_fn(rng) -> sharded OTAROState
+    """
+    loss_fn = microbatched(Z.make_loss_fn(model_cfg), grad_accum)
+
+    use_compression = (compress_pods_m is not None and mesh is not None
+                       and "pod" in mesh.axis_names
+                       and mesh.shape["pod"] > 1)
+    if use_compression:
+        n_pods = mesh.shape["pod"]
+        step_core = otaro_lib.make_otaro_step(
+            loss_fn, optimizer, ocfg,
+            grad_transform=lambda g: CM.compressed_allreduce(
+                g, "pod", n_pods, m=compress_pods_m, mean=True),
+            loss_transform=lambda l: lax.pmean(l, "pod"))
+    else:
+        step_core = otaro_lib.make_otaro_step(loss_fn, optimizer, ocfg)
+
+    def init_fn_host(rng):
+        params = Z.init_params(model_cfg, rng)
+        return otaro_lib.init_state(params, optimizer, ocfg)
+
+    if mesh is None:
+        return jax.jit(step_core, donate_argnums=(0,) if donate else ()), \
+            jax.jit(init_fn_host)
+
+    # --- sharded path -----------------------------------------------------
+    state_shapes = jax.eval_shape(init_fn_host, jax.random.PRNGKey(0))
+    state_specs = SH.state_pspecs(state_shapes, mesh)
+    state_shardings = SH.to_named_sharding(state_specs, mesh)
+
+    if use_compression:
+        # the step runs pod-manual: every pod sees the full (replicated)
+        # state and its own batch shard; data/model stay GSPMD-auto inside.
+        def stepper(state, batch):
+            with batch_layout_ctx(batch_layout):
+                return jax.shard_map(
+                    step_core, mesh=mesh, in_specs=(P(), P("pod")),
+                    out_specs=P(), axis_names={"pod"}, check_vma=False)(
+                    state, batch)
+    else:
+        def stepper(state, batch):
+            # trace-time context: in-model sharding constraints must agree
+            # with the batch layout (tp vs dp)
+            with batch_layout_ctx(batch_layout):
+                return step_core(state, batch)
+
+    def make_batch_shardings(batch_shapes):
+        # compressed path: dim0 carries only the (manual) pod axis at the
+        # jit boundary; data-sharding happens inside the shard_map body via
+        # constraints (manual + auto axes cannot share a dim spec)
+        input_layout = "pod" if use_compression else batch_layout
+        return SH.to_named_sharding(
+            SH.batch_pspecs(batch_shapes, mesh, layout=input_layout), mesh)
+
+    def jit_step(batch_shapes):
+        return jax.jit(
+            stepper,
+            in_shardings=(state_shardings, make_batch_shardings(batch_shapes)),
+            out_shardings=(state_shardings, None),
+            donate_argnums=(0,) if donate else (),
+        )
+
+    init_jit = jax.jit(init_fn_host, out_shardings=state_shardings)
+    return jit_step, init_jit
+
+
+def make_eval_step(model_cfg: ModelConfig, ocfg: otaro_lib.OTAROConfig):
+    """eval_step(params, batch, m) -> loss at SEFP precision m."""
+    loss_fn = Z.make_loss_fn(model_cfg)
+    return jax.jit(otaro_lib.make_eval_fn(loss_fn, ocfg))
+
+
+def train_step_artifacts(
+    model_cfg: ModelConfig,
+    ocfg: otaro_lib.OTAROConfig,
+    optimizer: opt_lib.Optimizer,
+    mesh: Mesh,
+    batch_shapes,
+    grad_accum: int = 1,
+    compress_pods_m: Optional[int] = None,
+    batch_layout: str = "tp",
+    master_dtype=None,
+):
+    """Everything the dry-run needs: (jitted step, state ShapeDtypeStructs,
+    state shardings).  Nothing is allocated.  master_dtype=jnp.bfloat16
+    traces the step with bf16 master weights + LAA buffers (the
+    memory-capacity variant for very large models)."""
+    jit_builder, _ = make_train_step(
+        model_cfg, ocfg, optimizer, mesh=mesh, grad_accum=grad_accum,
+        compress_pods_m=compress_pods_m, donate=True,
+        batch_layout=batch_layout)
+
+    def init_fn_host(rng):
+        params = Z.init_params(model_cfg, rng)
+        return otaro_lib.init_state(params, optimizer, ocfg)
+
+    state_shapes = jax.eval_shape(init_fn_host, jax.random.PRNGKey(0))
+    if master_dtype is not None:
+        state_shapes = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, master_dtype)
+            if x.dtype == jnp.float32 and len(x.shape) >= 2 else x,
+            state_shapes)
+    state_specs = SH.state_pspecs(state_shapes, mesh)
+    return jit_builder(batch_shapes), state_shapes, \
+        SH.to_named_sharding(state_specs, mesh)

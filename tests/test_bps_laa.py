@@ -1,0 +1,206 @@
+"""Tests for the BPS bandit, the LAA accumulator, and the combined OTARo step
+(paper Algorithm 1) on a toy regression problem."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bps as bps_lib
+from repro.core import laa as laa_lib
+from repro.core import otaro as otaro_lib
+from repro.core import sefp
+from repro.train import optimizer as opt_lib
+
+
+class TestBPS:
+    def test_must_explore_all_arms_first(self):
+        state = bps_lib.init(6)
+        picked = []
+        for step in range(6):
+            arm, m = bps_lib.select(state, lam=5.0)
+            picked.append(int(arm))
+            state = bps_lib.update(state, arm, jnp.float32(1.0))
+        assert sorted(picked) == list(range(6))
+
+    def test_converges_to_lower_loss_arm(self):
+        # Arm losses: higher widths (low arm index) have lower loss, as in
+        # the paper.  After warmup, high widths must dominate selections.
+        losses = np.array([0.5, 0.55, 0.6, 0.7, 0.9, 1.4], np.float32)
+        state = bps_lib.init(6)
+        counts = np.zeros(6, int)
+        key = 0
+        for t in range(400):
+            arm, m = bps_lib.select(state, lam=0.5)
+            a = int(arm)
+            counts[a] += 1
+            noisy = losses[a] + 0.01 * np.sin(t * 0.7 + a)
+            state = bps_lib.update(state, arm, jnp.float32(noisy))
+        # the best (highest-width) arm is selected most often
+        assert counts[0] == counts.max()
+        # but every arm keeps being explored (diversity)
+        assert (counts > 0).all()
+
+    def test_score_formula(self):
+        state = bps_lib.BPSState(
+            t=jnp.int32(100),
+            t_b=jnp.asarray([50, 25, 25, 0, 0, 0], jnp.int32),
+            loss_b=jnp.asarray([1.0, 2.0, 0.5, 0, 0, 0], jnp.float32))
+        s = np.asarray(bps_lib.scores(state, lam=5.0))
+        expect0 = 5.0 * np.sqrt(np.log(100) / 50) - 1.0
+        assert abs(s[0] - expect0) < 1e-5
+        assert np.isinf(s[3]) and s[3] > 0  # unvisited arm forced
+
+    def test_uniform_cycles(self):
+        ms = [int(bps_lib.uniform_select(jnp.int32(i))[1]) for i in range(12)]
+        assert ms == [8, 7, 6, 5, 4, 3] * 2
+
+
+class TestLAA:
+    def test_high_precision_passthrough(self):
+        g = {"w": jnp.ones((4,))}
+        st = laa_lib.init(g)
+        eff, do, st2 = laa_lib.step(st, g, jnp.asarray(False), n_delay=3)
+        assert bool(do)
+        np.testing.assert_array_equal(np.asarray(eff["w"]), 1.0)
+        np.testing.assert_array_equal(np.asarray(st2.buf["w"]), 0.0)
+        assert int(st2.count) == 0
+
+    def test_accumulate_and_release(self):
+        g1 = {"w": jnp.full((2,), 1.0)}
+        g2 = {"w": jnp.full((2,), 2.0)}
+        g3 = {"w": jnp.full((2,), 4.0)}
+        st = laa_lib.init(g1)
+        eff, do, st = laa_lib.step(st, g1, jnp.asarray(True), n_delay=3)
+        assert not bool(do)
+        np.testing.assert_array_equal(np.asarray(eff["w"]), 0.0)
+        eff, do, st = laa_lib.step(st, g2, jnp.asarray(True), n_delay=3)
+        assert not bool(do)
+        eff, do, st = laa_lib.step(st, g3, jnp.asarray(True), n_delay=3)
+        assert bool(do)
+        # released gradient is the SUM over the 3 low-bit batches (Eq. 18)
+        np.testing.assert_array_equal(np.asarray(eff["w"]), 7.0)
+        assert int(st.count) == 0
+        np.testing.assert_array_equal(np.asarray(st.buf["w"]), 0.0)
+
+    def test_asynchronous_across_high_batches(self):
+        # Buffer must survive interleaved high-precision batches.
+        glow = {"w": jnp.full((1,), 1.0)}
+        ghigh = {"w": jnp.full((1,), 100.0)}
+        st = laa_lib.init(glow)
+        _, do, st = laa_lib.step(st, glow, jnp.asarray(True), n_delay=2)
+        assert not bool(do)
+        eff, do, st = laa_lib.step(st, ghigh, jnp.asarray(False), n_delay=2)
+        assert bool(do) and float(eff["w"][0]) == 100.0
+        assert float(st.buf["w"][0]) == 1.0  # untouched
+        eff, do, st = laa_lib.step(st, glow, jnp.asarray(True), n_delay=2)
+        assert bool(do)
+        np.testing.assert_array_equal(np.asarray(eff["w"]), 2.0)
+
+    def test_noise_averaging_property(self):
+        # Eq. 17: relative perturbation of the released update shrinks ~
+        # 1/sqrt(N).  Simulate grad = mean + zero-mean noise.
+        rng = np.random.default_rng(0)
+        mean = 1.0
+        for n in (4, 16, 64):
+            st = laa_lib.init({"w": jnp.zeros((512,))})
+            rels = []
+            for trial in range(8):
+                for i in range(n):
+                    g = {"w": jnp.asarray(
+                        mean + rng.normal(size=512).astype(np.float32))}
+                    eff, do, st = laa_lib.step(st, g, jnp.asarray(True), n)
+                rel = np.linalg.norm(np.asarray(eff["w"]) / n - mean) \
+                    / np.sqrt(512)
+                rels.append(rel)
+            # noise of the averaged update ~ sigma/sqrt(n)
+            assert np.mean(rels) < 2.0 / np.sqrt(n)
+
+
+def _toy_setup(mode, seed=0, **cfg_kw):
+    """Tiny quadratic-ish regression: y = x @ W_true, model y = x @ W."""
+    rng = np.random.default_rng(seed)
+    w_true = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    w0 = jnp.asarray(rng.normal(size=(64, 8)) * 0.5, jnp.float32)
+    params = {"w": w0}
+
+    def loss_fn(p, batch):
+        x, y = batch
+        pred = x @ p["w"]
+        return jnp.mean((pred - y) ** 2)
+
+    cfg = otaro_lib.OTAROConfig(mode=mode, min_size=1, laa_n=3, **cfg_kw)
+    opt = opt_lib.sgd(5e-2)
+    step = jax.jit(otaro_lib.make_otaro_step(loss_fn, opt, cfg))
+    state = otaro_lib.init_state(params, opt, cfg)
+
+    def batch(i):
+        r = np.random.default_rng(1000 + i)
+        x = jnp.asarray(r.normal(size=(32, 64)), jnp.float32)
+        return x, x @ w_true
+
+    return state, step, batch, loss_fn, cfg
+
+
+class TestOTAROStep:
+    def test_loss_decreases(self):
+        # Evaluate at the highest width (m=8) before/after training; the
+        # per-step metrics loss mixes bit-widths (low widths have a high
+        # quantization floor) so it is not a clean convergence signal.
+        state, step, batch, loss_fn, cfg = _toy_setup("otaro")
+        evalf = jax.jit(otaro_lib.make_eval_fn(loss_fn, cfg))
+        eb = batch(9_999)
+        before = float(evalf(state.params, eb, jnp.int32(8)))
+        for i in range(200):
+            state, _ = step(state, batch(i))
+        after = float(evalf(state.params, eb, jnp.int32(8)))
+        assert after < before * 0.3, (before, after)
+
+    def test_single_compilation_across_widths(self):
+        state, step, batch, loss_fn, cfg = _toy_setup("otaro")
+        with jax.log_compiles(False):
+            lowered = step.lower(state, batch(0))
+        compiled = lowered.compile()
+        # run many steps through ONE executable; widths must vary
+        widths = set()
+        for i in range(30):
+            state, metrics = compiled(state, batch(i))
+            widths.add(int(metrics["mantissa_width"]))
+        assert len(widths) >= 3, widths
+
+    def test_fixed_mode_uses_fixed_width(self):
+        state, step, batch, *_ = _toy_setup("fixed", fixed_m=4)
+        for i in range(5):
+            state, metrics = step(state, batch(i))
+            assert int(metrics["mantissa_width"]) == 4
+
+    def test_fp16_mode_never_updates_laa(self):
+        state, step, batch, *_ = _toy_setup("fp16")
+        for i in range(5):
+            state, metrics = step(state, batch(i))
+            assert int(metrics["did_update"]) == 1
+
+    def test_otaro_beats_fixed_low_on_mixed_eval(self):
+        # The paper's headline: after fine-tuning, OTARo's AVERAGE loss over
+        # all widths is <= fixed-high-precision fine-tuning's.
+        results = {}
+        for mode, kw in [("otaro", {}), ("fixed", {"fixed_m": 8})]:
+            state, step, batch, loss_fn, cfg = _toy_setup(mode, seed=3, **kw)
+            for i in range(250):
+                state, _ = step(state, batch(i))
+            evalf = jax.jit(otaro_lib.make_eval_fn(loss_fn, cfg))
+            eb = batch(10_000)
+            losses = [float(evalf(state.params, eb, jnp.int32(m)))
+                      for m in sefp.MANTISSA_WIDTHS]
+            results[mode] = np.mean(losses)
+        assert results["otaro"] <= results["fixed"] * 1.05, results
+
+    def test_laa_state_masking(self):
+        # On LAA-held batches params must be bit-identical.
+        state, step, batch, *_ = _toy_setup("otaro")
+        prev = np.asarray(state.params["w"])
+        for i in range(40):
+            state, metrics = step(state, batch(i))
+            cur = np.asarray(state.params["w"])
+            if int(metrics["did_update"]) == 0:
+                np.testing.assert_array_equal(cur, prev)
+            prev = cur

@@ -1,0 +1,96 @@
+"""Tests for the dry-run tooling: HLO collective parsing (incl. loop-body
+attribution) and the analytic cost model's consistency with real configs."""
+
+import math
+
+import jax
+import pytest
+
+from repro import configs as C
+from repro.models import model_zoo as Z
+from repro.models.config import SHAPES
+
+from benchmarks import costmodel
+from repro.launch.dryrun import parse_collective_bytes
+
+FAKE_HLO = """
+HloModule test
+
+%body.1 (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %ar.1 = f32[128,256] all-reduce(%x), replica_groups={{0,1}}, to_apply=%add
+  %cp.1 = f32[64]{0} collective-permute(%y), source_target_pairs={{0,1}}
+}
+
+%cond.1 (p: (s32[], f32[128,256])) -> pred[] {
+  %lt = pred[] compare(%a, %b), direction=LT
+}
+
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %w = (s32[], f32[128,256]) while(%init), condition=%cond.1, body=%body.1
+  %ag.1 = bf16[512,512] all-gather(%z), replica_groups=[2,2]<=[4], dimensions={0}
+  %rs.1 = (f32[16,16], f32[16,16]) reduce-scatter(%u, %v), dimensions={0}
+}
+"""
+
+
+class TestCollectiveParse:
+    def test_counts_and_bytes(self):
+        out = parse_collective_bytes(FAKE_HLO)
+        assert out["all-reduce"]["count"] == 1
+        assert out["all-reduce"]["bytes"] == 128 * 256 * 4
+        assert out["all-gather"]["count"] == 1
+        assert out["all-gather"]["bytes"] == 512 * 512 * 2
+        # tuple output: both elements counted
+        assert out["reduce-scatter"]["bytes"] == 2 * 16 * 16 * 4
+        assert out["collective-permute"]["bytes"] == 64 * 4
+
+    def test_loop_attribution(self):
+        out = parse_collective_bytes(FAKE_HLO)
+        # ops inside %body.1 are loop bytes; entry ops are top-level
+        assert out["all-reduce"]["loop_bytes"] == 128 * 256 * 4
+        assert out["collective-permute"]["loop_bytes"] == 64 * 4
+        assert out["all-gather"]["loop_bytes"] == 0
+        assert out["loop_bytes"] == 128 * 256 * 4 + 64 * 4
+        assert out["top_level_bytes"] == (512 * 512 * 2 + 2 * 16 * 16 * 4)
+
+
+class TestCostModel:
+    @pytest.mark.parametrize("arch", C.ASSIGNED)
+    def test_param_count_matches_eval_shape(self, arch):
+        cfg = C.get_config(arch)
+        analytic, _ = costmodel.param_counts(cfg)
+        shapes = jax.eval_shape(
+            lambda: Z.init_params(cfg, jax.random.PRNGKey(0)))
+        real = sum(math.prod(x.shape)
+                   for x in jax.tree_util.tree_leaves(shapes))
+        assert abs(analytic - real) / real < 0.05, (arch, analytic, real)
+
+    def test_moe_active_less_than_total(self):
+        cfg = C.get_config("grok_1_314b")
+        total, active = costmodel.param_counts(cfg)
+        assert active < 0.5 * total  # top-2 of 8 experts
+
+    @pytest.mark.parametrize("arch", C.ASSIGNED)
+    @pytest.mark.parametrize("shape", list(SHAPES))
+    def test_cell_cost_finite_positive(self, arch, shape):
+        from repro.models.config import shape_applicable
+        cfg = C.get_config(arch)
+        sh = SHAPES[shape]
+        if not shape_applicable(cfg, sh)[0]:
+            return
+        cost = costmodel.cell_cost(cfg, sh)
+        assert cost.flops > 0 and cost.hbm_bytes > 0
+        assert cost.model_flops > 0
+        # train compute must dominate decode compute by orders of magnitude
+        if sh.kind == "train":
+            dec = costmodel.cell_cost(cfg, SHAPES["decode_32k"])
+            assert cost.flops > 100 * dec.flops
+
+    def test_train_flops_close_to_6nd(self):
+        # dense archs: analytic total ~ 6*N*D within ~2.5x (attention+logits
+        # overhead on top of the 6ND matmul floor)
+        for arch in ("minitron_8b", "yi_9b", "qwen2_1_5b"):
+            cfg = C.get_config(arch)
+            cost = costmodel.cell_cost(cfg, SHAPES["train_4k"])
+            ratio = cost.flops / cost.model_flops
+            assert 0.8 < ratio < 2.5, (arch, ratio)

@@ -1,0 +1,135 @@
+"""Per-kernel validation: shape/dtype sweeps asserting allclose against the
+pure-jnp oracles (interpret=True executes kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packed as packed_lib
+from repro.core import sefp as sefp_core
+from repro.kernels.sefp_quant import sefp_quantize_pallas
+from repro.kernels.sefp_quant.ref import sefp_quantize_ref
+from repro.kernels.sefp_matmul import sefp_matmul
+from repro.kernels.sefp_matmul.ref import sefp_matmul_ref
+
+
+def rand(shape, seed=0, scale=1.0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+QUANT_SHAPES = [(64, 128), (128, 128), (256, 512), (192, 384), (640, 256)]
+MM_SHAPES = [  # (M, K, N)
+    (8, 64, 128),
+    (16, 128, 128),
+    (128, 256, 512),
+    (1, 512, 256),
+    (64, 384, 192),
+]
+
+
+class TestSefpQuantKernel:
+    @pytest.mark.parametrize("shape", QUANT_SHAPES)
+    @pytest.mark.parametrize("m", [8, 5, 3])
+    def test_matches_ref(self, shape, m):
+        w = rand(shape, seed=shape[0] + m)
+        out = sefp_quantize_pallas(w, m)
+        ref = sefp_quantize_ref(w, m)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=0, atol=0)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        w = rand((128, 256), seed=1, dtype=dtype)
+        out = sefp_quantize_pallas(w, 5)
+        ref = sefp_quantize_ref(w, 5)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            rtol=0, atol=0)
+
+    def test_matches_core_semantics(self):
+        # kernel == the framework-wide fake-quant (core.sefp) semantics
+        w = rand((256, 128), seed=2)
+        for m in sefp_core.MANTISSA_WIDTHS:
+            out = sefp_quantize_pallas(w, m)
+            core = sefp_core.sefp_quantize(w, m, group_axis=0)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(core),
+                                       rtol=0, atol=0)
+
+    def test_dynamic_m_one_executable(self):
+        w = rand((128, 128), seed=3)
+        outs = {m: np.asarray(sefp_quantize_pallas(w, jnp.int32(m)))
+                for m in (8, 6, 3)}
+        for m, o in outs.items():
+            np.testing.assert_allclose(
+                o, np.asarray(sefp_quantize_ref(w, m)), rtol=0, atol=0)
+
+    def test_extreme_scales(self):
+        for scale in (1e-6, 1.0, 1e4):
+            w = rand((64, 128), seed=4, scale=scale)
+            out = sefp_quantize_pallas(w, 4)
+            ref = sefp_quantize_ref(w, 4)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=0, atol=0)
+            assert jnp.isfinite(out).all()
+
+
+class TestSefpMatmulKernel:
+    @pytest.mark.parametrize("mkn", MM_SHAPES)
+    @pytest.mark.parametrize("m_bits", [8, 6, 4, 3])
+    def test_matches_ref(self, mkn, m_bits):
+        M, K, N = mkn
+        x = rand((M, K), seed=M + K)
+        w = rand((K, N), seed=K + N)
+        p = packed_lib.pack(w, group_axis=0)
+        out = sefp_matmul(x, p, m_bits)
+        ref = sefp_matmul_ref(x, p.mag, p.sign_bits, p.exp, m_bits)
+        # fp32 accumulation order differs between tiled and single dot
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_matches_dequant_matmul(self):
+        # end-to-end: kernel == x @ core.packed.dequantize(p, m) in bf16
+        x = rand((32, 256), seed=7)
+        w = rand((256, 128), seed=8)
+        p = packed_lib.pack(w, group_axis=0)
+        for m_bits in (8, 5, 3):
+            out = sefp_matmul(x, p, m_bits)
+            wd = packed_lib.dequantize(p, m_bits).astype(jnp.bfloat16)
+            ref = jnp.dot(x.astype(jnp.bfloat16), wd,
+                          preferred_element_type=jnp.float32)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-3, atol=2e-3)
+
+    def test_batched_leading_dims(self):
+        x = rand((2, 4, 128), seed=9)
+        w = rand((128, 64), seed=10)
+        p = packed_lib.pack(w, group_axis=0)
+        out = sefp_matmul(x, p, 6)
+        assert out.shape == (2, 4, 64)
+        flat = sefp_matmul(x.reshape(8, 128), p, 6)
+        np.testing.assert_array_equal(np.asarray(out).reshape(8, 64),
+                                      np.asarray(flat))
+
+    def test_runtime_precision_switch_is_cheap(self):
+        # same jitted executable must serve all widths (no recompile):
+        # results at each width equal the per-width oracle.
+        x = rand((16, 128), seed=11)
+        w = rand((128, 128), seed=12)
+        p = packed_lib.pack(w, group_axis=0)
+        for m_bits in (8, 7, 6, 5, 4, 3):
+            out = sefp_matmul(x, p, jnp.int32(m_bits))
+            ref = sefp_matmul_ref(x, p.mag, p.sign_bits, p.exp, m_bits)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-3, atol=2e-3)
+
+    def test_truncation_improves_with_width(self):
+        x = rand((8, 512), seed=13)
+        w = rand((512, 64), seed=14)
+        p = packed_lib.pack(w, group_axis=0)
+        exact = np.asarray(x @ w)
+        errs = [float(np.abs(np.asarray(sefp_matmul(x, p, m)) - exact).mean())
+                for m in (8, 6, 4, 3)]
+        assert errs[0] <= errs[1] <= errs[2] <= errs[3]

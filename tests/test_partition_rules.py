@@ -1,0 +1,132 @@
+"""Unit tests for the sharding rules (repro/sharding/partition.py):
+path-based dispatch, divisibility fallback, stacked/expert leading dims,
+batch layouts, cache layouts."""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.sharding import partition as SH  # noqa: E402
+
+
+def mesh2(data=4, model=2):
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class TestParamRules:
+    def test_column_and_row_parallel(self):
+        mesh = mesh2()
+        tree = {"layers": {"attn": {"wq": sds((8, 16)), "wo": sds((16, 8))},
+                           "mlp": {"w_gate": sds((8, 32)),
+                                   "w_down": sds((32, 8))}}}
+        specs = SH.param_pspecs(tree, mesh)
+        assert specs["layers"]["attn"]["wq"] == P("data", "model")
+        assert specs["layers"]["attn"]["wo"] == P("model", "data")
+        assert specs["layers"]["mlp"]["w_gate"] == P("data", "model")
+        assert specs["layers"]["mlp"]["w_down"] == P("model", "data")
+
+    def test_stacked_and_expert_leading_dims_replicated(self):
+        mesh = mesh2()
+        tree = {"w_gate": sds((6, 8, 16)),          # [L, in, out]
+                "w_down": sds((6, 3, 16, 8))}       # [L, E, in, out]
+        specs = SH.param_pspecs(tree, mesh)
+        assert specs["w_gate"] == P(None, "data", "model")
+        assert specs["w_down"] == P(None, None, "model", "data")
+
+    def test_divisibility_fallback(self):
+        mesh = mesh2(data=4, model=2)
+        tree = {"wq": sds((7, 16)),       # 7 % 4 != 0 -> in dim replicated
+                "w_unembed": sds((8, 9))}  # 9 % 2 != 0 -> vocab replicated
+        specs = SH.param_pspecs(tree, mesh)
+        assert specs["wq"] == P(None, "model")
+        assert specs["w_unembed"] == P("data", None)
+
+    def test_small_params_replicated(self):
+        mesh = mesh2()
+        tree = {"norm_scale": sds((8,)), "q_bias": sds((16,))}
+        specs = SH.param_pspecs(tree, mesh)
+        assert specs["norm_scale"] == P()
+        assert specs["q_bias"] == P()
+
+    def test_packed_leaves_inherit_rule(self):
+        mesh = mesh2()
+        tree = {"wq": {"sefp_codes": sds((8, 16), jnp.int8),
+                       "exp": sds((2, 16), jnp.int8)}}
+        specs = SH.param_pspecs(tree, mesh)
+        assert specs["wq"]["sefp_codes"] == P("data", "model")
+        # exp dim0 (K/64 = 2) is not divisible by data=4 -> fallback
+        assert specs["wq"]["exp"] == P(None, "model")
+        big = {"wo": {"sefp_codes": sds((64, 16), jnp.int8),
+                      "exp": sds((1, 16), jnp.int8)}}
+        specs = SH.param_pspecs(big, mesh)
+        assert specs["wo"]["sefp_codes"] == P("model", "data")
+
+    def test_embedding_model_sharded_on_dmodel(self):
+        mesh = mesh2()
+        specs = SH.param_pspecs({"embedding": sds((100, 16))}, mesh)
+        assert specs["embedding"] == P(None, "model")
+
+
+class TestBatchLayouts:
+    def test_tp_layout(self):
+        mesh = mesh2()
+        specs = SH.batch_pspecs({"inputs": sds((8, 32), jnp.int32)}, mesh)
+        assert specs["inputs"] == P(("data",), None)
+
+    def test_dp_layout_uses_model_axis(self):
+        mesh = mesh2()
+        specs = SH.batch_pspecs({"inputs": sds((8, 32), jnp.int32)}, mesh,
+                                layout="dp")
+        assert specs["inputs"] == P(("data", "model"), None)
+
+    def test_pod_layout(self):
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        specs = SH.batch_pspecs({"inputs": sds((8, 32), jnp.int32)}, mesh,
+                                layout="pod")
+        assert specs["inputs"] == P(("pod",), None)
+
+    def test_indivisible_batch_falls_back(self):
+        mesh = mesh2(data=4, model=2)
+        specs = SH.batch_pspecs({"inputs": sds((2, 32), jnp.int32)}, mesh)
+        assert specs["inputs"] == P()
+
+
+class TestCacheLayouts:
+    KV = {"layers": {"k": sds((4, 8, 64, 2, 16)),
+                     "v": sds((4, 8, 64, 2, 16))}}
+
+    def test_seq_layout(self):
+        mesh = mesh2(data=4, model=2)
+        specs = SH.cache_pspecs(self.KV, mesh)
+        assert specs["layers"]["k"] == P(None, ("data",), "model", None,
+                                         None)
+
+    def test_heads_layout_when_divisible(self):
+        mesh = mesh2(data=4, model=2)
+        specs = SH.cache_pspecs(self.KV, mesh, kv_layout="heads")
+        assert specs["layers"]["k"] == P(None, ("data",), None, "model",
+                                         None)
+
+    def test_heads_layout_falls_back_to_seq(self):
+        mesh = mesh2(data=2, model=4)  # KV=2 not divisible by 4
+        specs = SH.cache_pspecs(self.KV, mesh, kv_layout="heads")
+        assert specs["layers"]["k"] == P(None, ("data",), "model", None,
+                                         None)
+
+    def test_ssm_state_heads_sharded(self):
+        mesh = mesh2(data=4, model=2)
+        tree = {"layers": {"ssm_state": sds((4, 8, 6, 16, 16))}}
+        specs = SH.cache_pspecs(tree, mesh)
+        assert specs["layers"]["ssm_state"] == P(None, ("data",), "model",
+                                                 None, None)

@@ -1,0 +1,66 @@
+"""Hypothesis property tests for the system's control-flow invariants
+(BPS bandit accounting, LAA gradient conservation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bps as bps_lib
+from repro.core import laa as laa_lib
+
+
+@settings(max_examples=30, deadline=None)
+@given(losses=st.lists(st.floats(0.1, 10.0), min_size=8, max_size=40),
+       lam=st.floats(0.1, 10.0))
+def test_bps_counter_conservation(losses, lam):
+    """t == sum(t_b) after any update sequence, and every arm is visited
+    once before any arm is visited twice (forced exploration)."""
+    state = bps_lib.init(6)
+    first_six = []
+    for i, loss in enumerate(losses):
+        arm, m = bps_lib.select(state, lam=lam)
+        if i < 6:
+            first_six.append(int(arm))
+        state = bps_lib.update(state, arm, jnp.float32(loss))
+    assert int(state.t) == len(losses)
+    assert int(state.t_b.sum()) == len(losses)
+    assert sorted(first_six) == list(range(6))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seq=st.lists(st.tuples(st.floats(-3, 3), st.booleans()),
+                    min_size=1, max_size=40),
+       n_delay=st.integers(1, 7))
+def test_laa_gradient_conservation(seq, n_delay):
+    """Exact conservation: sum(applied effective grads) + final buffer ==
+    sum(all grads).  Holds for ANY interleaving of low/high batches — the
+    asynchronous buffer neither loses nor double-counts gradient mass."""
+    state = laa_lib.init({"w": jnp.zeros((3,))})
+    applied = np.zeros(3)
+    total = np.zeros(3)
+    for val, is_low in seq:
+        g = {"w": jnp.full((3,), val, jnp.float32)}
+        total += np.asarray(g["w"])
+        eff, do, state = laa_lib.step(state, g, jnp.asarray(is_low), n_delay)
+        if bool(do):
+            applied += np.asarray(eff["w"])
+    remainder = np.asarray(state.buf["w"])
+    np.testing.assert_allclose(applied + remainder, total,
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_low=st.integers(1, 30), n_delay=st.integers(1, 7))
+def test_laa_release_cadence(n_low, n_delay):
+    """Updates are released exactly every n_delay low batches."""
+    state = laa_lib.init({"w": jnp.zeros(())})
+    releases = 0
+    for i in range(n_low):
+        g = {"w": jnp.ones(())}
+        eff, do, state = laa_lib.step(state, g, jnp.asarray(True), n_delay)
+        if bool(do):
+            releases += 1
+            np.testing.assert_allclose(float(eff["w"]), n_delay)
+    assert releases == n_low // n_delay
+    assert int(state.count) == n_low % n_delay

@@ -1,0 +1,59 @@
+"""sefp_pack kernel validation: shape sweep, bitwise agreement with both
+its standalone oracle and the framework-wide core/packed.pack, and
+end-to-end round-trip through the serving matmul kernel."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packed as packed_lib
+from repro.kernels.sefp_pack import sefp_pack_pallas
+from repro.kernels.sefp_pack.ref import sefp_pack_ref
+
+
+def rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+SHAPES = [(64, 128), (128, 128), (256, 384), (640, 256)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_matches_ref_bitwise(shape):
+    w = rand(shape, seed=shape[0])
+    p = sefp_pack_pallas(w)
+    mag, sgn, exp = sefp_pack_ref(w)
+    np.testing.assert_array_equal(np.asarray(p.mag), np.asarray(mag))
+    np.testing.assert_array_equal(np.asarray(p.sign_bits), np.asarray(sgn))
+    np.testing.assert_array_equal(np.asarray(p.exp), np.asarray(exp))
+
+
+@pytest.mark.parametrize("scale", [1e-4, 1.0, 1e3])
+def test_matches_core_pack_bitwise(scale):
+    w = rand((128, 256), seed=3, scale=scale)
+    p_kernel = sefp_pack_pallas(w)
+    p_core = packed_lib.pack(w, group_axis=0)
+    np.testing.assert_array_equal(np.asarray(p_kernel.mag),
+                                  np.asarray(p_core.mag))
+    np.testing.assert_array_equal(np.asarray(p_kernel.sign_bits),
+                                  np.asarray(p_core.sign_bits))
+    np.testing.assert_array_equal(np.asarray(p_kernel.exp),
+                                  np.asarray(p_core.exp))
+
+
+def test_roundtrip_through_serving_kernel():
+    """pack (kernel) -> matmul (kernel) == pack (core) -> dequant matmul."""
+    from repro.kernels.sefp_matmul import sefp_matmul
+
+    w = rand((256, 128), seed=4)
+    x = rand((8, 256), seed=5)
+    p = sefp_pack_pallas(w)
+    out = sefp_matmul(x, p, 5)
+    wd = packed_lib.dequantize(packed_lib.pack(w, group_axis=0), 5,
+                               dtype=jnp.bfloat16)
+    ref = jnp.dot(x.astype(jnp.bfloat16), wd,
+                  preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)

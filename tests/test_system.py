@@ -1,0 +1,63 @@
+"""End-to-end behaviour test for the paper's system: once fine-tuning ->
+one model robust at every precision -> packed deployment with runtime
+switching.  This is the full OTARo pipeline (Algorithm 1 + Fig. 1) in one
+test."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (OTAROConfig, init_state, make_eval_fn,
+                        make_otaro_step)
+from repro.models import ModelConfig, init_params, make_loss_fn
+from repro.serve import SwitchableServer
+from repro.train import sgd
+from repro.train.data import SyntheticCorpus
+
+CFG = ModelConfig(name="e2e", family="dense", n_layers=2, d_model=128,
+                  n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256,
+                  vocab_size=512, q_block=32, kv_block=32, loss_chunk=32,
+                  remat="none", dtype="float32")
+
+
+def test_once_tuning_for_all_precisions_end_to_end():
+    corpus = SyntheticCorpus(vocab_size=CFG.vocab_size, seed=0)
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    loss_fn = make_loss_fn(CFG)
+
+    # --- once fine-tuning (BPS + LAA, paper defaults) ---------------------
+    ocfg = OTAROConfig(mode="otaro", lam=5.0, laa_n=10)
+    opt = sgd(0.15)
+    step = jax.jit(make_otaro_step(loss_fn, opt, ocfg))
+    state = init_state(params, opt, ocfg)
+    widths_seen = set()
+    for i in range(150):
+        batch = {k: jnp.asarray(v) for k, v in corpus.batch(i, 8, 64).items()}
+        state, metrics = step(state, batch)
+        widths_seen.add(int(metrics["mantissa_width"]))
+    assert len(widths_seen) >= 4, widths_seen  # BPS explored the widths
+
+    # --- ONE model, robust across every precision -------------------------
+    evalf = jax.jit(make_eval_fn(loss_fn, ocfg))
+    eb = {k: jnp.asarray(v) for k, v in corpus.batch(10**7, 8, 64).items()}
+    ppl = {m: float(jnp.exp(evalf(state.params, eb, jnp.int32(m))))
+           for m in (8, 7, 6, 5, 4, 3)}
+    assert ppl[8] < 200  # learned the language (vocab 512, structured)
+    # robustness: even E5M3 stays within 25% of E5M8
+    assert ppl[3] < 1.25 * ppl[8], ppl
+
+    # --- deploy: pack once, switch precision at runtime -------------------
+    server = SwitchableServer(CFG, state.params, max_len=96)
+    rep = server.memory_report()
+    assert rep["master_bytes"] < 0.65 * rep["fp16_bytes"]
+    prompts = np.asarray(corpus.batch(0, 2, 17)["inputs"][:, :16])
+    for m in (8, 4, 3):
+        server.set_precision(m)
+        out = server.generate(prompts, max_new=6)
+        assert out.tokens.shape == (2, 6)
+        assert (out.tokens >= 0).all() and (out.tokens < CFG.vocab_size).all()
+
+    # mid-generation switching (prefill high, decode low) keeps the cache
+    sched = lambda i: 8 if i < 3 else 3
+    out = server.generate(prompts, max_new=6, precision_schedule=sched)
+    assert out.precision_trace == [8, 8, 8, 3, 3, 3]

@@ -1,0 +1,271 @@
+"""Training-substrate tests: data pipeline determinism, checkpoint
+atomicity + restart, elastic restore, gradient compression, distributed
+step integration.  Runs on 8 fake CPU devices (set before jax init)."""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import otaro as otaro_lib  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.sharding import partition as SH  # noqa: E402
+from repro.train import checkpoint as CKPT  # noqa: E402
+from repro.train import compression as CM  # noqa: E402
+from repro.train import data as data_lib  # noqa: E402
+from repro.train import optimizer as opt_lib  # noqa: E402
+from repro.train import runner as runner_lib  # noqa: E402
+from repro.train import steps as steps_lib  # noqa: E402
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                   head_dim=16, q_block=16, kv_block=16, loss_chunk=16,
+                   remat="none", dtype="float32")
+
+
+class TestData:
+    def test_deterministic(self):
+        c = data_lib.SyntheticCorpus(vocab_size=256, seed=7)
+        b1 = c.batch(3, 4, 32)
+        b2 = c.batch(3, 4, 32)
+        np.testing.assert_array_equal(b1["inputs"], b2["inputs"])
+        b3 = c.batch(4, 4, 32)
+        assert not np.array_equal(b1["inputs"], b3["inputs"])
+
+    def test_learnable_structure(self):
+        # bigram statistics must be far from uniform (a model can learn it)
+        c = data_lib.SyntheticCorpus(vocab_size=64, seed=1)
+        toks = np.concatenate(
+            [c.batch(i, 1, 512)["inputs"][0] for i in range(8)])
+        # empirical successor entropy per token << log2(V)
+        from collections import Counter, defaultdict
+        succ = defaultdict(Counter)
+        for a, b in zip(toks[:-1], toks[1:]):
+            succ[a][b] += 1
+        ents = []
+        for a, cnt in succ.items():
+            p = np.array(list(cnt.values()), float)
+            p /= p.sum()
+            ents.append(-(p * np.log2(p)).sum())
+        assert np.mean(ents) < 0.7 * np.log2(64)
+
+    def test_host_slice(self):
+        c = data_lib.SyntheticCorpus(vocab_size=64, seed=2)
+        b = c.batch(0, 8, 16)
+        s0 = data_lib.host_batch_slice(b, 0, 2)
+        s1 = data_lib.host_batch_slice(b, 1, 2)
+        np.testing.assert_array_equal(
+            np.concatenate([s0["inputs"], s1["inputs"]]), b["inputs"])
+
+
+class TestCheckpoint:
+    def _mk_state(self, seed=0):
+        from repro.models import model_zoo as Z
+        params = Z.init_params(TINY, jax.random.PRNGKey(seed))
+        opt = opt_lib.sgd(1e-3)
+        ocfg = otaro_lib.OTAROConfig(mode="otaro")
+        return otaro_lib.init_state(params, opt, ocfg)
+
+    def test_roundtrip(self, tmp_path):
+        state = self._mk_state()
+        CKPT.save_checkpoint(str(tmp_path), 7, state, extra={"data_step": 7})
+        like = jax.eval_shape(lambda: self._mk_state())
+        restored, meta = CKPT.restore_checkpoint(str(tmp_path), like)
+        assert meta["step"] == 7
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_keep_k(self, tmp_path):
+        state = self._mk_state()
+        for s in (1, 2, 3, 4, 5):
+            CKPT.save_checkpoint(str(tmp_path), s, state, keep=2)
+        assert CKPT.list_steps(str(tmp_path)) == [4, 5]
+
+    def test_torn_write_ignored(self, tmp_path):
+        state = self._mk_state()
+        CKPT.save_checkpoint(str(tmp_path), 1, state)
+        # fake a torn write: dir without DONE marker
+        torn = tmp_path / "step_0000000099"
+        torn.mkdir()
+        (torn / "arrays.npz").write_bytes(b"garbage")
+        assert CKPT.latest_step(str(tmp_path)) == 1
+
+    def test_elastic_restore_new_mesh(self, tmp_path):
+        """Save unsharded, restore onto a 4x2 mesh, then onto 2x4."""
+        state = self._mk_state()
+        CKPT.save_checkpoint(str(tmp_path), 3, state)
+        like = jax.eval_shape(lambda: self._mk_state())
+        for shape in [(4, 2), (2, 4)]:
+            mesh = jax.make_mesh(
+                shape, ("data", "model"),
+                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            specs = SH.state_pspecs(like, mesh)
+            shardings = SH.to_named_sharding(specs, mesh)
+            restored, _ = CKPT.restore_checkpoint(str(tmp_path), like,
+                                                  shardings=shardings)
+            leaf = restored.params["layers"]["attn"]["wq"]
+            assert leaf.sharding.mesh.shape == dict(
+                zip(("data", "model"), shape))
+            np.testing.assert_array_equal(
+                np.asarray(leaf), np.asarray(state.params["layers"]["attn"]["wq"]))
+
+
+class TestRunnerFaultTolerance:
+    def _setup(self, tmp_path):
+        corpus = data_lib.SyntheticCorpus(vocab_size=TINY.vocab_size, seed=3)
+        opt = opt_lib.sgd(1e-2)
+        ocfg = otaro_lib.OTAROConfig(mode="otaro", laa_n=2)
+        step_builder, init_fn = steps_lib.make_train_step(
+            TINY, ocfg, opt, mesh=None)
+
+        def batch_fn(step):
+            b = corpus.batch(step, 4, 32)
+            return {k: jnp.asarray(v) for k, v in b.items()}
+
+        return step_builder, (lambda: init_fn(jax.random.PRNGKey(0))), batch_fn
+
+    def test_failure_then_resume_reaches_target(self, tmp_path):
+        step_fn, init_fn, batch_fn = self._setup(tmp_path)
+        job = runner_lib.JobConfig(total_steps=12, out_dir=str(tmp_path),
+                                   ckpt_every=4, log_every=4,
+                                   simulate_failure_at=9)
+        with pytest.raises(RuntimeError, match="simulated node failure"):
+            runner_lib.run_training(step_fn, init_fn, batch_fn, job)
+        # relaunch (same command) -> resumes from step 8 and completes
+        job2 = runner_lib.JobConfig(total_steps=12, out_dir=str(tmp_path),
+                                    ckpt_every=4, log_every=4)
+        state, history = runner_lib.run_training(step_fn, init_fn, batch_fn,
+                                                 job2)
+        resumed = [h for h in history if h.get("event") == "resumed"]
+        assert resumed and resumed[0]["step"] == 8
+        assert CKPT.latest_step(str(tmp_path / "checkpoints")) == 12
+
+    def test_resume_is_deterministic(self, tmp_path):
+        """crash+resume must produce the same final BPS counts as an
+        uninterrupted run (pure-function-of-step data pipeline)."""
+        step_fn, init_fn, batch_fn = self._setup(tmp_path)
+        # uninterrupted
+        job = runner_lib.JobConfig(total_steps=8,
+                                   out_dir=str(tmp_path / "a"),
+                                   ckpt_every=4, log_every=8)
+        state_a, _ = runner_lib.run_training(step_fn, init_fn, batch_fn, job)
+        # interrupted at 6, resumed
+        job_b = runner_lib.JobConfig(total_steps=8,
+                                     out_dir=str(tmp_path / "b"),
+                                     ckpt_every=4, log_every=8,
+                                     simulate_failure_at=6)
+        with pytest.raises(RuntimeError):
+            runner_lib.run_training(step_fn, init_fn, batch_fn, job_b)
+        job_b2 = runner_lib.JobConfig(total_steps=8,
+                                      out_dir=str(tmp_path / "b"),
+                                      ckpt_every=4, log_every=8)
+        state_b, _ = runner_lib.run_training(step_fn, init_fn, batch_fn,
+                                             job_b2)
+        np.testing.assert_array_equal(np.asarray(state_a.bps.t_b),
+                                      np.asarray(state_b.bps.t_b))
+        for a, b in zip(jax.tree_util.tree_leaves(state_a.params),
+                        jax.tree_util.tree_leaves(state_b.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+
+
+class TestCompression:
+    def test_compressed_psum_close_to_exact(self):
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        rng = np.random.default_rng(0)
+        g = {"w": jnp.asarray(rng.normal(size=(128, 64)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(130,)), jnp.float32)}
+        f = jax.jit(lambda g: CM.compressed_psum_pods(g, mesh, m=8))
+        with jax.set_mesh(mesh):
+            out = f(g)
+        for k in g:
+            ref = 2 * g[k]  # replicated input, 2 pods -> sum = 2x
+            err = float(jnp.abs(out[k] - ref).max() / jnp.abs(ref).max())
+            assert err < 5e-3, (k, err)
+
+    def test_lower_m_lower_fidelity(self):
+        mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        rng = np.random.default_rng(1)
+        g = {"w": jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)}
+        errs = []
+        for m in (8, 4, 3):
+            f = jax.jit(lambda g, m=m: CM.compressed_psum_pods(g, mesh, m=m))
+            with jax.set_mesh(mesh):
+                out = f(g)
+            errs.append(float(jnp.abs(out["w"] - 2 * g["w"]).mean()))
+        assert errs[0] < errs[1] < errs[2]
+
+    def test_ratio(self):
+        assert abs(CM.compression_ratio(8) - 9.125 / 16) < 1e-9
+        assert abs(CM.compression_ratio(4) - 5.125 / 16) < 1e-9
+
+
+class TestDistributedStep:
+    def test_sharded_step_runs_and_matches_unsharded(self):
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        opt = opt_lib.sgd(1e-2)
+        ocfg = otaro_lib.OTAROConfig(mode="fixed", fixed_m=8)
+        corpus = data_lib.SyntheticCorpus(vocab_size=TINY.vocab_size, seed=4)
+        batch = {k: jnp.asarray(v)
+                 for k, v in corpus.batch(0, 8, 32).items()}
+        batch_shapes = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+
+        jit_step, init_fn = steps_lib.make_train_step(TINY, ocfg, opt,
+                                                      mesh=mesh, donate=False)
+        with jax.set_mesh(mesh):
+            state = init_fn(jax.random.PRNGKey(0))
+            step = jit_step(batch_shapes)
+            state2, metrics = step(state, batch)
+        loss_sharded = float(metrics["loss"])
+
+        step_u, init_u = steps_lib.make_train_step(TINY, ocfg, opt, mesh=None,
+                                                   donate=False)
+        state_u = init_u(jax.random.PRNGKey(0))
+        _, metrics_u = step_u(state_u, batch)
+        assert abs(loss_sharded - float(metrics_u["loss"])) < 1e-3
+
+    def test_pod_compressed_step_runs(self):
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        opt = opt_lib.sgd(1e-2)
+        ocfg = otaro_lib.OTAROConfig(mode="otaro", laa_n=2)
+        corpus = data_lib.SyntheticCorpus(vocab_size=TINY.vocab_size, seed=5)
+        batch = {k: jnp.asarray(v)
+                 for k, v in corpus.batch(0, 8, 32).items()}
+        batch_shapes = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+        jit_step, init_fn = steps_lib.make_train_step(
+            TINY, ocfg, opt, mesh=mesh, compress_pods_m=8, donate=False)
+        with jax.set_mesh(mesh):
+            state = init_fn(jax.random.PRNGKey(0))
+            step = jit_step(batch_shapes)
+            state, metrics = step(state, batch)
+            state, metrics = step(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+
+
+class TestMicrobatching:
+    def test_grad_accum_equals_full_batch(self):
+        from repro.models import model_zoo as Z
+        loss_fn = Z.make_loss_fn(TINY)
+        params = Z.init_params(TINY, jax.random.PRNGKey(1))
+        corpus = data_lib.SyntheticCorpus(vocab_size=TINY.vocab_size, seed=6)
+        batch = {k: jnp.asarray(v)
+                 for k, v in corpus.batch(0, 8, 32).items()}
+        g_full = jax.grad(loss_fn)(params, batch)
+        loss_mb = steps_lib.microbatched(loss_fn, 4)
+        g_mb = jax.grad(loss_mb)(params, batch)
+        for a, b in zip(jax.tree_util.tree_leaves(g_full),
+                        jax.tree_util.tree_leaves(g_mb)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-3, atol=5e-5)
