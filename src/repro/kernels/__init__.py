@@ -1,12 +1,30 @@
-"""Pallas TPU kernels for the SEFP hot paths.
+"""SEFP kernel subsystem.
 
-Kernels target TPU (pl.pallas_call + explicit BlockSpec VMEM tiling with
-MXU-aligned dims); on this CPU-only container they are validated with
-``interpret=True`` (the default here is backend-derived).
+Three layers (DESIGN.md §2):
+
+  * :mod:`repro.kernels.compat`   — the single owner of every JAX
+    version-sensitive symbol (Pallas compiler params, mesh construction,
+    ambient-mesh lookup, shard_map);
+  * :mod:`repro.kernels.dispatch` — op -> backend registry with runtime
+    auto-selection (compiled Mosaic on TPU, interpreter or jnp oracle
+    elsewhere), per-call override, and the ``REPRO_KERNEL_BACKEND`` env
+    escape hatch;
+  * the ops themselves — ``sefp_quant`` (training fake-quant), ``sefp_pack``
+    (master packing), ``sefp_matmul`` (fused dequant-matmul serving path),
+    each a package with the Pallas kernel body, a pure-jnp oracle (ref.py),
+    and the registered backend wrappers (ops.py).
 """
 
-import jax
+from repro.kernels import compat  # noqa: F401
+from repro.kernels import dispatch  # noqa: F401
 
-# interpret=True executes kernel bodies in Python on CPU; on a real TPU this
-# resolves to False and the Mosaic path is used.
-INTERPRET = jax.default_backend() != "tpu"
+
+def __getattr__(name):
+    # Deprecated: pre-dispatch interpret default, kept for external callers.
+    # Computed lazily (PEP 562): jax.default_backend() initializes the XLA
+    # backend, and importing this package must never touch device state —
+    # launchers set XLA_FLAGS after import (see launch/mesh.py).
+    if name == "INTERPRET":
+        import jax
+        return jax.default_backend() != "tpu"
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

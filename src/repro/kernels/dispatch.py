@@ -1,0 +1,130 @@
+"""Kernel dispatch registry: one name per op, many backend implementations.
+
+Every SEFP hot-path op (``sefp_quant``, ``sefp_pack``, ``sefp_matmul``) is
+registered here under named backends:
+
+  * ``PALLAS_TPU``        — compiled Mosaic kernel (real TPU);
+  * ``PALLAS_INTERPRET``  — the same Pallas kernel body executed by the
+                            interpreter (any backend; validates the kernel
+                            logic itself on CPU);
+  * ``JAX_REF``           — the jitted pure-jnp oracle (fast on CPU, and the
+                            semantic contract the kernels are tested against).
+
+Backend resolution precedence (see DESIGN.md §2):
+
+  1. per-call override          — ``backend=JAX_REF`` kwarg;
+  2. environment escape hatch   — ``REPRO_KERNEL_BACKEND=jax-ref``;
+  3. platform auto-selection    — TPU -> ``PALLAS_TPU``, anything else ->
+                                  ``PALLAS_INTERPRET``.
+
+The registry is the seam for future backends (e.g. a GPU Pallas/Triton
+lowering registers under a new name; nothing at the call sites changes).
+The backend-name strings themselves live in compat.py (so the "no direct
+Pallas-TPU references outside compat" invariant stays greppable).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Callable, Dict
+
+import jax
+
+from repro.kernels.compat import (
+    BACKEND_JAX_REF as JAX_REF,
+    BACKEND_PALLAS_INTERPRET as PALLAS_INTERPRET,
+    BACKEND_PALLAS_TPU as PALLAS_TPU,
+)
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+BACKENDS = (PALLAS_TPU, PALLAS_INTERPRET, JAX_REF)
+
+_REGISTRY: Dict[str, Dict[str, Callable[..., Any]]] = {}
+_OPS_IMPORTED = False
+
+
+def register(op: str, backend: str):
+    """Decorator: register ``fn`` as the ``backend`` implementation of
+    ``op``.  Implementations of one op must be call-compatible.  Backend
+    names are open — a new backend (e.g. a GPU lowering) registers under a
+    new name and becomes resolvable with no other changes."""
+    if not backend or not isinstance(backend, str):
+        raise ValueError(f"backend name must be a non-empty string, "
+                         f"got {backend!r}")
+
+    def deco(fn):
+        _REGISTRY.setdefault(op, {})[backend] = fn
+        return fn
+
+    return deco
+
+
+def _ensure_ops_registered():
+    # Importing an op package registers its backends; lazy so that importing
+    # repro.kernels.dispatch alone stays cheap and cycle-free.  The flag is
+    # set only after the imports succeed, so a failed import surfaces again
+    # on the next call instead of being masked as "unknown kernel op".
+    global _OPS_IMPORTED
+    if _OPS_IMPORTED:
+        return
+    from repro.kernels.sefp_matmul import ops as _mm  # noqa: F401
+    from repro.kernels.sefp_pack import ops as _pk    # noqa: F401
+    from repro.kernels.sefp_quant import ops as _qt   # noqa: F401
+    _OPS_IMPORTED = True
+
+
+def _known_backends() -> set:
+    known = set(BACKENDS)
+    for impls in _REGISTRY.values():
+        known.update(impls)
+    return known
+
+
+def registered_ops():
+    _ensure_ops_registered()
+    return sorted(_REGISTRY)
+
+
+def backends_for(op: str):
+    _ensure_ops_registered()
+    if op not in _REGISTRY:
+        raise KeyError(f"unknown kernel op {op!r}; registered ops: "
+                       f"{sorted(_REGISTRY)}")
+    return sorted(_REGISTRY[op])
+
+
+def auto_backend(platform: str | None = None) -> str:
+    """Platform-derived default: compiled Mosaic on real TPUs, interpreter
+    everywhere else (the interpreter runs the same kernel bodies)."""
+    if platform is None:
+        platform = jax.default_backend()
+    return PALLAS_TPU if platform == "tpu" else PALLAS_INTERPRET
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Apply the per-call > env-var > platform-auto precedence chain."""
+    _ensure_ops_registered()
+    name = backend or os.environ.get(ENV_VAR) or auto_backend()
+    if name not in _known_backends():
+        source = ("per-call override" if backend
+                  else f"environment variable {ENV_VAR}")
+        raise ValueError(f"unknown kernel backend {name!r} (from {source}); "
+                         f"expected one of {sorted(_known_backends())}")
+    return name
+
+
+def dispatch(op: str, *args, backend: str | None = None, **kwargs):
+    """Run ``op`` on the resolved backend.  Raises with the list of
+    registered alternatives when the op/backend pair is missing."""
+    _ensure_ops_registered()
+    impls = _REGISTRY.get(op)
+    if not impls:
+        raise KeyError(f"unknown kernel op {op!r}; registered ops: "
+                       f"{sorted(_REGISTRY)}")
+    name = resolve_backend(backend)
+    impl = impls.get(name)
+    if impl is None:
+        raise ValueError(f"op {op!r} has no {name!r} implementation; "
+                         f"available backends: {sorted(impls)}")
+    return impl(*args, **kwargs)

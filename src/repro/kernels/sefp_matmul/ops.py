@@ -1,4 +1,4 @@
-"""Jitted public wrapper for the fused SEFP dequant-matmul kernel."""
+"""Public fused SEFP dequant-matmul op: backend impls + dispatch wrapper."""
 
 from __future__ import annotations
 
@@ -7,48 +7,83 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro import kernels
 from repro.core.packed import PackedSEFP
+from repro.kernels import dispatch
 from repro.kernels.common import pick_block
+from repro.kernels.sefp_matmul.ref import sefp_matmul_ref
 from repro.kernels.sefp_matmul.sefp_matmul import sefp_matmul_raw
 
 
 @functools.partial(
     jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
-def _call(x, mag, sign_bits, exp, m, block_m, block_n, block_k, interpret):
+def _pallas_call(x, mag, sign_bits, exp, m, block_m, block_n, block_k,
+                 interpret):
     return sefp_matmul_raw(x, mag, sign_bits, exp, m, block_m=block_m,
                            block_n=block_n, block_k=block_k,
                            interpret=interpret)
 
 
+def _pallas(x, mag, sign_bits, exp, m, block_m, block_n, block_k, *,
+            interpret):
+    m_rows, _ = x.shape
+    k_dim, n_dim = mag.shape
+    bm = pick_block(m_rows, block_m)
+    bn = pick_block(n_dim, block_n)
+    bk = pick_block(k_dim, block_k, multiple=64)
+    if bk == 0:
+        raise ValueError(f"K={k_dim} must allow a 64-divisible block")
+    m_arr = jnp.asarray(m, jnp.int32).reshape((1,))
+    return _pallas_call(x, mag, sign_bits, exp, m_arr, bm, bn, bk, interpret)
+
+
+@dispatch.register("sefp_matmul", dispatch.PALLAS_TPU)
+def _matmul_tpu(x, mag, sign_bits, exp, m, *, block_m=128,
+                block_n=256, block_k=512):
+    return _pallas(x, mag, sign_bits, exp, m, block_m, block_n, block_k,
+                   interpret=False)
+
+
+@dispatch.register("sefp_matmul", dispatch.PALLAS_INTERPRET)
+def _matmul_interpret(x, mag, sign_bits, exp, m, *, block_m=128,
+                      block_n=256, block_k=512):
+    return _pallas(x, mag, sign_bits, exp, m, block_m, block_n, block_k,
+                   interpret=True)
+
+
+_ref_jit = jax.jit(sefp_matmul_ref)
+
+
+@dispatch.register("sefp_matmul", dispatch.JAX_REF)
+def _matmul_jax_ref(x, mag, sign_bits, exp, m, *, block_m=128, block_n=256,
+                    block_k=512):
+    del block_m, block_n, block_k  # single whole-array dot; no tiling
+    return _ref_jit(x, mag, sign_bits, exp, jnp.asarray(m, jnp.int32))
+
+
 def sefp_matmul(x: jax.Array, packed: PackedSEFP, m, *,
                 block_m: int = 128, block_n: int = 256, block_k: int = 512,
-                interpret: bool | None = None) -> jax.Array:
+                interpret: bool | None = None,
+                backend: str | None = None) -> jax.Array:
     """``x @ dequantize(packed, m)`` with on-the-fly truncation to mantissa
     width ``m`` (python int or traced int32 scalar).
 
     x: [M, K] (or [..., K]; leading dims are flattened), packed: k-major
     PackedSEFP of a [K, N] weight grouped along axis 0.  Returns f32 [..., N].
-    """
-    if interpret is None:
-        interpret = kernels.INTERPRET
+    Backend resolution: ``backend=`` > ``REPRO_KERNEL_BACKEND`` > platform
+    auto."""
+    if backend is None and interpret is not None:
+        backend = (dispatch.PALLAS_INTERPRET if interpret
+                   else dispatch.PALLAS_TPU)
     if packed.group_axis != 0 or len(packed.shape) != 2:
         raise ValueError("sefp_matmul expects a 2-D weight packed along "
                          "axis 0 (k-major)")
     k_dim, n_dim = packed.shape
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    m_rows = x2.shape[0]
     if x2.shape[1] != k_dim:
         raise ValueError(f"x K={x2.shape[1]} vs packed K={k_dim}")
 
-    bm = pick_block(m_rows, block_m)
-    bn = pick_block(n_dim, block_n)
-    bk = pick_block(k_dim, block_k, multiple=64)
-    if bk == 0:
-        raise ValueError(f"K={k_dim} must allow a 64-divisible block")
-
-    m_arr = jnp.asarray(m, jnp.int32).reshape((1,))
-    out = _call(x2, packed.mag, packed.sign_bits, packed.exp, m_arr,
-                bm, bn, bk, interpret)
+    out = dispatch.dispatch(
+        "sefp_matmul", x2, packed.mag, packed.sign_bits, packed.exp, m,
+        block_m=block_m, block_n=block_n, block_k=block_k, backend=backend)
     return out.reshape(*lead, n_dim)

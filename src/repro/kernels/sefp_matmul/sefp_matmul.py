@@ -29,8 +29,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
 from repro.kernels.common import GROUP, exp2i
 
 
@@ -72,7 +72,7 @@ def sefp_matmul_raw(x, mag, sign_bits, exp, m, *, block_m: int, block_n: int,
     _, n_dim = mag.shape
     grid = (m_dim // block_m, n_dim // block_n, k_dim // block_k)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = compat.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
@@ -89,6 +89,6 @@ def sefp_matmul_raw(x, mag, sign_bits, exp, m, *, block_m: int, block_n: int,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(m, x, mag, sign_bits, exp)

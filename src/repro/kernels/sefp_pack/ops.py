@@ -1,4 +1,4 @@
-"""Jitted public wrapper: pack a weight into a PackedSEFP master on-device."""
+"""Public SEFP master-pack op: backend implementations + dispatch wrapper."""
 
 from __future__ import annotations
 
@@ -6,30 +6,61 @@ import functools
 
 import jax
 
-from repro import kernels
 from repro.core.packed import PackedSEFP
+from repro.kernels import dispatch
 from repro.kernels.common import pick_block
+from repro.kernels.sefp_pack.ref import sefp_pack_ref
 from repro.kernels.sefp_pack.sefp_pack import sefp_pack_raw
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block_k", "block_n", "interpret"))
-def _call(w, block_k, block_n, interpret):
+def _pallas_call(w, block_k, block_n, interpret):
     return sefp_pack_raw(w, block_k=block_k, block_n=block_n,
                          interpret=interpret)
 
 
-def sefp_pack_pallas(w: jax.Array, *, block_k: int = 256,
-                     block_n: int = 512,
-                     interpret: bool | None = None) -> PackedSEFP:
-    """Pack a [K, N] weight (K % 64 == 0) into the E5M8 master, k-major."""
-    if interpret is None:
-        interpret = kernels.INTERPRET
+def _pallas(w, block_k, block_n, *, interpret):
     k_dim, n_dim = w.shape
     bk = pick_block(k_dim, block_k, multiple=64)
     if bk == 0:
         raise ValueError(f"K={k_dim} must allow a 64-divisible block")
     bn = pick_block(n_dim, block_n)
-    mag, sign_bits, exp = _call(w, bk, bn, interpret)
+    return _pallas_call(w, bk, bn, interpret)
+
+
+@dispatch.register("sefp_pack", dispatch.PALLAS_TPU)
+def _pack_tpu(w, *, block_k=256, block_n=512):
+    return _pallas(w, block_k, block_n, interpret=False)
+
+
+@dispatch.register("sefp_pack", dispatch.PALLAS_INTERPRET)
+def _pack_interpret(w, *, block_k=256, block_n=512):
+    return _pallas(w, block_k, block_n, interpret=True)
+
+
+_ref_jit = jax.jit(sefp_pack_ref)
+
+
+@dispatch.register("sefp_pack", dispatch.JAX_REF)
+def _pack_jax_ref(w, *, block_k=256, block_n=512):
+    del block_k, block_n  # whole-array oracle; no tiling
+    return _ref_jit(w)
+
+
+def sefp_pack_pallas(w: jax.Array, *, block_k: int = 256,
+                     block_n: int = 512, interpret: bool | None = None,
+                     backend: str | None = None) -> PackedSEFP:
+    """Pack a [K, N] weight (K % 64 == 0) into the E5M8 master, k-major.
+
+    Backend resolution: ``backend=`` > ``REPRO_KERNEL_BACKEND`` > platform
+    auto."""
+    if backend is None and interpret is not None:
+        backend = (dispatch.PALLAS_INTERPRET if interpret
+                   else dispatch.PALLAS_TPU)
+    if w.shape[0] % 64:
+        raise ValueError(f"K={w.shape[0]} must allow a 64-divisible block")
+    mag, sign_bits, exp = dispatch.dispatch(
+        "sefp_pack", w, block_k=block_k, block_n=block_n, backend=backend)
     return PackedSEFP(mag=mag, sign_bits=sign_bits, exp=exp,
-                      shape=(k_dim, n_dim), group_axis=0, group_size=64)
+                      shape=tuple(w.shape), group_axis=0, group_size=64)

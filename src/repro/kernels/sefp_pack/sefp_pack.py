@@ -22,8 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
 from repro.kernels.common import EXP_MAX, EXP_MIN, GROUP, exp2i, floor_log2_bits
 
 MASTER_M = 8
@@ -68,6 +68,6 @@ def sefp_pack_raw(w: jax.Array, *, block_k: int, block_n: int,
         ),
         out_shape=out_shape,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
     )(w)

@@ -1,4 +1,4 @@
-"""Jitted public wrapper for the SEFP fake-quant kernel."""
+"""Public SEFP fake-quant op: backend implementations + dispatch wrapper."""
 
 from __future__ import annotations
 
@@ -7,28 +7,62 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro import kernels
+from repro.kernels import dispatch
 from repro.kernels.common import pick_block
+from repro.kernels.sefp_quant.ref import sefp_quantize_ref
 from repro.kernels.sefp_quant.sefp_quant import sefp_quant_raw
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block_k", "block_n", "interpret"))
-def _call(w, m, block_k, block_n, interpret):
+def _pallas_call(w, m, block_k, block_n, interpret):
     return sefp_quant_raw(w, m, block_k=block_k, block_n=block_n,
                           interpret=interpret)
 
 
-def sefp_quantize_pallas(w: jax.Array, m, *, block_k: int = 256,
-                         block_n: int = 512, interpret: bool | None = None):
-    """SEFP fake-quantize a [K, N] weight (groups of 64 along K) at mantissa
-    width ``m`` (python int or int32 scalar — dynamic, no recompile)."""
-    if interpret is None:
-        interpret = kernels.INTERPRET
+def _pallas(w, m, block_k, block_n, *, interpret):
     k_dim, n_dim = w.shape
     bk = pick_block(k_dim, block_k, multiple=64)
     if bk == 0:
         raise ValueError(f"K={k_dim} must allow a block divisible by 64")
     bn = pick_block(n_dim, block_n)
     m_arr = jnp.asarray(m, jnp.int32).reshape((1,))
-    return _call(w, m_arr, bk, bn, interpret)
+    return _pallas_call(w, m_arr, bk, bn, interpret)
+
+
+@dispatch.register("sefp_quant", dispatch.PALLAS_TPU)
+def _quant_tpu(w, m, *, block_k=256, block_n=512):
+    return _pallas(w, m, block_k, block_n, interpret=False)
+
+
+@dispatch.register("sefp_quant", dispatch.PALLAS_INTERPRET)
+def _quant_interpret(w, m, *, block_k=256, block_n=512):
+    return _pallas(w, m, block_k, block_n, interpret=True)
+
+
+_ref_jit = jax.jit(sefp_quantize_ref)
+
+
+@dispatch.register("sefp_quant", dispatch.JAX_REF)
+def _quant_jax_ref(w, m, *, block_k=256, block_n=512):
+    del block_k, block_n  # whole-array oracle; no tiling
+    return _ref_jit(w, jnp.asarray(m, jnp.int32))
+
+
+def sefp_quantize_pallas(w: jax.Array, m, *, block_k: int = 256,
+                         block_n: int = 512, interpret: bool | None = None,
+                         backend: str | None = None):
+    """SEFP fake-quantize a [K, N] weight (groups of 64 along K) at mantissa
+    width ``m`` (python int or int32 scalar — dynamic, no recompile).
+
+    Backend resolution: ``backend=`` > ``REPRO_KERNEL_BACKEND`` > platform
+    auto.  ``interpret`` is the pre-dispatch spelling, kept for callers that
+    pin the Pallas path explicitly."""
+    if backend is None and interpret is not None:
+        backend = (dispatch.PALLAS_INTERPRET if interpret
+                   else dispatch.PALLAS_TPU)
+    if w.shape[0] % 64:
+        raise ValueError(f"K={w.shape[0]} must allow a block divisible "
+                         "by 64")
+    return dispatch.dispatch("sefp_quant", w, m, block_k=block_k,
+                             block_n=block_n, backend=backend)

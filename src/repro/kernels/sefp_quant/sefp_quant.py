@@ -25,8 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
 from repro.kernels.common import EXP_MAX, EXP_MIN, GROUP, exp2i, floor_log2_bits
 
 
@@ -51,7 +51,7 @@ def sefp_quant_raw(w: jax.Array, m: jax.Array, *, block_k: int, block_n: int,
     m: int32[1] mantissa width. Returns dequantized fake-quant of w."""
     k_dim, n_dim = w.shape
     grid = (k_dim // block_k, n_dim // block_n)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = compat.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[pl.BlockSpec((block_k, block_n), lambda i, j, s: (i, j))],
@@ -62,6 +62,6 @@ def sefp_quant_raw(w: jax.Array, m: jax.Array, *, block_k: int, block_n: int,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
     )(m, w)

@@ -25,6 +25,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro import configs as C                      # noqa: E402
 from repro.core import otaro as otaro_lib           # noqa: E402
+from repro.kernels import compat                    # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import model_zoo as Z             # noqa: E402
 from repro.models.config import SHAPES, shape_applicable  # noqa: E402
@@ -259,7 +260,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered, info = build_cell(cfg, shape, mesh, variant)
             t_lower = time.time() - t0
             compiled = lowered.compile()
@@ -267,7 +268,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 
             ma = compiled.memory_analysis()
             print(ma)
-            ca = compiled.cost_analysis() or {}
+            ca = compat.cost_analysis(compiled)
             print({k: v for k, v in ca.items()
                    if k in ("flops", "bytes accessed")})
             hlo = compiled.as_text()

@@ -9,11 +9,11 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import compat
+
 
 def _mk(shape, axes):
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes, axis_types="auto")
 
 
 def make_production_mesh(*, multi_pod: bool = False):

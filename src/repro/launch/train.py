@@ -51,6 +51,7 @@ def main():
 
     from repro import configs as C
     from repro.core import otaro as otaro_lib
+    from repro.kernels import compat
     from repro.launch.mesh import describe, make_host_mesh, \
         make_production_mesh
     from repro.train import optimizer as opt_lib
@@ -82,7 +83,7 @@ def main():
         b = corpus.batch(step, args.global_batch, args.seq)
         return {k: jnp.asarray(v) for k, v in b.items()}
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         step_fn = jit_builder(batch_shapes)
         job = runner_lib.JobConfig(total_steps=args.steps, out_dir=args.out,
                                    ckpt_every=args.ckpt_every, log_every=20)

@@ -16,6 +16,8 @@ import contextvars
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels import compat
+
 # Which mesh axes may carry the batch dim.  "tp" (default) reserves the
 # model axis for tensor parallelism; "dp" lets the batch span it (pure
 # data/FSDP parallelism).  Set at TRACE time by the step builder
@@ -33,8 +35,10 @@ def batch_layout(layout: str):
 
 
 def _ambient_mesh():
+    # compat degrades to the explicit-mesh path (the thread-resources
+    # physical mesh) on JAX versions without abstract meshes.
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.ambient_mesh()
     except Exception:  # pragma: no cover
         return None
     if mesh is None or mesh.empty:
@@ -61,11 +65,7 @@ def constrain_batch(x, extra=()):
             else ("pod", "data"))
     # axes already manual (e.g. inside shard_map over pod) cannot appear in
     # sharding constraints
-    try:
-        manual = {a for a, t in zip(mesh.axis_names, mesh.axis_types)
-                  if "Manual" in str(t)}
-    except Exception:  # pragma: no cover
-        manual = set()
+    manual = compat.manual_axis_names(mesh)
     baxes = tuple(a for a in pool
                   if a in mesh.axis_names and a not in manual)
     spec = [None] * x.ndim
@@ -74,7 +74,8 @@ def constrain_batch(x, extra=()):
         spec[0] = baxes
         used.update(baxes)
     for dim, axis in extra:
-        if (axis in mesh.axis_names and axis not in used and dim < x.ndim
+        if (axis in mesh.axis_names and axis not in manual
+                and axis not in used and dim < x.ndim
                 and x.shape[dim] % mesh.shape[axis] == 0):
             spec[dim] = axis
     if all(s is None for s in spec):

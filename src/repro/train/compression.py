@@ -25,6 +25,7 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import sefp
+from repro.kernels import compat
 
 GROUP = 64
 
@@ -84,8 +85,8 @@ def compressed_psum_pods(grads: Any, mesh: Mesh, m: int = 8,
     def body(g):
         return compressed_allreduce(g, "pod", n_pods, m=m, mean=mean)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
-                         axis_names={"pod"}, check_vma=False)(grads)
+    return compat.shard_map(body, mesh, in_specs=P(), out_specs=P(),
+                            manual_axes=("pod",), check=False)(grads)
 
 
 def compression_ratio(m: int) -> float:

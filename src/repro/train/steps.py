@@ -18,6 +18,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import otaro as otaro_lib
+from repro.kernels import compat
 from repro.models import model_zoo as Z
 from repro.models.config import ModelConfig
 from repro.sharding import partition as SH
@@ -94,9 +95,9 @@ def make_train_step(
         # state and its own batch shard; data/model stay GSPMD-auto inside.
         def stepper(state, batch):
             with batch_layout_ctx(batch_layout):
-                return jax.shard_map(
-                    step_core, mesh=mesh, in_specs=(P(), P("pod")),
-                    out_specs=P(), axis_names={"pod"}, check_vma=False)(
+                return compat.shard_map(
+                    step_core, mesh, in_specs=(P(), P("pod")),
+                    out_specs=P(), manual_axes=("pod",), check=False)(
                     state, batch)
     else:
         def stepper(state, batch):

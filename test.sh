@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point: CPU-only, with the fake-device count the sharding
+# tests expect (tests/conftest.py also sets it, but exporting here keeps the
+# flag authoritative for single-file runs and subprocesses).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,12 @@
+"""Session-wide test environment.
+
+The sharding tests need 8 fake CPU devices, and XLA reads XLA_FLAGS exactly
+once at backend initialization.  Individual test modules also setdefault this
+flag for standalone runs, but when the whole suite runs, an alphabetically
+earlier module can initialize the backend during collection — so it must be
+set here: conftest imports before any test module.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")

@@ -11,12 +11,12 @@ import jax.numpy as jnp  # noqa: E402
 import pytest  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro.kernels import compat  # noqa: E402
 from repro.sharding import partition as SH  # noqa: E402
 
 
 def mesh2(data=4, model=2):
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def sds(shape, dtype=jnp.float32):
@@ -90,8 +90,7 @@ class TestBatchLayouts:
         assert specs["inputs"] == P(("data", "model"), None)
 
     def test_pod_layout(self):
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
         specs = SH.batch_pspecs({"inputs": sds((8, 32), jnp.int32)}, mesh,
                                 layout="pod")
         assert specs["inputs"] == P(("pod",), None)

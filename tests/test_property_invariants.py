@@ -4,7 +4,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: property tests")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import bps as bps_lib
 from repro.core import laa as laa_lib

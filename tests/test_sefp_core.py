@@ -4,7 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="optional dep: property tests")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import packed as packed_lib
 from repro.core import sefp

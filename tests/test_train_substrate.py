@@ -13,6 +13,7 @@ import pytest  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core import otaro as otaro_lib  # noqa: E402
+from repro.kernels import compat  # noqa: E402
 from repro.models.config import ModelConfig  # noqa: E402
 from repro.sharding import partition as SH  # noqa: E402
 from repro.train import checkpoint as CKPT  # noqa: E402
@@ -102,9 +103,7 @@ class TestCheckpoint:
         CKPT.save_checkpoint(str(tmp_path), 3, state)
         like = jax.eval_shape(lambda: self._mk_state())
         for shape in [(4, 2), (2, 4)]:
-            mesh = jax.make_mesh(
-                shape, ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh = compat.make_mesh(shape, ("data", "model"))
             specs = SH.state_pspecs(like, mesh)
             shardings = SH.to_named_sharding(specs, mesh)
             restored, _ = CKPT.restore_checkpoint(str(tmp_path), like,
@@ -177,13 +176,12 @@ class TestRunnerFaultTolerance:
 
 class TestCompression:
     def test_compressed_psum_close_to_exact(self):
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
         rng = np.random.default_rng(0)
         g = {"w": jnp.asarray(rng.normal(size=(128, 64)), jnp.float32),
              "b": jnp.asarray(rng.normal(size=(130,)), jnp.float32)}
         f = jax.jit(lambda g: CM.compressed_psum_pods(g, mesh, m=8))
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             out = f(g)
         for k in g:
             ref = 2 * g[k]  # replicated input, 2 pods -> sum = 2x
@@ -191,14 +189,13 @@ class TestCompression:
             assert err < 5e-3, (k, err)
 
     def test_lower_m_lower_fidelity(self):
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("pod", "data"))
         rng = np.random.default_rng(1)
         g = {"w": jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)}
         errs = []
         for m in (8, 4, 3):
             f = jax.jit(lambda g, m=m: CM.compressed_psum_pods(g, mesh, m=m))
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 out = f(g)
             errs.append(float(jnp.abs(out["w"] - 2 * g["w"]).mean()))
         assert errs[0] < errs[1] < errs[2]
@@ -210,8 +207,7 @@ class TestCompression:
 
 class TestDistributedStep:
     def test_sharded_step_runs_and_matches_unsharded(self):
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
         opt = opt_lib.sgd(1e-2)
         ocfg = otaro_lib.OTAROConfig(mode="fixed", fixed_m=8)
         corpus = data_lib.SyntheticCorpus(vocab_size=TINY.vocab_size, seed=4)
@@ -222,7 +218,7 @@ class TestDistributedStep:
 
         jit_step, init_fn = steps_lib.make_train_step(TINY, ocfg, opt,
                                                       mesh=mesh, donate=False)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             state = init_fn(jax.random.PRNGKey(0))
             step = jit_step(batch_shapes)
             state2, metrics = step(state, batch)
@@ -235,8 +231,7 @@ class TestDistributedStep:
         assert abs(loss_sharded - float(metrics_u["loss"])) < 1e-3
 
     def test_pod_compressed_step_runs(self):
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
         opt = opt_lib.sgd(1e-2)
         ocfg = otaro_lib.OTAROConfig(mode="otaro", laa_n=2)
         corpus = data_lib.SyntheticCorpus(vocab_size=TINY.vocab_size, seed=5)
@@ -246,7 +241,7 @@ class TestDistributedStep:
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
         jit_step, init_fn = steps_lib.make_train_step(
             TINY, ocfg, opt, mesh=mesh, compress_pods_m=8, donate=False)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             state = init_fn(jax.random.PRNGKey(0))
             step = jit_step(batch_shapes)
             state, metrics = step(state, batch)
