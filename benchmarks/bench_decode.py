@@ -1,0 +1,291 @@
+"""Decode-path perf trajectory: fused scan vs per-token loop vs materialized.
+
+Three decode paths over the SAME weights, measured on a CPU-sized serving
+config (absolute numbers are hardware-relative; the *structure* — dispatch
+count, host syncs, switch cost — is what transfers to TPU):
+
+  fused_scan             engine.generate: one jitted lax.scan over steps,
+                         precision schedule traced in-graph, sampling in the
+                         scan body, ONE host transfer per generation.
+  per_token              engine.generate_per_token: the legacy loop — one
+                         jitted dispatch and one host token sync per step,
+                         same packed-master numerics.
+  per_token_materialized the pre-device-resident engine: live weights
+                         rebuilt by core.packed.dequantize_tree at the
+                         serving width (O(params) per switch), one jitted
+                         dispatch + host sync per step.
+
+Also measured: precision-switch cost — the materialized path's rebuild
+latency vs the fused path's throughput under a worst-case mixed schedule
+(alternating widths every token; the schedule is data of the same compiled
+executable, so the expected overhead is ~0).
+
+Writes BENCH_decode.json at the repo root.  CI runs ``--smoke`` and then
+``--check`` (schema assertion) and uploads the JSON as an artifact, so
+every PR extends the decode perf trajectory.
+
+    PYTHONPATH=src python benchmarks/bench_decode.py [--smoke] [--out PATH]
+    PYTHONPATH=src python benchmarks/bench_decode.py --check PATH
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+SCHEMA_VERSION = 1
+PATHS = ("fused_scan", "per_token", "per_token_materialized")
+
+
+# ---------------------------------------------------------------------------
+# schema (the --check contract; keep in sync with emit())
+# ---------------------------------------------------------------------------
+
+def check_schema(doc: dict) -> list:
+    """Return a list of schema violations (empty == valid)."""
+    errs = []
+
+    def need(d, key, typ, where):
+        if key not in d:
+            errs.append(f"{where}: missing key {key!r}")
+            return None
+        if not isinstance(d[key], typ):
+            errs.append(f"{where}.{key}: expected {typ}, got "
+                        f"{type(d[key]).__name__}")
+        return d[key]
+
+    if need(doc, "schema_version", int, "$") != SCHEMA_VERSION:
+        errs.append(f"$.schema_version != {SCHEMA_VERSION}")
+    need(doc, "bench", str, "$")
+    need(doc, "mode", str, "$")
+    cfg = need(doc, "config", dict, "$") or {}
+    for k in ("name", "family", "n_layers", "d_model", "vocab_size",
+              "batch", "prompt_len", "max_new"):
+        need(cfg, k, (int, str), "$.config")
+    paths = need(doc, "paths", dict, "$") or {}
+    for p in PATHS:
+        entry = need(paths, p, dict, "$.paths") or {}
+        need(entry, "tokens_per_sec", (int, float), f"$.paths.{p}")
+        need(entry, "decode_seconds", (int, float), f"$.paths.{p}")
+        need(entry, "host_transfers_per_generation", int, f"$.paths.{p}")
+    need(doc, "speedup_fused_vs_per_token", (int, float), "$")
+    sw = need(doc, "precision_switch", dict, "$") or {}
+    for k in ("materialized_rebuild_seconds", "fused_constant_tokens_per_sec",
+              "fused_mixed_tokens_per_sec",
+              "fused_switch_extra_seconds_per_token"):
+        need(sw, k, (int, float), "$.precision_switch")
+    return errs
+
+
+# ---------------------------------------------------------------------------
+# the materialized baseline (the engine this PR deleted, kept here as the
+# measured point of comparison)
+# ---------------------------------------------------------------------------
+
+class MaterializedBaseline:
+    """Pre-device-resident serving: pack once, but materialize a full live
+    weight tree per precision switch and dispatch per token."""
+
+    def __init__(self, cfg, params, max_len):
+        import jax
+        from repro.core import packed as packed_lib
+        from repro.models import model_zoo as Z
+
+        self.cfg = cfg
+        self.max_len = max_len
+        self.master = packed_lib.pack_tree(params)
+        self._serve = jax.jit(Z.make_serve_step(cfg))
+        self._prefill = jax.jit(Z.make_prefill(cfg),
+                                static_argnames=("max_len",))
+        self._m = None
+        self._live = None
+
+    def set_precision(self, m: int):
+        import jax
+        import jax.numpy as jnp
+        from repro.core import packed as packed_lib
+
+        if m == self._m:
+            return
+        self._live = packed_lib.dequantize_tree(
+            self.master, jnp.int32(m), dtype=jnp.bfloat16)
+        jax.block_until_ready(self._live)
+        self._m = m
+
+    def generate_greedy(self, prompts, max_new: int):
+        import jax.numpy as jnp
+        import numpy as np
+
+        toks = jnp.asarray(prompts, jnp.int32)
+        logits, cache = self._prefill(self._live, toks, max_len=self.max_len)
+        out = []
+        t0 = time.perf_counter()
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for _ in range(max_new):
+            out.append(np.asarray(tok))  # per-step host sync
+            logits, cache = self._serve(self._live, cache, tok)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        dt = time.perf_counter() - t0
+        return np.stack(out, axis=1), dt, len(out)
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+def _best(fn, repeats: int):
+    """(tokens, seconds, host_transfers) of the fastest of ``repeats``."""
+    best = None
+    for _ in range(repeats):
+        r = fn()
+        if best is None or r[1] < best[1]:
+            best = r
+    return best
+
+
+def run(smoke: bool = False) -> dict:
+    import jax
+    import numpy as np
+    from repro.models import model_zoo as Z
+    from repro.models.config import ModelConfig
+    from repro.serve import SwitchableServer
+
+    max_new = 8 if smoke else 64
+    batch, prompt_len = 4, 16
+    repeats = 2 if smoke else 5
+    cfg = ModelConfig(
+        name="bench-decode", family="dense", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512,
+        q_block=16, kv_block=16, loss_chunk=32, remat="none",
+        dtype="bfloat16")
+    max_len = prompt_len + max_new + 1
+
+    params = Z.init_params(cfg, jax.random.PRNGKey(0))
+    server = SwitchableServer(cfg, params, max_len=max_len)
+    server.set_precision(7)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len))
+    prompts = prompts.astype(np.int32)
+
+    def fused():
+        r = server.generate(prompts, max_new=max_new)
+        return r.tokens, r.decode_seconds, r.host_transfers
+
+    def per_token():
+        r = server.generate_per_token(prompts, max_new=max_new)
+        return r.tokens, r.decode_seconds, r.host_transfers
+
+    baseline = MaterializedBaseline(cfg, params, max_len)
+    baseline.set_precision(7)
+
+    def materialized():
+        return baseline.generate_greedy(prompts, max_new)
+
+    paths = {}
+    results = {}
+    for name, fn in (("fused_scan", fused), ("per_token", per_token),
+                     ("per_token_materialized", materialized)):
+        fn()  # warmup / compile
+        toks, dt, host = _best(fn, repeats)
+        results[name] = toks
+        paths[name] = {
+            "tokens_per_sec": batch * max_new / max(dt, 1e-9),
+            "decode_seconds": dt,
+            "host_transfers_per_generation": int(host),
+        }
+
+    # the fused scan is an optimization, not a semantics change
+    np.testing.assert_array_equal(results["fused_scan"],
+                                  results["per_token"])
+
+    # -- precision-switch cost ------------------------------------------------
+    # materialized: an O(params) live-tree rebuild per switch
+    baseline.set_precision(7)
+    t0 = time.perf_counter()
+    baseline.set_precision(3)
+    rebuild_s = time.perf_counter() - t0
+    # fused: worst-case mixed schedule (switch EVERY token) vs constant —
+    # both are data through one executable; overhead should be noise
+    const_sched = [7] * max_new
+    mixed_sched = [7 if i % 2 == 0 else 3 for i in range(max_new)]
+    server.generate(prompts, max_new=max_new,
+                    precision_schedule=mixed_sched)  # warmup
+    _, t_const, _ = _best(
+        lambda: (None, server.generate(
+            prompts, max_new=max_new,
+            precision_schedule=const_sched).decode_seconds, None), repeats)
+    _, t_mixed, _ = _best(
+        lambda: (None, server.generate(
+            prompts, max_new=max_new,
+            precision_schedule=mixed_sched).decode_seconds, None), repeats)
+
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "bench": "decode",
+        "mode": "smoke" if smoke else "full",
+        "config": {"name": cfg.name, "family": cfg.family,
+                   "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+                   "vocab_size": cfg.vocab_size, "batch": batch,
+                   "prompt_len": prompt_len, "max_new": max_new},
+        "paths": paths,
+        "speedup_fused_vs_per_token": (
+            paths["fused_scan"]["tokens_per_sec"]
+            / max(paths["per_token"]["tokens_per_sec"], 1e-9)),
+        "precision_switch": {
+            "materialized_rebuild_seconds": rebuild_s,
+            "fused_constant_tokens_per_sec":
+                batch * max_new / max(t_const, 1e-9),
+            "fused_mixed_tokens_per_sec":
+                batch * max_new / max(t_mixed, 1e-9),
+            "fused_switch_extra_seconds_per_token":
+                (t_mixed - t_const) / max_new,
+        },
+    }
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run (CI leg): few tokens, one repeat")
+    ap.add_argument("--out", default="BENCH_decode.json")
+    ap.add_argument("--check", default=None, metavar="PATH",
+                    help="validate an existing JSON against the schema "
+                    "and exit (no benchmark run)")
+    args = ap.parse_args()
+
+    if args.check:
+        with open(args.check) as f:
+            doc = json.load(f)
+        errs = check_schema(doc)
+        if errs:
+            print("\n".join(errs))
+            sys.exit(1)
+        print(f"{args.check}: schema v{doc['schema_version']} OK "
+              f"(mode={doc['mode']}, fused/per-token speedup "
+              f"{doc['speedup_fused_vs_per_token']:.2f}x)")
+        return
+
+    doc = run(smoke=args.smoke)
+    errs = check_schema(doc)
+    assert not errs, errs
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    p = doc["paths"]
+    print(f"wrote {args.out} (mode={doc['mode']})")
+    for name in PATHS:
+        print(f"  {name:24s} {p[name]['tokens_per_sec']:9.1f} tok/s   "
+              f"{p[name]['host_transfers_per_generation']:3d} host syncs")
+    print(f"  fused vs per-token: "
+          f"{doc['speedup_fused_vs_per_token']:.2f}x; materialized switch "
+          f"{doc['precision_switch']['materialized_rebuild_seconds']*1e3:.1f}"
+          f" ms vs fused extra "
+          f"{doc['precision_switch']['fused_switch_extra_seconds_per_token']*1e6:+.1f}"
+          f" us/token")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,11 +10,16 @@ from repro.core.sefp import (  # noqa: F401
     sefp_quantize_ste,
 )
 from repro.core.packed import (  # noqa: F401
+    MASTER_M,
     PackedSEFP,
     dequantize,
+    dequantize_master_tree,
+    dequantize_stacked,
     dequantize_tree,
     pack,
+    pack_stacked,
     pack_tree,
+    stream_bits_per_param,
 )
 from repro.core.otaro import (  # noqa: F401
     OTAROConfig,

@@ -31,7 +31,19 @@ import jax.numpy as jnp
 
 from repro.core import sefp
 
-MASTER_M = 8  # master mantissa width
+MASTER_M = 8   # master mantissa width
+SIGN_BITS = 1  # one bit-packed sign per parameter
+EXP_BITS = 8   # int8 storage per shared group exponent
+
+
+def stream_bits_per_param(m: int | float,
+                          group_size: int = sefp.GROUP_SIZE) -> float:
+    """Streaming bits/param when serving at mantissa width ``m``: the kernel
+    reads the truncated magnitude lane-compressed to m bits, the sign bit,
+    and the amortized group exponent.  ``m = MASTER_M`` gives the resident
+    master footprint (9.125 for E5M8 / group 64) — the single place this
+    constant is derived, so accounting can't drift from the format."""
+    return (m + SIGN_BITS) + EXP_BITS / group_size
 
 
 @jax.tree_util.register_pytree_node_class
@@ -64,10 +76,8 @@ class PackedSEFP:
         return int(self.mag.size + self.sign_bits.size + self.exp.size)
 
     def bits_per_param(self, m: int = MASTER_M) -> float:
-        """Streaming bits/param when serving at mantissa width m (the kernel
-        reads the truncated magnitude lane-compressed to m bits, the sign bit,
-        and the amortized group exponent)."""
-        return (m + 1) + 8.0 / self.group_size
+        """Streaming bits/param when serving at mantissa width m."""
+        return stream_bits_per_param(m, self.group_size)
 
 
 def _norm_axis(axis: int, ndim: int) -> int:
@@ -124,8 +134,10 @@ def dequantize(p: PackedSEFP, m: jax.Array | int = MASTER_M,
     magk = (p.mag >> shift).astype(jnp.float32)
     signs = unpack_signs(p.sign_bits)
     quantum = sefp.exp2i(p.exp.astype(jnp.int32) - (m - 1))
-    quantum = jnp.repeat(quantum, p.group_size, axis=0)
-    out = signs * magk * quantum
+    # group-broadcast multiply instead of jnp.repeat: no materialized [n,...]
+    # quantum tensor; XLA fuses the broadcast into the consumer.
+    out = (signs * magk).reshape(n // p.group_size, p.group_size, *rest)
+    out = (out * quantum[:, None]).reshape(n, *rest)
     out = jnp.moveaxis(out, 0, p.group_axis)
     return out.reshape(p.shape).astype(dtype)
 
@@ -139,6 +151,98 @@ def to_int8_codes(p: PackedSEFP, m: jax.Array | int) -> tuple[jax.Array, jax.Arr
     signs = unpack_signs(p.sign_bits).astype(jnp.int16)
     codes = (signs * magk).astype(jnp.int8)
     return codes, p.exp
+
+
+# ---------------------------------------------------------------------------
+# Stacked master layout: the serving representation.
+#
+# A scanned-over-layers weight is stored as a plain dict of raw master arrays
+# with the contraction (group) axis at position -2 and arbitrary leading
+# batch dims (layer, expert):
+#
+#   {"mag":  uint8 [..., K, N],
+#    "sign": uint8 [..., K//8, N],
+#    "exp":  int8  [..., K//group, N]}
+#
+# For a 2-D [K, N] weight this is exactly PackedSEFP's (mag, sign_bits, exp)
+# field layout, so the serving matmul kernel consumes it directly; for a
+# stacked [L, K, N] weight, lax.scan slices the leading axis and each slice
+# is again a valid 2-D master.  Dicts (not PackedSEFP) so scan/tree_map
+# slicing keeps metadata-free leaves and partition rules see named children.
+# ---------------------------------------------------------------------------
+
+MASTER_KEYS = frozenset({"mag", "sign", "exp"})
+
+
+def is_master_leaf(x) -> bool:
+    return isinstance(x, dict) and set(x) == MASTER_KEYS
+
+
+def to_stacked(p: PackedSEFP) -> dict:
+    """PackedSEFP (group axis at front) -> stacked master dict (group axis
+    at -2, leading batch dims restored).  Requires the logical group axis to
+    be the contraction axis ``ndim - 2`` (the x @ W convention used for every
+    packed weight in this framework)."""
+    ndim = len(p.shape)
+    if p.group_axis != ndim - 2:
+        raise ValueError(
+            f"stacked master layout needs group_axis == ndim-2, got "
+            f"group_axis={p.group_axis} for shape {p.shape}")
+    return {"mag": jnp.moveaxis(p.mag, 0, -2),
+            "sign": jnp.moveaxis(p.sign_bits, 0, -2),
+            "exp": jnp.moveaxis(p.exp, 0, -2)}
+
+
+def packed_view(leaf: dict) -> PackedSEFP:
+    """Zero-copy PackedSEFP view of a 2-D stacked master leaf [K, N] — the
+    form the sefp_matmul kernels take."""
+    if leaf["mag"].ndim != 2:
+        raise ValueError(f"packed_view needs a 2-D leaf, got mag shape "
+                         f"{leaf['mag'].shape}")
+    return PackedSEFP(mag=leaf["mag"], sign_bits=leaf["sign"],
+                      exp=leaf["exp"], shape=tuple(leaf["mag"].shape),
+                      group_axis=0, group_size=sefp.GROUP_SIZE)
+
+
+def pack_stacked(w: jax.Array, group_size: int = sefp.GROUP_SIZE) -> dict:
+    """Quantize a [..., K, N] weight to the E5M8 master, grouped along the
+    contraction axis K (axis -2), in the stacked layout."""
+    return to_stacked(pack(w, group_size=group_size, group_axis=w.ndim - 2))
+
+
+def dequantize_stacked(leaf: dict, m: jax.Array | int,
+                       dtype=jnp.bfloat16) -> jax.Array:
+    """Dequantize a stacked master leaf at mantissa width ``m`` (python int
+    or traced int32 scalar) — the in-scan serving dequant.  Pure broadcast
+    arithmetic (no jnp.repeat): the sign unpack and the per-group quantum
+    stay group-shaped and XLA fuses them into the consuming matmul."""
+    m = jnp.asarray(m, jnp.int32)
+    shift = (MASTER_M - m).astype(jnp.uint8)
+    mag, sign_bits, e = leaf["mag"], leaf["sign"], leaf["exp"]
+    *lead, k_dim, n_dim = mag.shape
+    magk = (mag >> shift).astype(jnp.float32)
+
+    # signs: bit (row % 8) of byte (row // 8) along axis -2, via broadcast
+    bit_idx = jnp.arange(8, dtype=jnp.uint8)[:, None]        # [8, 1]
+    bits = (sign_bits[..., :, None, :] >> bit_idx) & jnp.uint8(1)
+    sign = 1.0 - 2.0 * bits.reshape(*lead, k_dim, n_dim).astype(jnp.float32)
+
+    groups = e.shape[-2]
+    quantum = sefp.exp2i(e.astype(jnp.int32) - (m - 1))      # [..., G, N]
+    out = (sign * magk).reshape(*lead, groups, k_dim // groups, n_dim)
+    out = (out * quantum[..., :, None, :]).reshape(*lead, k_dim, n_dim)
+    return out.astype(dtype)
+
+
+def dequantize_master_tree(tree, m: jax.Array | int, dtype=jnp.bfloat16):
+    """Dequantize every stacked-master leaf of a pytree at width m."""
+
+    def visit(leaf):
+        if is_master_leaf(leaf):
+            return dequantize_stacked(leaf, m, dtype=dtype)
+        return leaf
+
+    return jax.tree_util.tree_map(visit, tree, is_leaf=is_master_leaf)
 
 
 def pack_tree(params, group_size: int = sefp.GROUP_SIZE, group_axis: int = 0,
@@ -173,19 +277,33 @@ def dequantize_tree(packed_params, m: jax.Array | int, dtype=jnp.bfloat16):
 
 
 def tree_nbytes(packed_params) -> dict:
-    """Byte accounting for a (possibly partially) packed tree."""
+    """Byte and parameter accounting for a (possibly partially) packed tree.
+    Handles PackedSEFP leaves and stacked-master dict leaves alike; packed
+    parameter counts let callers derive the streamed footprint at any width
+    from ``stream_bits_per_param`` without re-deriving the layout."""
     packed_b = 0
     raw_b = 0
+    packed_params_n = 0
+    raw_params_n = 0
 
     def visit(leaf):
-        nonlocal packed_b, raw_b
+        nonlocal packed_b, raw_b, packed_params_n, raw_params_n
         if isinstance(leaf, PackedSEFP):
             packed_b += leaf.nbytes_packed
+            packed_params_n += int(leaf.mag.size)
+        elif is_master_leaf(leaf):
+            packed_b += int(leaf["mag"].nbytes + leaf["sign"].nbytes
+                            + leaf["exp"].nbytes)
+            packed_params_n += int(leaf["mag"].size)
         elif hasattr(leaf, "nbytes"):
             raw_b += int(leaf.nbytes)
+            raw_params_n += int(leaf.size)
         return leaf
 
-    jax.tree_util.tree_map(visit, packed_params,
-                           is_leaf=lambda x: isinstance(x, PackedSEFP))
+    jax.tree_util.tree_map(
+        visit, packed_params,
+        is_leaf=lambda x: isinstance(x, PackedSEFP) or is_master_leaf(x))
     return {"packed_bytes": packed_b, "raw_bytes": raw_b,
-            "total_bytes": packed_b + raw_b}
+            "total_bytes": packed_b + raw_b,
+            "packed_params": packed_params_n, "raw_params": raw_params_n,
+            "n_params": packed_params_n + raw_params_n}

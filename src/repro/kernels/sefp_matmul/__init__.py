@@ -1,1 +1,4 @@
-from repro.kernels.sefp_matmul.ops import sefp_matmul  # noqa: F401
+from repro.kernels.sefp_matmul.ops import (  # noqa: F401
+    sefp_matmul,
+    sefp_matmul_gemv,
+)

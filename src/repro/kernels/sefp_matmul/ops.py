@@ -10,8 +10,15 @@ import jax.numpy as jnp
 from repro.core.packed import PackedSEFP
 from repro.kernels import dispatch
 from repro.kernels.common import pick_block
-from repro.kernels.sefp_matmul.ref import sefp_matmul_ref
-from repro.kernels.sefp_matmul.sefp_matmul import sefp_matmul_raw
+from repro.kernels.sefp_matmul.ref import (sefp_matmul_gemv_ref,
+                                           sefp_matmul_ref)
+from repro.kernels.sefp_matmul.sefp_matmul import (sefp_gemv_raw,
+                                                   sefp_matmul_raw)
+
+# fp32 sublane multiple: decode row blocks are padded up to this so the
+# compiled gemv kernel always sees a legal tile (interpret mode would accept
+# any M, but the two backends must run identical shapes to agree bitwise).
+SUBLANE = 8
 
 
 @functools.partial(
@@ -60,6 +67,59 @@ def _matmul_jax_ref(x, mag, sign_bits, exp, m, *, block_m=128, block_n=256,
     return _ref_jit(x, mag, sign_bits, exp, jnp.asarray(m, jnp.int32))
 
 
+# ---------------------------------------------------------------------------
+# decode-shaped gemv: tall-skinny x, 2-D grid, whole row block resident
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k",
+                                             "interpret"))
+def _gemv_pallas_call(x, mag, sign_bits, exp, m, block_n, block_k,
+                      interpret):
+    return sefp_gemv_raw(x, mag, sign_bits, exp, m, block_n=block_n,
+                         block_k=block_k, interpret=interpret)
+
+
+def _gemv_blocks(k_dim: int, n_dim: int, block_n: int, block_k: int):
+    bn = pick_block(n_dim, block_n)
+    bk = pick_block(k_dim, block_k, multiple=64)
+    if bk == 0:
+        raise ValueError(f"K={k_dim} must allow a 64-divisible block")
+    return bn, bk
+
+
+def _gemv_pallas(x, mag, sign_bits, exp, m, block_n, block_k, *, interpret):
+    k_dim, n_dim = mag.shape
+    bn, bk = _gemv_blocks(k_dim, n_dim, block_n, block_k)
+    m_arr = jnp.asarray(m, jnp.int32).reshape((1,))
+    return _gemv_pallas_call(x, mag, sign_bits, exp, m_arr, bn, bk,
+                             interpret)
+
+
+@dispatch.register("sefp_matmul_gemv", dispatch.PALLAS_TPU)
+def _gemv_tpu(x, mag, sign_bits, exp, m, *, block_n=256, block_k=512):
+    return _gemv_pallas(x, mag, sign_bits, exp, m, block_n, block_k,
+                        interpret=False)
+
+
+@dispatch.register("sefp_matmul_gemv", dispatch.PALLAS_INTERPRET)
+def _gemv_interpret(x, mag, sign_bits, exp, m, *, block_n=256, block_k=512):
+    return _gemv_pallas(x, mag, sign_bits, exp, m, block_n, block_k,
+                        interpret=True)
+
+
+_gemv_ref_jit = jax.jit(sefp_matmul_gemv_ref,
+                        static_argnames=("block_n", "block_k"))
+
+
+@dispatch.register("sefp_matmul_gemv", dispatch.JAX_REF)
+def _gemv_jax_ref(x, mag, sign_bits, exp, m, *, block_n=256, block_k=512):
+    # the oracle applies the identical pick_block resolution internally, so
+    # it walks the exact tile sequence of the Pallas kernel (bitwise).
+    return _gemv_ref_jit(x, mag, sign_bits, exp, jnp.asarray(m, jnp.int32),
+                         block_n=block_n, block_k=block_k)
+
+
 def sefp_matmul(x: jax.Array, packed: PackedSEFP, m, *,
                 block_m: int = 128, block_n: int = 256, block_k: int = 512,
                 interpret: bool | None = None,
@@ -86,4 +146,36 @@ def sefp_matmul(x: jax.Array, packed: PackedSEFP, m, *,
     out = dispatch.dispatch(
         "sefp_matmul", x2, packed.mag, packed.sign_bits, packed.exp, m,
         block_m=block_m, block_n=block_n, block_k=block_k, backend=backend)
+    return out.reshape(*lead, n_dim)
+
+
+def sefp_matmul_gemv(x: jax.Array, packed: PackedSEFP, m, *,
+                     block_n: int = 256, block_k: int = 512,
+                     backend: str | None = None) -> jax.Array:
+    """Decode-shaped ``x @ dequantize(packed, m)``: a handful of rows
+    (decode batch) against a k-major [K, N] master, with on-the-fly
+    truncation to mantissa width ``m`` (python int or traced int32 scalar).
+
+    Row count is padded to the fp32 sublane multiple (8) and sliced back,
+    so any decode batch hits a legal compiled tile; all backends see the
+    padded operand, keeping pallas-interpret and jax-ref agreement bitwise.
+    Returns f32 [..., N]."""
+    if packed.group_axis != 0 or len(packed.shape) != 2:
+        raise ValueError("sefp_matmul_gemv expects a 2-D weight packed "
+                         "along axis 0 (k-major)")
+    k_dim, n_dim = packed.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if x2.shape[1] != k_dim:
+        raise ValueError(f"x K={x2.shape[1]} vs packed K={k_dim}")
+    rows = x2.shape[0]
+    pad = -rows % SUBLANE
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+
+    out = dispatch.dispatch(
+        "sefp_matmul_gemv", x2, packed.mag, packed.sign_bits, packed.exp, m,
+        block_n=block_n, block_k=block_k, backend=backend)
+    if pad:
+        out = out[:rows]
     return out.reshape(*lead, n_dim)

@@ -1,14 +1,17 @@
-"""Pure-jnp oracle for the sefp_matmul kernel.
+"""Pure-jnp oracles for the sefp_matmul kernels.
 
-Defines the semantic contract: truncate the M8 master to width m (shift),
+Define the semantic contract: truncate the M8 master to width m (shift),
 dequantize, cast weights AND activations to bf16 (MXU input precision),
-matmul with fp32 accumulation.
+matmul with fp32 accumulation.  The gemv oracle additionally mirrors the
+decode kernel's (n, k) tiling — k innermost, one fp32 add per k-tile — so
+it matches the Pallas kernel BITWISE on identical inputs, not just to
+tolerance (fp32 accumulation order is part of the contract).
 """
 
 import jax.numpy as jnp
 from jax import lax
 
-from repro.kernels.common import GROUP, exp2i
+from repro.kernels.common import GROUP, exp2i, pick_block
 
 
 def dequant_ref(mag, sign_bits, exp, m):
@@ -30,3 +33,28 @@ def sefp_matmul_ref(x, mag, sign_bits, exp, m):
     w = dequant_ref(mag, sign_bits, exp, m).astype(jnp.bfloat16)
     return jnp.dot(x.astype(jnp.bfloat16), w,
                    preferred_element_type=jnp.float32)
+
+
+def sefp_matmul_gemv_ref(x, mag, sign_bits, exp, m, *, block_n: int = 256,
+                         block_k: int = 512):
+    """Tiled oracle for the decode gemv kernel: same block resolution
+    (pick_block), same (n, k) tile walk with k innermost, one bf16 dot and
+    one fp32 accumulate per k-tile — the exact reduction order of
+    sefp_gemv_raw, so agreement is bitwise."""
+    k_dim, n_dim = mag.shape
+    bn = pick_block(n_dim, block_n)
+    bk = pick_block(k_dim, block_k, multiple=GROUP)
+    xb = x.astype(jnp.bfloat16)
+    cols = []
+    for j in range(n_dim // bn):
+        ns = slice(j * bn, (j + 1) * bn)
+        acc = jnp.zeros((x.shape[0], bn), jnp.float32)
+        for k in range(k_dim // bk):
+            w = dequant_ref(mag[k * bk:(k + 1) * bk, ns],
+                            sign_bits[k * bk // 8:(k + 1) * bk // 8, ns],
+                            exp[k * bk // GROUP:(k + 1) * bk // GROUP, ns],
+                            m).astype(jnp.bfloat16)
+            acc = acc + jnp.dot(xb[:, k * bk:(k + 1) * bk], w,
+                                preferred_element_type=jnp.float32)
+        cols.append(acc)
+    return jnp.concatenate(cols, axis=1)

@@ -34,14 +34,11 @@ from repro.kernels import compat
 from repro.kernels.common import GROUP, exp2i
 
 
-def _matmul_kernel(m_ref, x_ref, mag_ref, sgn_ref, exp_ref, o_ref):
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    m = m_ref[0]
+def _dequant_tile(m, mag_ref, sgn_ref, exp_ref):
+    """Shared in-VMEM dequant of one [bk, bn] weight tile at runtime width
+    m: pure VPU integer/bit work, consumed by the MXU as bf16 (exact for
+    |code| <= 255).  Used by both the square-tiled matmul kernel and the
+    decode-shaped gemv kernel, so the two paths cannot drift."""
     bk, bn = mag_ref.shape
 
     # --- truncate mantissas to width m (the precision switch) -------------
@@ -60,7 +57,17 @@ def _matmul_kernel(m_ref, x_ref, mag_ref, sgn_ref, exp_ref, o_ref):
     e = exp_ref[...].astype(jnp.int32)                  # [bk//64, bn]
     quantum = exp2i(jnp.repeat(e, GROUP, axis=0) - (m - 1))
 
-    w = (sign * magk * quantum).astype(jnp.bfloat16)    # exact: |code|<=255
+    return (sign * magk * quantum).astype(jnp.bfloat16)
+
+
+def _matmul_kernel(m_ref, x_ref, mag_ref, sgn_ref, exp_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _dequant_tile(m_ref[0], mag_ref, sgn_ref, exp_ref)
     x = x_ref[...].astype(jnp.bfloat16)
     o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
@@ -91,4 +98,56 @@ def sefp_matmul_raw(x, mag, sign_bits, exp, m, *, block_m: int, block_n: int,
         interpret=interpret,
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(m, x, mag, sign_bits, exp)
+
+
+def _gemv_kernel(m_ref, x_ref, mag_ref, sgn_ref, exp_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _dequant_tile(m_ref[0], mag_ref, sgn_ref, exp_ref)
+    x = x_ref[...].astype(jnp.bfloat16)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def sefp_gemv_raw(x, mag, sign_bits, exp, m, *, block_n: int, block_k: int,
+                  interpret: bool):
+    """Decode-shaped (tall-skinny) variant: x [M, K] with small M x packed
+    W [K, N] -> f32 [M, N].
+
+    The whole row block rides along every grid step (decode batches are a
+    handful of rows), so the grid is 2-D — (N/bn, K/bk) with k innermost
+    ("arbitrary") — and each step streams one packed weight tile from HBM,
+    dequantizes it in VMEM at runtime width m and accumulates into the
+    revisited [M, bn] output block in fp32.  This is the gemv that dominates
+    the decode step (per-token activations never amortize a [bm, bk] tile),
+    where weight streaming is the whole cost and the ~2x HBM saving of the
+    packed master pays off directly.  Callers pad M to the fp32 sublane
+    multiple (repro/kernels/sefp_matmul/ops.py)."""
+    m_dim, k_dim = x.shape
+    _, n_dim = mag.shape
+    grid = (n_dim // block_n, k_dim // block_k)
+
+    grid_spec = compat.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_dim, block_k), lambda j, k, s: (0, k)),
+            pl.BlockSpec((block_k, block_n), lambda j, k, s: (k, j)),
+            pl.BlockSpec((block_k // 8, block_n), lambda j, k, s: (k, j)),
+            pl.BlockSpec((block_k // GROUP, block_n),
+                         lambda j, k, s: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((m_dim, block_n), lambda j, k, s: (0, j)),
+    )
+    return pl.pallas_call(
+        _gemv_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        interpret=interpret,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
     )(m, x, mag, sign_bits, exp)

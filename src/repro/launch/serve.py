@@ -17,6 +17,10 @@ def main():
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint dir from launch/train.py (optional)")
     ap.add_argument("--precision", type=int, default=8)
+    ap.add_argument("--decode-precision", type=int, default=None,
+                    help="switch to this width after the first 1/4 of new "
+                    "tokens (mid-generation switching; free — the schedule "
+                    "is a traced array of the fused decode scan)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -54,10 +58,19 @@ def main():
     prompts = np.asarray(
         corpus.batch(0, args.batch, args.prompt_len + 1)["inputs"]
         [:, :args.prompt_len])
-    res = server.generate(prompts, max_new=args.new_tokens)
+    schedule = None
+    if args.decode_precision is not None:
+        hi, lo, knee = args.precision, args.decode_precision, max(
+            1, args.new_tokens // 4)
+        schedule = [hi if i < knee else lo for i in range(args.new_tokens)]
+    res = server.generate(prompts, max_new=args.new_tokens,
+                          precision_schedule=schedule)
     tput = args.batch * args.new_tokens / max(res.decode_seconds, 1e-9)
     print(f"generated {args.new_tokens} tokens x {args.batch} requests "
-          f"in {res.decode_seconds:.2f}s ({tput:.1f} tok/s)")
+          f"in {res.decode_seconds:.2f}s ({tput:.1f} tok/s, "
+          f"{res.host_transfers} host transfer(s), fused decode scan)")
+    if schedule is not None:
+        print(f"precision trace: {res.precision_trace}")
     for i in range(min(2, args.batch)):
         print(f"  req{i}: {res.tokens[i].tolist()}")
 

@@ -37,6 +37,16 @@ from repro.models import rwkv6 as R6
 from repro.models.config import ModelConfig
 
 
+def _resolve(resolve, layer_params):
+    """Apply an optional per-layer parameter transform.  The serving engine
+    passes the packed-master dequant here (repro/serve/packed_step.py), so
+    the int8/uint8 master arrays are what lax.scan slices per layer and the
+    dequant sits right next to its consuming matmuls inside the scan body —
+    XLA fuses it into the dot operands and only packed bytes stream from
+    HBM.  ``None`` (training / unpacked serving) is the identity."""
+    return layer_params if resolve is None else resolve(layer_params)
+
+
 def _remat(fn, cfg: ModelConfig):
     if cfg.remat == "none":
         return fn
@@ -350,8 +360,16 @@ def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 # -- decode (one token) --------------------------------------------------------
 
-def lm_decode_hidden(params, x_emb, cache, cfg: ModelConfig):
-    """x_emb: [B,1,d]; returns (hidden [B,1,d], new_cache)."""
+def lm_decode_hidden(params, x_emb, cache, cfg: ModelConfig, resolve=None,
+                     layer_unroll: int = 1):
+    """x_emb: [B,1,d]; returns (hidden [B,1,d], new_cache).  ``resolve``
+    (optional) maps each layer's parameter slice before use — the packed
+    master's in-scan dequant hook (see ``_resolve``).  ``layer_unroll``
+    unrolls the layer scan by that factor: per-step compute is tiny at
+    decode, so on backends with per-iteration loop overhead (CPU) an
+    unrolled body lets XLA fuse across layers (~3x step latency on the CPU
+    serving bench); keep 1 (pure scan) where HLO compactness matters
+    (deep-model dry-run lowerings)."""
     pos = cache["pos"]
     if cfg.family == "hybrid":
         emb0 = x_emb
@@ -371,18 +389,20 @@ def lm_decode_hidden(params, x_emb, cache, cfg: ModelConfig):
 
             def seg_layer(x, inp):
                 lp, lcache = inp
+                lp = _resolve(resolve, lp)
                 h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
                 o, new_lcache = M2.mamba2_decode(lp["mamba"], h, lcache, cfg)
                 return x + o, new_lcache
 
             # shared attention first (cadence: at layer index start)
-            sp = jax.tree_util.tree_map(
-                lambda a, i=inv_idx % nshared: a[i], params["shared"])
+            sp = _resolve(resolve, jax.tree_util.tree_map(
+                lambda a, i=inv_idx % nshared: a[i], params["shared"]))
             ac = jax.tree_util.tree_map(lambda a, i=inv_idx: a[i],
                                         cache["attn"])
             x, new_ac = hybrid_shared_block_decode(sp, x, emb0, ac, cfg, pos)
             new_attn_caches.append(new_ac)
-            x, new_seg_cache = lax.scan(seg_layer, x, (seg, seg_cache))
+            x, new_seg_cache = lax.scan(seg_layer, x, (seg, seg_cache),
+                                        unroll=layer_unroll)
             new_layer_caches.append(new_seg_cache)
 
         new_cache = {
@@ -398,30 +418,37 @@ def lm_decode_hidden(params, x_emb, cache, cfg: ModelConfig):
     if cfg.family == "rwkv":
         def body(x, inp):
             lp, lcache = inp
-            x, new_lcache = rwkv_layer_decode(lp, x, lcache, cfg)
+            x, new_lcache = rwkv_layer_decode(_resolve(resolve, lp), x,
+                                              lcache, cfg)
             return x, new_lcache
         x, new_layer_caches = lax.scan(body, x_emb,
-                                       (params["layers"], cache["layers"]))
+                                       (params["layers"], cache["layers"]),
+                                       unroll=layer_unroll)
     else:
         def body(x, inp):
             lp, lcache = inp
-            x, new_lcache = attn_layer_decode(lp, x, lcache, cfg, pos)
+            x, new_lcache = attn_layer_decode(_resolve(resolve, lp), x,
+                                              lcache, cfg, pos)
             return x, new_lcache
         x, new_layer_caches = lax.scan(body, x_emb,
-                                       (params["layers"], cache["layers"]))
+                                       (params["layers"], cache["layers"]),
+                                       unroll=layer_unroll)
     h = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
     return h, {**cache, "layers": new_layer_caches, "pos": pos + 1}
 
 
 # -- prefill (sequence -> cache) ----------------------------------------------
 
-def lm_prefill_hidden(params, x_emb, cfg: ModelConfig, max_len: int):
-    """Run the full stack, returning (hidden [B,S,d], decode cache)."""
+def lm_prefill_hidden(params, x_emb, cfg: ModelConfig, max_len: int,
+                      resolve=None):
+    """Run the full stack, returning (hidden [B,S,d], decode cache).
+    ``resolve``: optional per-layer parameter transform (see _resolve)."""
     B, S, d = x_emb.shape
     dtype = x_emb.dtype
     if cfg.family == "rwkv":
         def body(x, lp):
             def f(lp, x):
+                lp = _resolve(resolve, lp)
                 h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
                 y, st = R6.rwkv6_apply_with_state(lp["tmix"], h, cfg)
                 x = x + y
@@ -449,6 +476,7 @@ def lm_prefill_hidden(params, x_emb, cfg: ModelConfig, max_len: int):
 
         def mamba_seg_body(x, lp):
             def f(lp, x):
+                lp = _resolve(resolve, lp)
                 h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
                 y, st = M2.mamba2_apply_with_state(lp["mamba"], h, cfg)
                 return x + y, st
@@ -456,8 +484,8 @@ def lm_prefill_hidden(params, x_emb, cfg: ModelConfig, max_len: int):
 
         for inv_idx, start in enumerate(seg_bounds):
             end = min(start + cfg.attn_every, cfg.n_layers)
-            sp = jax.tree_util.tree_map(
-                lambda a, i=inv_idx % nshared: a[i], params["shared"])
+            sp = _resolve(resolve, jax.tree_util.tree_map(
+                lambda a, i=inv_idx % nshared: a[i], params["shared"]))
             dt = x.dtype
             hcat = jnp.concatenate([x, emb0], -1) @ sp["fuse_proj"].astype(dt)
             hh, ac = attn_layer_prefill(sp, hcat, cfg, max_len, positions)
@@ -480,7 +508,8 @@ def lm_prefill_hidden(params, x_emb, cfg: ModelConfig, max_len: int):
     positions = jnp.arange(S, dtype=jnp.int32)[None, :]
 
     def body(x, lp):
-        x, c = attn_layer_prefill(lp, x, cfg, max_len, positions)
+        x, c = attn_layer_prefill(_resolve(resolve, lp), x, cfg, max_len,
+                                  positions)
         return x, c
 
     x, layer_caches = lax.scan(body, x_emb, params["layers"])

@@ -1,2 +1,2 @@
-from repro.serve.engine import SwitchableServer  # noqa: F401
+from repro.serve.engine import GenerationResult, SwitchableServer  # noqa: F401
 from repro.serve.sampler import sample_token  # noqa: F401

@@ -1,39 +1,50 @@
-"""Switchable-precision serving engine — the paper's deployment story.
+"""Switchable-precision serving engine — the paper's deployment story,
+fully device-resident.
 
-One PackedSEFP master (~9.1 bits/param) is kept resident; serving at any
-precision E5M8..E5M3 is a mantissa truncation of that master:
+One stacked SEFP master (~9.1 bits/param, repro/core/packed.py) is kept
+resident; serving at any precision E5M8..E5M3 is a runtime mantissa
+truncation of that master (``mag >> (8-m)``) performed *inside* the decode
+step (repro/serve/packed_step.py).  Consequences, in order of importance:
 
-  * `set_precision(m)` rebuilds the live weights with a single cheap
-    elementwise pass (shift + dequant) — no scale refits, no re-quantization,
-    no second model copy (contrast: conventional int quantization needs a
-    per-bit-width model zoo, tests/test_sefp_core.py demonstrates why);
-  * precision can be switched *mid-generation* — prefill at high precision,
-    decode at low (the paper's prefill/decode asymmetry), or per-request by
-    task type (generation vs understanding);
-  * requests are served in fixed batch slots with a shared KV cache; the
-    decode step is one jitted call per token for the whole batch.
+  * ``set_precision(m)`` is O(1): it records the default width.  No weight
+    tree is ever rebuilt — the truncation happens in-graph against the
+    packed arrays, next to the consuming matmuls (contrast: conventional
+    int quantization needs a per-bit-width model zoo, and the old
+    materialize-on-switch engine paid a full O(params) elementwise pass per
+    switch; tests/test_sefp_core.py demonstrates why SEFP avoids both);
+  * decode is ONE jitted ``lax.scan`` over steps: sampling lives in the
+    scan body, the precision schedule is a traced ``int32[max_new]`` array
+    consumed in-graph (the §3 traced-m property — one executable covers
+    every schedule), and the whole generation returns as a single
+    ``[B, max_new]`` device array — exactly one host transfer;
+  * precision can therefore switch *mid-generation* (prefill high, decode
+    low — the paper's prefill/decode asymmetry, or per-request by task
+    type) at zero per-token cost: a different int in the schedule array;
+  * requests are served in fixed batch slots with a shared KV cache.
 
-The fused HBM-streaming path (dequant inside the matmul kernel,
-repro/kernels/sefp_matmul) is what a real TPU serving binary would run for
-the big projections; benchmarks/bench_memory_speed.py measures it.  This
-engine uses the materialize-on-switch path, which is numerically identical
-(tests/test_serving.py asserts it).
+``generate_per_token`` keeps the legacy loop — one jitted call and one
+host sync per token — as the measured baseline; benchmarks/bench_decode.py
+tracks fused-scan vs per-token vs materialized throughput, host-sync
+counts and switch latency in BENCH_decode.json.  On TPU the unembed gemv
+can be routed through the fused sefp_matmul_gemv kernel
+(``kernel_backend=``); layer matmuls use the XLA-fused in-scan dequant,
+which is numerically identical (tests/test_serving.py asserts it).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.core import packed as packed_lib
-from repro.models import model_zoo as Z
 from repro.models.config import ModelConfig
+from repro.serve import packed_step as PS
 from repro.serve.sampler import sample_token
 
 
@@ -43,97 +54,169 @@ class GenerationResult:
     prompt_len: int
     precision_trace: List[int]  # mantissa width used at each decode step
     decode_seconds: float
+    host_transfers: int         # device->host syncs during decode
 
 
 class SwitchableServer:
+    """Batched switchable-precision server over one packed SEFP master.
+
+    ``kernel_backend``: None (default) keeps every matmul on the portable
+    XLA path with fused in-scan dequant; any backend registered with
+    repro.kernels.dispatch (compiled Mosaic on TPU, the interpreter, or the
+    jitted jnp oracle) additionally routes the unembed projection — the
+    decode-shaped gemv — through the ``sefp_matmul_gemv`` kernel op, which
+    also adopts the kernel's bf16-operand numerics at the logit head (see
+    packed_step.master_logits)."""
+
     def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
-                 cache_dtype=jnp.bfloat16):
+                 cache_dtype=jnp.bfloat16, min_size: int = 4096,
+                 kernel_backend: Optional[str] = None,
+                 layer_unroll: Optional[int] = None):
         self.cfg = cfg
         self.max_len = max_len
         self.cache_dtype = cache_dtype
+        self.kernel_backend = kernel_backend
         # pack once: the single multi-precision master
-        self.master = packed_lib.pack_tree(params)
+        self.master = PS.pack_master_params(params, min_size=min_size)
         self.master_bytes = packed_lib.tree_nbytes(self.master)
-        self._m: Optional[int] = None
-        self._live = None
-        self._serve = jax.jit(Z.make_serve_step(cfg))
-        self._prefill = jax.jit(Z.make_prefill(cfg),
+        self._m = packed_lib.MASTER_M
+        serve = PS.make_master_serve_step(cfg, kernel_backend, layer_unroll)
+        self._serve = jax.jit(serve)
+        self._prefill = jax.jit(PS.make_master_prefill(cfg, kernel_backend),
                                 static_argnames=("max_len",))
-        self.set_precision(8)
+        self._fused = jax.jit(_make_fused_decode(serve),
+                              static_argnames=("temperature", "top_k"))
 
     # -- precision switching ------------------------------------------------
     def set_precision(self, m: int):
-        """Truncate the master to E5M<m>.  One elementwise pass; no scale
-        refits (the SEFP property)."""
-        if m == self._m:
-            return
-        self._live = packed_lib.dequantize_tree(
-            self.master, jnp.int32(m), dtype=jnp.bfloat16)
+        """Set the default serving width E5M<m>.  O(1): no weight pass, no
+        recompilation — the width is a traced scalar of the compiled step
+        (per-generation overrides go through ``precision_schedule``)."""
+        m = int(m)
+        if not 1 <= m <= packed_lib.MASTER_M:
+            raise ValueError(f"mantissa width must be in "
+                             f"1..{packed_lib.MASTER_M}, got {m}")
         self._m = m
 
     @property
     def precision(self) -> int:
         return self._m
 
+    def _schedule(self, max_new: int, precision_schedule) -> List[int]:
+        if precision_schedule is None:
+            sched = [self._m] * max_new
+        elif callable(precision_schedule):
+            sched = [int(precision_schedule(i)) for i in range(max_new)]
+        else:
+            sched = [int(x) for x in precision_schedule]
+            if len(sched) != max_new:
+                raise ValueError(f"schedule length {len(sched)} != "
+                                 f"max_new {max_new}")
+        for m in sched:
+            if not 1 <= m <= packed_lib.MASTER_M:
+                raise ValueError(f"schedule width {m} out of range")
+        return sched
+
     # -- serving --------------------------------------------------------------
     def prefill(self, prompts: np.ndarray):
         """prompts: [B, S] int32 (equal-length batch slot).  Returns
-        (last_logits, cache)."""
+        (last_logits, cache), computed straight from the packed master at
+        the current precision."""
         toks = jnp.asarray(prompts, jnp.int32)
-        return self._prefill(self._live, toks, max_len=self.max_len)
+        return self._prefill(self.master, toks, jnp.int32(self._m),
+                             max_len=self.max_len)
 
     def generate(self, prompts: np.ndarray, max_new: int,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  precision_schedule=None) -> GenerationResult:
-        """Batched generation.  ``precision_schedule``: optional callable
-        step_idx -> mantissa width, enabling mid-generation switching
-        (e.g. prefill/high, decode/low)."""
+        """Batched generation as one fused device-resident scan.
+
+        ``precision_schedule``: optional callable ``step_idx -> mantissa
+        width`` or int sequence of length ``max_new``; it becomes a traced
+        int32 array consumed in-graph, so mid-generation switching (e.g.
+        prefill/high, decode/low) costs nothing and triggers no retrace.
+        ``temperature``/``top_k`` are static (see serve/sampler.py); a new
+        ``max_new`` retraces once (new scan length)."""
         B, S = prompts.shape
         assert S + max_new <= self.max_len
+        sched = self._schedule(max_new, precision_schedule)
+        logits, cache = self.prefill(prompts)
+        key = jax.random.PRNGKey(seed)
+        t0 = time.perf_counter()
+        toks = self._fused(self.master, cache, logits,
+                           jnp.asarray(sched, jnp.int32), key,
+                           temperature=temperature, top_k=top_k)
+        tokens = np.asarray(toks)  # the single device->host transfer
+        dt = time.perf_counter() - t0
+        return GenerationResult(tokens=tokens, prompt_len=S,
+                                precision_trace=sched, decode_seconds=dt,
+                                host_transfers=1)
+
+    def generate_per_token(self, prompts: np.ndarray, max_new: int,
+                           temperature: float = 0.0, top_k: int = 0,
+                           seed: int = 0,
+                           precision_schedule=None) -> GenerationResult:
+        """Legacy decode loop: one jitted step dispatch and one host token
+        sync per step.  Numerically the same master step as the fused scan
+        (token-for-token identical at temperature 0); kept as the measured
+        baseline for BENCH_decode.json and as the shape a non-batched
+        interactive client would run."""
+        B, S = prompts.shape
+        assert S + max_new <= self.max_len
+        sched = self._schedule(max_new, precision_schedule)
         logits, cache = self.prefill(prompts)
         key = jax.random.PRNGKey(seed)
         out = []
-        trace = []
         t0 = time.perf_counter()
         tok = sample_token(logits, key, temperature, top_k)
-        for i in range(max_new):
-            if precision_schedule is not None:
-                self.set_precision(int(precision_schedule(i)))
-            trace.append(self._m)
-            out.append(np.asarray(tok))
-            logits, cache = self._serve(self._live, cache, tok)
+        for m in sched:
+            out.append(np.asarray(tok))  # per-step host sync (the cost)
+            logits, cache = self._serve(self.master, cache, tok,
+                                        jnp.int32(m))
             key, sub = jax.random.split(key)
             tok = sample_token(logits, sub, temperature, top_k)
         dt = time.perf_counter() - t0
         return GenerationResult(tokens=np.stack(out, axis=1), prompt_len=S,
-                                precision_trace=trace, decode_seconds=dt)
+                                precision_trace=sched, decode_seconds=dt,
+                                host_transfers=len(out))
 
     # -- accounting ------------------------------------------------------------
     def memory_report(self) -> dict:
         """Bytes: fp16 baseline vs packed master vs truncated stream at the
-        current precision (paper Table 2 accounting)."""
-        n_params = 0
-        packed_bytes = self.master_bytes["packed_bytes"]
-        raw_bytes = self.master_bytes["raw_bytes"]
-
-        def count(leaf):
-            nonlocal n_params
-            if isinstance(leaf, packed_lib.PackedSEFP):
-                n_params += int(np.prod(leaf.shape))
-            elif hasattr(leaf, "size"):
-                n_params += int(leaf.size)
-            return leaf
-
-        jax.tree_util.tree_map(
-            count, self.master,
-            is_leaf=lambda x: isinstance(x, packed_lib.PackedSEFP))
-        m = self._m or 8
-        stream_bits = (m + 1) + 8.0 / 64
+        current precision (paper Table 2 accounting).  All figures derive
+        from core/packed.py's layout constants via ``tree_nbytes`` and
+        ``stream_bits_per_param`` — nothing is re-derived here, so the
+        accounting cannot drift from the format."""
+        nb = self.master_bytes
+        stream_bits = packed_lib.stream_bits_per_param(self._m)
         return {
-            "n_params": n_params,
-            "fp16_bytes": 2 * n_params,
-            "master_bytes": packed_bytes + raw_bytes,
+            "n_params": nb["n_params"],
+            "fp16_bytes": 2 * nb["n_params"],
+            "master_bytes": nb["total_bytes"],
+            "master_bits_per_param": packed_lib.stream_bits_per_param(
+                packed_lib.MASTER_M),
             "stream_bytes_at_precision": int(
-                stream_bits / 8 * (packed_bytes / (9.125 / 8))) + raw_bytes,
-            "precision": m,
+                stream_bits / 8 * nb["packed_params"]) + nb["raw_bytes"],
+            "precision": self._m,
         }
+
+
+def _make_fused_decode(serve_step):
+    """Build the fused decode fn: one lax.scan over steps, schedule traced,
+    sampling in-body.  Emits the token *consumed* at each step (the token
+    sampled from the previous logits), matching the legacy loop exactly."""
+
+    def fused(master, cache, logits0, schedule, key, temperature, top_k):
+        tok0 = sample_token(logits0, key, temperature, top_k)
+
+        def body(carry, m_step):
+            tok, cache, key = carry
+            logits, cache = serve_step(master, cache, tok, m_step)
+            key, sub = jax.random.split(key)
+            nxt = sample_token(logits, sub, temperature, top_k)
+            return (nxt, cache, key), tok
+
+        (_, cache, _), toks = lax.scan(body, (tok0, cache, key), schedule)
+        return jnp.swapaxes(toks, 0, 1)  # [T, B] -> [B, T]
+
+    return fused

@@ -1,19 +1,31 @@
-"""Packed-weight decode step: SEFP weight streaming at the HLO level.
+"""Packed-master serving steps: SEFP weight streaming with traced precision.
 
-The baseline decode step streams bf16 weights (16 bits/param).  This variant
-keeps the big per-layer weights in SEFP int8 codes (+ per-64-group int8
-exponents ≈ 8.125 bits/param) and dequantizes EACH LAYER'S SLICE inside the
-scan body, so the int8->bf16 convert + group-scale multiply sit right next
-to their consuming matmuls (XLA fuses elementwise producers into dot
-operands) and HBM weight traffic drops ~2x.  This is the XLA-level
-realization of the paper's Table 2 mechanism; the Pallas kernel
-(repro/kernels/sefp_matmul) is the fully-fused TPU form with runtime
-mantissa truncation on top.
+The serving weight representation is the E5M8 PackedSEFP master from
+repro/core/packed.py in its *stacked* layout: every eligible weight becomes
+``{"mag" uint8 [..., K, N], "sign" uint8 [..., K//8, N],
+"exp" int8 [..., K//64, N]}`` (~9.1 bits/param), grouped along the
+contraction axis.  The decode and prefill steps below run the ordinary
+model assembly (repro/models/transformer.py) with a ``resolve`` hook that
+dequantizes EACH LAYER'S SLICE inside the scan body at a *traced* mantissa
+width m:
 
-Supports the dense/vlm/moe families (scan-over-layers with attention KV
-caches).  Serving precision m <= 7 (int8 two's-complement codes).  Used by
-the dry-run's "packed" variant (hillclimb cell C) and covered by
-tests/test_serving.py.
+  * only packed bytes stream from HBM — the uint8->bf16 convert, the sign
+    unpack and the group-quantum multiply sit right next to their consuming
+    matmuls, and XLA fuses them into the dot operands (~2x less weight
+    traffic than bf16, the paper's Table 2 mechanism);
+  * ``m`` enters only through ``mag >> (8-m)`` and ``2^(E*-(m-1))`` — cheap
+    in-graph scalars — so ONE compiled step serves every precision and a
+    precision switch (even mid-generation, via the engine's traced schedule)
+    moves zero bytes and recompiles nothing (the §3 traced-m property);
+  * the unembed projection — the largest single decode matmul — can be
+    routed through the decode-shaped ``sefp_matmul_gemv`` kernel
+    (repro/kernels/sefp_matmul), the fully-fused TPU form that truncates in
+    VMEM registers.
+
+Supports every LM family (dense/vlm/moe/rwkv/hybrid); enc-dec serving is
+not wired up (the engine never supported it).  Used by the switchable
+serving engine (repro/serve/engine.py), the dry-run's "packed" variant
+(hillclimb cell C) and covered by tests/test_packed_step.py.
 """
 
 from __future__ import annotations
@@ -22,68 +34,44 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
+from repro.core import packed as packed_lib
 from repro.core import sefp
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
-PACK_KEY = "sefp_codes"
-
 
 def _eligible(name: str, leaf, min_size: int) -> bool:
-    # per-layer stacked weights [L, K, N] (or [L, E, K, N] for MoE experts)
-    # plus the unembed head [d, V]; the input embedding stays unpacked (it
-    # is gathered, not matmul'd).
+    # per-layer stacked weights [L, K, N] (or [L, E, K, N] for MoE experts,
+    # [nshared, ...] for hybrid shared blocks) plus the unembed head [d, V];
+    # the input embedding stays unpacked (it is gathered, not matmul'd) and
+    # the SSM/RWKV recurrence + norm/bias leaves keep full precision
+    # (sefp.DEFAULT_EXCLUDE, DESIGN.md §5).
     if not (hasattr(leaf, "ndim") and leaf.ndim >= 2
             and leaf.dtype in (jnp.float32, jnp.bfloat16)
             and leaf.shape[-2] % sefp.GROUP_SIZE == 0
             and leaf.size >= min_size):
         return False
+    for s in sefp.DEFAULT_EXCLUDE:
+        if s in name:
+            return False
     if name.endswith("w_unembed"):
         return True
     return leaf.ndim >= 3
 
 
-def pack_leaf(w: jax.Array, m: int) -> dict:
-    """Quantize [..., K, N] along K into int8 codes + int8 group exps."""
-    *lead, K, N = w.shape
-    g = w.astype(jnp.float32).reshape(*lead, K // sefp.GROUP_SIZE,
-                                      sefp.GROUP_SIZE, N)
-    e = jnp.clip(sefp.floor_log2(g).max(axis=-2, keepdims=True),
-                 sefp.EXP_MIN, sefp.EXP_MAX)
-    quantum = sefp.exp2i(e - (m - 1))
-    maxmag = float(2 ** m - 1)
-    codes = jnp.clip(jnp.round(g / quantum), -maxmag, maxmag)
-    return {PACK_KEY: codes.astype(jnp.int8).reshape(*lead, K, N),
-            "exp": e.astype(jnp.int8).reshape(*lead, K // sefp.GROUP_SIZE,
-                                              N)}
-
-
-def dequant_leaf(packed: dict, m: int, dtype=jnp.bfloat16) -> jax.Array:
-    codes = packed[PACK_KEY]
-    e = packed["exp"].astype(jnp.int32)
-    quantum = sefp.exp2i(e - (m - 1))
-    quantum = jnp.repeat(quantum, sefp.GROUP_SIZE, axis=-2)
-    return (codes.astype(jnp.float32) * quantum).astype(dtype)
-
-
-def _is_packed(x) -> bool:
-    return isinstance(x, dict) and PACK_KEY in x
-
-
-def pack_params(params: Any, m: int = 7, min_size: int = 1 << 16) -> Any:
-    """Pack every eligible stacked weight; other leaves stay as-is (cast to
-    bf16 if float32, matching the deployed dtype).  The serving width m is
-    baked in (int8 codes); runtime truncation below m is still free via
-    code >> k (the master path in core/packed.py keeps the full M8)."""
+def pack_master_params(params: Any, min_size: int = 4096) -> Any:
+    """Pack every eligible weight to the stacked E5M8 master; other leaves
+    stay as-is (cast to bf16 if float32, matching the deployed dtype).  The
+    result is the single multi-precision serving artifact: every width
+    E5M8..E5M3 is a runtime truncation of it."""
 
     def visit(path, leaf):
         name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                         for k in path)
         if _eligible(name, leaf, min_size):
-            return pack_leaf(leaf, m)
+            return packed_lib.pack_stacked(leaf)
         if hasattr(leaf, "dtype") and leaf.dtype == jnp.float32:
             return leaf.astype(jnp.bfloat16)
         return leaf
@@ -91,46 +79,103 @@ def pack_params(params: Any, m: int = 7, min_size: int = 1 << 16) -> Any:
     return jax.tree_util.tree_map_with_path(visit, params)
 
 
-def dequant_tree(tree: Any, m: int, dtype=jnp.bfloat16) -> Any:
-    return jax.tree_util.tree_map(
-        lambda x: dequant_leaf(x, m, dtype) if _is_packed(x) else x,
-        tree, is_leaf=_is_packed)
+def dequant_master_tree(tree: Any, m, dtype=jnp.bfloat16) -> Any:
+    """Dequantize every master leaf at (possibly traced) width m."""
+    return packed_lib.dequantize_master_tree(tree, m, dtype)
 
 
-def make_packed_serve_step(cfg: ModelConfig, m: int = 7):
-    """serve(packed_params, cache, token) -> (logits, cache): per-layer
-    in-scan dequant so only int8 codes stream from HBM."""
-    if cfg.family not in ("dense", "vlm", "moe"):
+def master_logits(h_last, unembed, m, kernel_backend: str | None = None):
+    """Decode head over the packed master: h_last [B,1,d] -> logits [B,V]
+    f32 with on-the-fly truncation to width m.
+
+    ``kernel_backend=None`` is the portable XLA path (dequant fused into the
+    f32 dot, matching the unpacked ``logits_for_last`` head).  Naming a
+    backend registered with repro.kernels.dispatch routes the projection —
+    a tall-skinny gemv, the largest single decode matmul — through the
+    ``sefp_matmul_gemv`` kernel op instead.  NOTE: this adopts the kernel
+    contract (x AND w rounded to bf16, the MXU input precision, with fp32
+    accumulation), so it is a *numerics* choice at the logit head, not pure
+    routing — near-tied logits may argmax differently across the two paths.
+    Each path is internally consistent (fused scan == per-token loop,
+    asserted per backend in tests/test_serving.py)."""
+    w = unembed["w_unembed"]
+    if not packed_lib.is_master_leaf(w):
+        return L.logits_for_last(h_last, unembed)
+    if kernel_backend is None:
+        wq = packed_lib.dequantize_stacked(w, m, dtype=jnp.float32)
+        return h_last[:, 0].astype(jnp.float32) @ wq
+    from repro.kernels.sefp_matmul import sefp_matmul_gemv
+    return sefp_matmul_gemv(h_last[:, 0], packed_lib.packed_view(w), m,
+                            backend=kernel_backend)
+
+
+def _auto_layer_unroll(cfg: ModelConfig, layer_unroll: int | None) -> int:
+    """Decode layer-loop unroll factor.  Per-step compute is tiny, so on
+    CPU (per-iteration loop overhead, no HLO-size pressure) the layer loop
+    unrolls fully and XLA fuses across layers — ~3x step latency on the
+    serving bench; on TPU the scan stays rolled (one layer's HLO regardless
+    of depth, the dry-run compile-tractability requirement)."""
+    if layer_unroll is not None:
+        return max(1, int(layer_unroll))
+    return cfg.n_layers if jax.default_backend() == "cpu" else 1
+
+
+def make_master_serve_step(cfg: ModelConfig,
+                           kernel_backend: str | None = None,
+                           layer_unroll: int | None = None):
+    """serve(master, cache, token[B] int32, m int32) -> (logits, cache):
+    one decode step directly from the packed master, dequantizing each
+    layer's slice in-scan at traced width m."""
+    if cfg.is_encdec:
         raise NotImplementedError(
-            "packed serving currently targets attention-family stacks")
+            "packed-master serving covers the LM families; enc-dec decode "
+            "caches are built from encoder output (models/encdec.py)")
     dt = jnp.bfloat16
+    unroll = _auto_layer_unroll(cfg, layer_unroll)
 
-    def serve(params, cache, token):
-        x = L.embed(params["embed"], token[:, None], dt)
-        pos = cache["pos"]
+    def serve(master, cache, token, m):
+        def resolve(layer_slice):
+            return dequant_master_tree(layer_slice, m, dt)
 
-        def body(xc, inp):
-            lp_packed, lcache = inp
-            lp = dequant_tree(lp_packed, m, dt)  # this layer's slice only
-            xc, nc = T.attn_layer_decode(lp, xc, lcache, cfg, pos)
-            return xc, nc
-
-        x, new_layers = lax.scan(body, x, (params["layers"],
-                                           cache["layers"]))
-        h = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
-        unemb = dequant_tree(params["unembed"], m, dt)
-        logits = L.logits_for_last(h, unemb)
-        return logits, {**cache, "layers": new_layers, "pos": pos + 1}
+        x = L.embed(master["embed"], token[:, None], dt)
+        h, cache = T.lm_decode_hidden(master, x, cache, cfg, resolve=resolve,
+                                      layer_unroll=unroll)
+        logits = master_logits(h, master["unembed"], m, kernel_backend)
+        return logits, cache
 
     return serve
 
 
-def packed_param_shapes(cfg: ModelConfig, m: int = 7) -> Any:
+def make_master_prefill(cfg: ModelConfig,
+                        kernel_backend: str | None = None):
+    """prefill(master, tokens [B,S], m, max_len) -> (last_logits, cache),
+    with the same in-scan per-layer dequant as the decode step — no weight
+    tree is ever materialized at any width."""
+    if cfg.is_encdec:
+        raise NotImplementedError(
+            "packed-master serving covers the LM families")
+    dt = jnp.bfloat16
+
+    def prefill(master, tokens, m, max_len: int):
+        def resolve(layer_slice):
+            return dequant_master_tree(layer_slice, m, dt)
+
+        x = L.embed(master["embed"], tokens, dt)
+        h, cache = T.lm_prefill_hidden(master, x, cfg, max_len,
+                                       resolve=resolve)
+        logits = master_logits(h[:, -1:], master["unembed"], m,
+                               kernel_backend)
+        return logits, cache
+
+    return prefill
+
+
+def master_param_shapes(cfg: ModelConfig, min_size: int = 1 << 16) -> Any:
     """ShapeDtypeStruct tree of the packed serving params (dry-run)."""
     from repro.models import model_zoo as Z
 
     def build():
         params = Z.init_params(cfg, jax.random.PRNGKey(0))
-        return pack_params(params, m)
+        return pack_master_params(params, min_size=min_size)
 
     return jax.eval_shape(build)

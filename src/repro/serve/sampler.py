@@ -1,4 +1,13 @@
-"""Token samplers (greedy / temperature / top-k), jit-friendly."""
+"""Token samplers (greedy / temperature / top-k), jit- and scan-body-safe.
+
+``temperature`` and ``top_k`` are STATIC python numbers, not traced values:
+the branches below resolve at trace time, so the function can sit inside a
+jitted ``lax.scan`` decode body (repro/serve/engine.py) without introducing
+data-dependent control flow.  Callers that jit a wrapper must mark both as
+static arguments (the engine does); passing a tracer here raises a
+TracerBoolConversionError by design — sampling *strategy* is a compile-time
+property of a generation, unlike the SEFP mantissa width, which is traced.
+"""
 
 from __future__ import annotations
 
@@ -8,12 +17,18 @@ import jax.numpy as jnp
 
 def sample_token(logits: jax.Array, key, temperature: float = 0.0,
                  top_k: int = 0) -> jax.Array:
-    """logits: [B, V] -> token ids [B]."""
+    """logits: [B, V] -> token ids [B].  temperature <= 0 is greedy argmax
+    (``key`` is ignored); top_k > 0 restricts sampling to the k largest
+    logits per row."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
     if top_k > 0:
+        top_k = min(int(top_k), logits.shape[-1])
         vals, _ = jax.lax.top_k(logits, top_k)
         cutoff = vals[:, -1:]
-        logits = jnp.where(logits < cutoff, -1e30, logits)
+        # finfo.min, not an ad-hoc -1e30 literal: exactly representable in
+        # the logits dtype and still the identity for max/softmax masking.
+        neg = jnp.finfo(logits.dtype).min
+        logits = jnp.where(logits < cutoff, neg, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

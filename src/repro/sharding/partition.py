@@ -77,9 +77,12 @@ def param_pspecs(param_shapes: Any, mesh: Mesh) -> Any:
 
     def visit(path, leaf):
         name = _path_str(path)
-        # packed-weight leaves ({w}/sefp_codes, {w}/exp) inherit the rule of
-        # the weight they pack (serve/packed_step.py)
-        name = re.sub(r"/(sefp_codes|exp)$", "", name)
+        # packed-master leaves ({w}/mag, {w}/sign, {w}/exp — the stacked
+        # SEFP layout, core/packed.py) inherit the rule of the weight they
+        # pack; sign/exp rows divide K by 8/64, so their K dim usually hits
+        # the divisibility fallback and replicates, which is correct — they
+        # are 1/8 and 1/64 of the payload.
+        name = re.sub(r"/(mag|sign|exp)$", "", name)
         if len(leaf.shape) < 2:
             return P()  # biases / norms / scalars replicated
         for pat, spec in _PARAM_RULES:

@@ -13,14 +13,15 @@ import pytest
 
 from repro.core import packed as packed_lib
 from repro.kernels import compat, dispatch
-from repro.kernels.sefp_matmul import sefp_matmul
-from repro.kernels.sefp_matmul.ref import sefp_matmul_ref
+from repro.kernels.sefp_matmul import sefp_matmul, sefp_matmul_gemv
+from repro.kernels.sefp_matmul.ref import (sefp_matmul_gemv_ref,
+                                           sefp_matmul_ref)
 from repro.kernels.sefp_pack import sefp_pack_pallas
 from repro.kernels.sefp_pack.ref import sefp_pack_ref
 from repro.kernels.sefp_quant import sefp_quantize_pallas
 from repro.kernels.sefp_quant.ref import sefp_quantize_ref
 
-OPS = ("sefp_matmul", "sefp_pack", "sefp_quant")
+OPS = ("sefp_matmul", "sefp_matmul_gemv", "sefp_pack", "sefp_quant")
 
 
 def rand(shape, seed=0, scale=1.0):
@@ -167,6 +168,19 @@ class TestBackendAgreement:
         b = sefp_matmul(x, p, m, backend=dispatch.JAX_REF)
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
+    @pytest.mark.parametrize("m", [8, 6, 4, 3])
+    def test_gemv_bitwise_multi_tile(self, m):
+        # the gemv oracle mirrors the kernel's (n, k) tiling exactly, so
+        # unlike the square kernel above, bitwise agreement holds even
+        # with MULTIPLE k tiles (fp32 accumulation order is contractual).
+        x = rand((4, 256), seed=60 + m)
+        p = packed_lib.pack(rand((256, 256), seed=70 + m), group_axis=0)
+        a = sefp_matmul_gemv(x, p, m, block_n=128, block_k=128,
+                             backend=dispatch.PALLAS_INTERPRET)
+        b = sefp_matmul_gemv(x, p, m, block_n=128, block_k=128,
+                             backend=dispatch.JAX_REF)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
     def test_ref_backends_match_standalone_oracles(self):
         w = rand((128, 128), seed=50)
         x = rand((8, 128), seed=51)
@@ -179,6 +193,9 @@ class TestBackendAgreement:
         np.testing.assert_array_equal(
             np.asarray(sefp_matmul(x, p, 6, backend=dispatch.JAX_REF)),
             np.asarray(sefp_matmul_ref(x, mag, sgn, e, 6)))
+        np.testing.assert_array_equal(
+            np.asarray(sefp_matmul_gemv(x, p, 6, backend=dispatch.JAX_REF)),
+            np.asarray(sefp_matmul_gemv_ref(x, mag, sgn, e, 6)))
 
 
 class TestCompat:

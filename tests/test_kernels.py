@@ -10,7 +10,7 @@ from repro.core import packed as packed_lib
 from repro.core import sefp as sefp_core
 from repro.kernels.sefp_quant import sefp_quantize_pallas
 from repro.kernels.sefp_quant.ref import sefp_quantize_ref
-from repro.kernels.sefp_matmul import sefp_matmul
+from repro.kernels.sefp_matmul import sefp_matmul, sefp_matmul_gemv
 from repro.kernels.sefp_matmul.ref import sefp_matmul_ref
 
 
@@ -133,3 +133,59 @@ class TestSefpMatmulKernel:
         errs = [float(np.abs(np.asarray(sefp_matmul(x, p, m)) - exact).mean())
                 for m in (8, 6, 4, 3)]
         assert errs[0] <= errs[1] <= errs[2] <= errs[3]
+
+
+class TestSefpGemvKernel:
+    """Decode-shaped path: tall-skinny x, 2-D (n, k) grid, whole row block
+    resident.  The oracle mirrors the tiling, so agreement is BITWISE (the
+    serving acceptance bar — argmax over logits must not depend on which
+    backend computed them)."""
+
+    @pytest.mark.parametrize("rows", [1, 2, 4, 8])
+    @pytest.mark.parametrize("m_bits", [8, 6, 4, 3])
+    def test_bitwise_vs_oracle(self, rows, m_bits):
+        x = rand((rows, 256), seed=20 + rows)
+        w = rand((256, 256), seed=21 + m_bits)
+        p = packed_lib.pack(w, group_axis=0)
+        a = sefp_matmul_gemv(x, p, m_bits, block_n=128, block_k=128,
+                             backend="pallas-interpret")
+        b = sefp_matmul_gemv(x, p, m_bits, block_n=128, block_k=128,
+                             backend="jax-ref")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_row_padding_is_invisible(self):
+        # M=3 pads to the sublane multiple internally; results must equal
+        # the unpadded rows of an M=8 call on the same data.
+        x8 = rand((8, 128), seed=30)
+        w = rand((128, 128), seed=31)
+        p = packed_lib.pack(w, group_axis=0)
+        full = sefp_matmul_gemv(x8, p, 5, backend="jax-ref")
+        part = sefp_matmul_gemv(x8[:3], p, 5, backend="jax-ref")
+        np.testing.assert_array_equal(np.asarray(full)[:3], np.asarray(part))
+
+    def test_matches_square_kernel_to_tolerance(self):
+        # same contract as sefp_matmul; only the fp32 accumulation tiling
+        # differs between the two paths.
+        x = rand((4, 512), seed=32)
+        w = rand((512, 256), seed=33)
+        p = packed_lib.pack(w, group_axis=0)
+        for m_bits in (8, 5, 3):
+            a = sefp_matmul_gemv(x, p, m_bits, backend="jax-ref")
+            b = sefp_matmul_ref(x, p.mag, p.sign_bits, p.exp, m_bits)
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=2e-3)
+
+    def test_traced_m_and_leading_dims(self):
+        x = rand((2, 1, 128), seed=34)
+        w = rand((128, 64), seed=35)
+        p = packed_lib.pack(w, group_axis=0)
+
+        @jax.jit
+        def f(x, m):
+            return sefp_matmul_gemv(x, p, m, backend="jax-ref")
+
+        out = f(x, jnp.int32(4))
+        assert out.shape == (2, 1, 64)
+        ref = sefp_matmul_gemv(x.reshape(2, 128), p, 4, backend="jax-ref")
+        np.testing.assert_array_equal(np.asarray(out).reshape(2, 64),
+                                      np.asarray(ref))

@@ -1,10 +1,12 @@
-"""Packed-weight decode step (serve/packed_step.py): numerics vs the
-materialized-dequant path, and byte accounting."""
+"""Packed-master serving steps (serve/packed_step.py): numerics vs the
+materialized-dequant path at a traced width, prefill agreement, one
+executable for all widths, byte accounting, multi-family coverage."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import packed as packed_lib
 from repro.models import model_zoo as Z
 from repro.models.config import ModelConfig
 from repro.serve import packed_step as PS
@@ -15,28 +17,62 @@ CFG = ModelConfig(name="packed-tiny", family="dense", n_layers=2,
                   loss_chunk=32, remat="none", dtype="bfloat16")
 
 
-def test_packed_serve_matches_dequant_serve():
+def test_master_serve_matches_dequant_serve():
     params = Z.init_params(CFG, jax.random.PRNGKey(0))
-    packed = PS.pack_params(params, m=7, min_size=1 << 10)
-    serve_p = jax.jit(PS.make_packed_serve_step(CFG, m=7))
+    master = PS.pack_master_params(params, min_size=1 << 10)
+    serve_p = jax.jit(PS.make_master_serve_step(CFG))
     serve_ref = jax.jit(Z.make_serve_step(CFG))
-    ref_params = PS.dequant_tree(packed, 7, jnp.bfloat16)
 
     B = 2
-    cache1 = Z.init_cache(CFG, params, B, 32)
-    cache2 = Z.init_cache(CFG, params, B, 32)
-    tok = jnp.asarray([3, 7], jnp.int32)
-    for _ in range(4):
-        lp, cache1 = serve_p(packed, cache1, tok)
-        lr, cache2 = serve_ref(ref_params, cache2, tok)
+    for m in (8, 7, 4):
+        ref_params = PS.dequant_master_tree(master, m, jnp.bfloat16)
+        cache1 = Z.init_cache(CFG, params, B, 32)
+        cache2 = Z.init_cache(CFG, params, B, 32)
+        tok = jnp.asarray([3, 7], jnp.int32)
+        for _ in range(4):
+            lp, cache1 = serve_p(master, cache1, tok, jnp.int32(m))
+            lr, cache2 = serve_ref(ref_params, cache2, tok)
+            np.testing.assert_allclose(np.asarray(lp), np.asarray(lr),
+                                       rtol=2e-2, atol=2e-2)
+            tok = jnp.argmax(lp, -1).astype(jnp.int32)
+
+
+def test_master_prefill_matches_dequant_prefill():
+    params = Z.init_params(CFG, jax.random.PRNGKey(1))
+    master = PS.pack_master_params(params, min_size=1 << 10)
+    prefill_p = jax.jit(PS.make_master_prefill(CFG),
+                        static_argnames=("max_len",))
+    prefill_ref = jax.jit(Z.make_prefill(CFG), static_argnames=("max_len",))
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, CFG.vocab_size, (2, 16)),
+        jnp.int32)
+    for m in (8, 3):
+        lp, cache_p = prefill_p(master, toks, jnp.int32(m), max_len=32)
+        ref_params = PS.dequant_master_tree(master, m, jnp.bfloat16)
+        lr, cache_r = prefill_ref(ref_params, toks, max_len=32)
         np.testing.assert_allclose(np.asarray(lp), np.asarray(lr),
                                    rtol=2e-2, atol=2e-2)
-        tok = jnp.argmax(lp, -1).astype(jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(cache_p["pos"]), np.asarray(cache_r["pos"]))
+
+
+def test_one_executable_serves_every_width():
+    """the §3 traced-m property, at the serving-step level: changing m must
+    NOT retrace/recompile the jitted step."""
+    params = Z.init_params(CFG, jax.random.PRNGKey(2))
+    master = PS.pack_master_params(params, min_size=1 << 10)
+    serve_p = jax.jit(PS.make_master_serve_step(CFG))
+    cache = Z.init_cache(CFG, params, 2, 16)
+    tok = jnp.asarray([3, 7], jnp.int32)
+    for m in (8, 7, 6, 5, 4, 3):
+        logits, _ = serve_p(master, cache, tok, jnp.int32(m))
+        assert bool(jnp.isfinite(logits).all())
+    assert serve_p._cache_size() == 1
 
 
 def test_packed_bytes_half_of_bf16():
     params = Z.init_params(CFG, jax.random.PRNGKey(1))
-    packed = PS.pack_params(params, m=7, min_size=1 << 10)
+    master = PS.pack_master_params(params, min_size=1 << 10)
 
     def nbytes(tree):
         return sum(x.size * x.dtype.itemsize
@@ -44,23 +80,70 @@ def test_packed_bytes_half_of_bf16():
                    if hasattr(x, "dtype"))
 
     layer_w = params["layers"]
-    layer_p = packed["layers"]
+    layer_p = master["layers"]
     ratio = nbytes(layer_p) / (nbytes(layer_w) / 2)   # vs bf16 baseline
-    assert ratio < 0.55, ratio  # ~8.125/16 bits
+    # 9.125/16 bits: the master costs ~1 bit/param more than the int8 code
+    # path but serves EVERY width from one artifact
+    assert ratio < 0.62, ratio
+    nb = packed_lib.tree_nbytes(master)
+    assert nb["packed_bytes"] == int(
+        packed_lib.stream_bits_per_param(packed_lib.MASTER_M) / 8
+        * nb["packed_params"])
 
 
 def test_quality_degrades_gracefully_with_m():
     params = Z.init_params(CFG, jax.random.PRNGKey(2))
+    master = PS.pack_master_params(params, min_size=1 << 10)
+    serve_p = jax.jit(PS.make_master_serve_step(CFG))
     B = 2
     tok = jnp.asarray([3, 7], jnp.int32)
     ref_logits = None
     errs = []
-    for m in (7, 5, 3):
-        serve_p = jax.jit(PS.make_packed_serve_step(CFG, m=m))
-        packed = PS.pack_params(params, m=m, min_size=1 << 10)
+    for m in (8, 5, 3):
         cache = Z.init_cache(CFG, params, B, 8)
-        logits, _ = serve_p(packed, cache, tok)
+        logits, _ = serve_p(master, cache, tok, jnp.int32(m))
         if ref_logits is None:
             ref_logits = logits
         errs.append(float(jnp.abs(logits - ref_logits).mean()))
     assert errs[0] <= errs[1] <= errs[2]
+
+
+def test_nonattention_families_serve_from_master():
+    """the resolve-hook unification covers every LM family, not just the
+    attention stacks the old packed step special-cased."""
+    cfgs = [
+        ModelConfig(name="pr", family="rwkv", n_layers=2, d_model=128,
+                    n_heads=4, n_kv_heads=4, head_dim=32, d_ff=256,
+                    vocab_size=256, rwkv_head_dim=32, q_block=32,
+                    kv_block=32, loss_chunk=32, remat="none",
+                    dtype="bfloat16"),
+        ModelConfig(name="pm", family="moe", n_layers=2, d_model=128,
+                    n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256,
+                    vocab_size=256, n_experts=4, top_k=2, q_block=32,
+                    kv_block=32, loss_chunk=32, remat="none",
+                    dtype="bfloat16"),
+    ]
+    for cfg in cfgs:
+        params = Z.init_params(cfg, jax.random.PRNGKey(3))
+        master = PS.pack_master_params(params, min_size=1 << 10)
+        nb = packed_lib.tree_nbytes(master)
+        assert nb["packed_params"] > 0, cfg.family
+        serve_p = jax.jit(PS.make_master_serve_step(cfg))
+        cache = Z.init_cache(cfg, params, 2, 16)
+        tok = jnp.asarray([3, 7], jnp.int32)
+        for m in (8, 3):
+            logits, cache = serve_p(master, cache, tok, jnp.int32(m))
+            assert bool(jnp.isfinite(logits).all()), cfg.family
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+def test_master_param_shapes_dry():
+    shapes = PS.master_param_shapes(CFG, min_size=1 << 10)
+    leaf = shapes["layers"]["attn"]["wq"]
+    assert packed_lib.is_master_leaf(leaf)
+    assert leaf["mag"].dtype == jnp.uint8
+    assert leaf["sign"].dtype == jnp.uint8
+    assert leaf["exp"].dtype == jnp.int8
+    L, K, N = leaf["mag"].shape
+    assert leaf["sign"].shape == (L, K // 8, N)
+    assert leaf["exp"].shape == (L, K // 64, N)

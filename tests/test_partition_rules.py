@@ -59,17 +59,21 @@ class TestParamRules:
         assert specs["q_bias"] == P()
 
     def test_packed_leaves_inherit_rule(self):
+        # stacked-master children ({w}/mag, {w}/sign, {w}/exp) inherit the
+        # rule of the weight they pack (core/packed.py stacked layout)
         mesh = mesh2()
-        tree = {"wq": {"sefp_codes": sds((8, 16), jnp.int8),
+        tree = {"wq": {"mag": sds((8, 16), jnp.uint8),
+                       "sign": sds((1, 16), jnp.uint8),
                        "exp": sds((2, 16), jnp.int8)}}
         specs = SH.param_pspecs(tree, mesh)
-        assert specs["wq"]["sefp_codes"] == P("data", "model")
-        # exp dim0 (K/64 = 2) is not divisible by data=4 -> fallback
+        assert specs["wq"]["mag"] == P("data", "model")
+        # sign/exp dim0 (K/8, K/64) is not divisible by data=4 -> fallback
+        assert specs["wq"]["sign"] == P(None, "model")
         assert specs["wq"]["exp"] == P(None, "model")
-        big = {"wo": {"sefp_codes": sds((64, 16), jnp.int8),
+        big = {"wo": {"mag": sds((64, 16), jnp.uint8),
                       "exp": sds((1, 16), jnp.int8)}}
         specs = SH.param_pspecs(big, mesh)
-        assert specs["wo"]["sefp_codes"] == P("model", "data")
+        assert specs["wo"]["mag"] == P("model", "data")
 
     def test_embedding_model_sharded_on_dmodel(self):
         mesh = mesh2()
