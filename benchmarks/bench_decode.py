@@ -18,7 +18,11 @@ count, host syncs, switch cost — is what transfers to TPU):
 Also measured: precision-switch cost — the materialized path's rebuild
 latency vs the fused path's throughput under a worst-case mixed schedule
 (alternating widths every token; the schedule is data of the same compiled
-executable, so the expected overhead is ~0).
+executable, so the expected overhead is ~0) — and, since schema v2, server
+STARTUP cost: constructing the engine from fp32 params (the O(params)
+quantize/pack pass the old lifecycle paid on every serve start) vs from a
+saved repro.artifact (pre-packed bytes straight to device — the startup
+analogue of the switch-cost fix).
 
 Writes BENCH_decode.json at the repo root.  CI runs ``--smoke`` and then
 ``--check`` (schema assertion) and uploads the JSON as an artifact, so
@@ -35,7 +39,7 @@ import json
 import sys
 import time
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 PATHS = ("fused_scan", "per_token", "per_token_materialized")
 
 
@@ -76,6 +80,11 @@ def check_schema(doc: dict) -> list:
               "fused_mixed_tokens_per_sec",
               "fused_switch_extra_seconds_per_token"):
         need(sw, k, (int, float), "$.precision_switch")
+    st = need(doc, "startup", dict, "$") or {}
+    for k in ("pack_from_fp32_seconds", "artifact_load_seconds",
+              "speedup_artifact_vs_pack"):
+        need(st, k, (int, float), "$.startup")
+    need(st, "artifact_bytes", int, "$.startup")
     return errs
 
 
@@ -221,6 +230,34 @@ def run(smoke: bool = False) -> dict:
             prompts, max_new=max_new,
             precision_schedule=mixed_sched).decode_seconds, None), repeats)
 
+    # -- server startup cost --------------------------------------------------
+    # fp32 path: every construction pays the O(params) quantize/pack pass;
+    # artifact path: load pre-packed bytes, no fp32 pass (repro/artifact.py)
+    import tempfile
+
+    from repro import api
+
+    def _construct_from_fp32():
+        t0 = time.perf_counter()
+        srv = SwitchableServer(cfg, params, max_len=max_len)
+        jax.block_until_ready(srv.master)
+        return time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as tmp:
+        art_path = f"{tmp}/artifact"
+        artifact = api.Artifact.from_params(cfg, params)
+        artifact.save(art_path)
+        art_bytes = int(artifact.memory_report()["total_bytes"])
+
+        def _construct_from_artifact():
+            t0 = time.perf_counter()
+            srv = api.Artifact.load(art_path).server(max_len=max_len)
+            jax.block_until_ready(srv.master)
+            return time.perf_counter() - t0
+
+        t_pack = min(_construct_from_fp32() for _ in range(repeats))
+        t_load = min(_construct_from_artifact() for _ in range(repeats))
+
     doc = {
         "schema_version": SCHEMA_VERSION,
         "bench": "decode",
@@ -241,6 +278,12 @@ def run(smoke: bool = False) -> dict:
                 batch * max_new / max(t_mixed, 1e-9),
             "fused_switch_extra_seconds_per_token":
                 (t_mixed - t_const) / max_new,
+        },
+        "startup": {
+            "pack_from_fp32_seconds": t_pack,
+            "artifact_load_seconds": t_load,
+            "speedup_artifact_vs_pack": t_pack / max(t_load, 1e-9),
+            "artifact_bytes": art_bytes,
         },
     }
     return doc
@@ -285,6 +328,10 @@ def main():
           f" ms vs fused extra "
           f"{doc['precision_switch']['fused_switch_extra_seconds_per_token']*1e6:+.1f}"
           f" us/token")
+    st = doc["startup"]
+    print(f"  startup: pack-from-fp32 {st['pack_from_fp32_seconds']*1e3:.1f}"
+          f" ms vs artifact load {st['artifact_load_seconds']*1e3:.1f} ms "
+          f"({st['speedup_artifact_vs_pack']:.2f}x)")
 
 
 if __name__ == "__main__":

@@ -1,53 +1,46 @@
-"""Quickstart: OTARo in ~60 lines.
+"""Quickstart: the whole OTARo lifecycle in ~40 lines of repro.api.
 
-Fine-tunes a small LM with OTARo (BPS + LAA), evaluates it at every SEFP
-precision, then packs one master and serves it at two precisions — all from
-a single set of weights.
+One ``finetune`` call tunes a small LM for every SEFP precision (BPS + LAA)
+and exports ONE packed artifact; that artifact is then evaluated at every
+width and served at two precisions — all from a single set of weights.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import OTAROConfig, init_state, make_eval_fn, make_otaro_step
-from repro.models import ModelConfig, init_params, make_loss_fn
-from repro.serve import SwitchableServer
-from repro.train import sgd
+from repro import api
 from repro.train.data import SyntheticCorpus
 
 # 1. a small model + task ----------------------------------------------------
-cfg = ModelConfig(name="quickstart", family="dense", n_layers=2, d_model=128,
-                  n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256,
-                  vocab_size=512, q_block=32, kv_block=32, loss_chunk=32,
-                  remat="none", dtype="float32")
+cfg = api.ModelConfig(name="quickstart", family="dense", n_layers=2,
+                      d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+                      d_ff=256, vocab_size=512, q_block=32, kv_block=32,
+                      loss_chunk=32, remat="none", dtype="float32")
 corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=0)
-params = init_params(cfg, jax.random.PRNGKey(0))
-loss_fn = make_loss_fn(cfg)
 
 # 2. once fine-tuning for ALL precisions (the paper's method) ----------------
-ocfg = OTAROConfig(mode="otaro", lam=5.0, laa_n=10)   # paper defaults
-opt = sgd(0.15)
-step = jax.jit(make_otaro_step(loss_fn, opt, ocfg))
-state = init_state(params, opt, ocfg)
-for i in range(400):
-    batch = {k: jnp.asarray(v) for k, v in corpus.batch(i, 8, 64).items()}
-    state, metrics = step(state, batch)
-    if i % 100 == 0:
-        print(f"step {i:4d}  loss {float(metrics['loss']):.3f}  "
-              f"trained at E5M{int(metrics['mantissa_width'])}")
+policy = api.PrecisionPolicy.all_widths()     # BPS over E5M8..E5M3
+result = api.finetune(cfg, out_dir="/tmp/otaro_quickstart", policy=policy,
+                      steps=400, global_batch=8, seq=64, lr=0.15,
+                      ckpt_every=200, log_every=100,
+                      otaro_overrides=dict(lam=5.0, laa_n=10))  # paper
+for rec in result.history:
+    if "loss" in rec:
+        print(f"step {rec['step']:4d}  loss {rec['loss']:.3f}  "
+              f"trained at E5M{rec['m']}")
 
-# 3. one model, every precision ----------------------------------------------
-evalf = jax.jit(make_eval_fn(loss_fn, ocfg))
-eval_batch = {k: jnp.asarray(v) for k, v in corpus.batch(10**7, 8, 64).items()}
-print("\nPPL by precision (one model, no re-tuning):")
-for m in (8, 7, 6, 5, 4, 3):
-    ppl = float(jnp.exp(evalf(state.params, eval_batch, jnp.int32(m))))
-    print(f"  E5M{m}: {ppl:7.3f}")
+# 3. one artifact, every precision --------------------------------------------
+art = result.artifact
+eval_batch = {k: jnp.asarray(v)
+              for k, v in corpus.batch(10**7, 8, 64).items()}
+print("\nPPL by precision (one artifact, no re-tuning):")
+for m, loss in art.evaluate(eval_batch).items():
+    print(f"  E5M{m}: {float(jnp.exp(loss)):7.3f}")
 
-# 4. deploy: pack once, switch precision at runtime ---------------------------
-server = SwitchableServer(cfg, state.params, max_len=96)
+# 4. deploy: load the artifact, switch precision at runtime -------------------
+server = api.Artifact.load(result.artifact_path).server(max_len=96)
 prompts = np.asarray(corpus.batch(0, 2, 17)["inputs"][:, :16])
 server.set_precision(8)
 hi = server.generate(prompts, max_new=8).tokens

@@ -1,32 +1,57 @@
-"""Switchable-precision serving demo: batched requests against one packed
-SEFP master with per-request-class precision (the paper's deployment
-scenario: generation tasks want high precision, understanding tasks want
-low latency) and a mid-stream precision drop for long generations.
+"""Switchable-precision serving demo over the repro.api facade: one packed
+artifact, one PrecisionPolicy, three request classes (the paper's deployment
+scenario: generation tasks want high precision, understanding tasks want low
+latency, long generations drop precision mid-stream).
 
 Everything runs device-resident: decode is one fused scan per generation
 (one host transfer), and every precision below — including the
 mid-generation drop — is a traced mantissa width of the SAME compiled
-executable.  No weight tree is ever rebuilt.
+executable.  No weight tree is ever rebuilt; loading an exported artifact
+performs no fp32 quantize/pack pass at startup.
 
     PYTHONPATH=src python examples/serve_switchable.py
+    # or serve a train-exported artifact:
+    PYTHONPATH=src python examples/serve_switchable.py \
+        --artifact /tmp/otaro_run/artifact
 """
 
+import argparse
 import time
 
-import jax
 import numpy as np
 
+from repro import api
 from repro import configs as C
-from repro.models import init_params
-from repro.serve import SwitchableServer
 from repro.train.data import SyntheticCorpus
 
 
 def main():
-    cfg = C.get_reduced("llama3_8b")
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    server = SwitchableServer(cfg, params, max_len=128)
-    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=1)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifact", default=None,
+                    help="serve this exported artifact (default: pack "
+                    "random-init weights for a self-contained demo)")
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    if args.artifact:
+        art = api.Artifact.load(args.artifact)
+        source = f"loaded {args.artifact} (no pack pass)"
+    else:
+        import jax
+        cfg = C.get_reduced("llama3_8b")
+        art = api.Artifact.from_params(
+            cfg, api.init_params(cfg, jax.random.PRNGKey(0)))
+        source = "packed from random-init fp32"
+    cfg = art.cfg
+
+    # ONE policy covers all three request classes; each class lowers to a
+    # traced schedule of the same compiled decode scan.
+    policy = (api.PrecisionPolicy.all_widths()
+              .with_class("generation", 7)
+              .with_class("understanding", 3)
+              .with_class("longform", [(8, 8), (4, None)]))
+    server = art.server(policy, max_len=128)
+    print(f"server up in {time.perf_counter() - t0:.2f}s ({source})")
 
     rep = server.memory_report()
     print(f"model resident as SEFP master: {rep['master_bytes']/1e6:.2f} MB "
@@ -35,37 +60,34 @@ def main():
           f"fp16 would be {rep['fp16_bytes']/1e6:.2f} MB)")
 
     # two request classes arriving in batches
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=1)
     gen_batch = np.asarray(corpus.batch(0, 4, 33)["inputs"][:, :32])
     cls_batch = np.asarray(corpus.batch(1, 8, 33)["inputs"][:, :32])
 
-    # generation requests: high precision.  set_precision is O(1) — it
-    # picks the traced width for the next calls, nothing is rebuilt.
-    server.set_precision(7)
     t0 = time.perf_counter()
-    gen = server.generate(gen_batch, max_new=32)
+    gen = server.generate(gen_batch, max_new=32, request_class="generation")
     t_gen = time.perf_counter() - t0
-    print(f"\n[generation @E5M7] batch=4, 32 new tokens in {t_gen:.2f}s "
-          f"({4*32/t_gen:.1f} tok/s, {gen.host_transfers} host transfer)")
+    print(f"\n[generation @E5M{gen.precision_trace[0]}] batch=4, 32 new "
+          f"tokens in {t_gen:.2f}s ({4*32/t_gen:.1f} tok/s, "
+          f"{gen.host_transfers} host transfer)")
 
-    # understanding requests: drop to E5M3 — same executable, new scalar
-    server.set_precision(3)
     t0 = time.perf_counter()
-    cls = server.generate(cls_batch, max_new=4)
+    cls = server.generate(cls_batch, max_new=4,
+                          request_class="understanding")
     t_cls = time.perf_counter() - t0
-    print(f"[understanding @E5M3] batch=8, 4 new tokens in {t_cls:.2f}s "
-          f"({8*4/t_cls:.1f} tok/s, {cls.host_transfers} host transfer)")
+    print(f"[understanding @E5M{cls.precision_trace[0]}] batch=8, 4 new "
+          f"tokens in {t_cls:.2f}s ({8*4/t_cls:.1f} tok/s, "
+          f"{cls.host_transfers} host transfer)")
 
-    # long generation with a precision schedule: high for the first tokens,
-    # low for the tail (prefill/decode asymmetry from the paper).  The
-    # schedule is a traced int32 array consumed inside the fused decode
-    # scan — switching mid-generation costs nothing per token.
-    schedule = [8] * 8 + [4] * 16
-    mixed = server.generate(gen_batch, max_new=24,
-                            precision_schedule=schedule)
-    print(f"[scheduled] precision trace: {mixed.precision_trace}")
-    print("\nall three request classes served from ONE packed master, "
-          "one fused decode scan per generation — no per-precision model "
-          "zoo, no weight rebuilds.")
+    # long generation: high for the first tokens, low for the tail (the
+    # paper's prefill/decode asymmetry).  The class plan compiles to a
+    # traced int32 array consumed inside the fused decode scan — switching
+    # mid-generation costs nothing per token.
+    mixed = server.generate(gen_batch, max_new=24, request_class="longform")
+    print(f"[longform] precision trace: {mixed.precision_trace}")
+    print("\nall three request classes served from ONE packed master under "
+          "ONE PrecisionPolicy, one fused decode scan per generation — no "
+          "per-precision model zoo, no weight rebuilds.")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
-"""End-to-end training driver: fine-tune any registered architecture with
-OTARo, with checkpoint/resume fault tolerance and multi-width evaluation.
+"""End-to-end training driver over the repro.api facade: fine-tune any
+registered architecture ONCE with OTARo, export the all-precision serving
+artifact, and evaluate the deployed numerics at every width.
 
 Reduced configs run on this CPU container; full configs are for TPU pods
 (same code path — pass --full and a real mesh materializes via
@@ -9,23 +10,19 @@ launch/train.py).
     PYTHONPATH=src python examples/train_otaro.py --arch llama3_2_1b \
         --steps 300 --out /tmp/otaro_run
 
-    # resume after an interruption (same command — auto-resumes):
-    PYTHONPATH=src python examples/train_otaro.py --arch llama3_2_1b \
-        --steps 300 --out /tmp/otaro_run
+    # resume after an interruption (same command — auto-resumes), then
+    # serve the exported artifact without touching fp32 again:
+    PYTHONPATH=src python examples/serve_switchable.py \
+        --artifact /tmp/otaro_run/artifact
 """
 
 import argparse
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro import configs as C
-from repro.core import otaro as otaro_lib
-from repro.models import model_zoo as Z
-from repro.train import optimizer as opt_lib
-from repro.train import runner as runner_lib
-from repro.train import steps as steps_lib
 from repro.train.data import SyntheticCorpus
 
 
@@ -42,32 +39,39 @@ def main():
                     choices=["otaro", "bps_only", "uniform", "fixed", "fp16"])
     ap.add_argument("--out", default="/tmp/otaro_train")
     ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--no-export", action="store_true")
     args = ap.parse_args()
 
     cfg = C.get_config(args.arch) if args.full else C.get_reduced(args.arch)
     print(f"training {cfg.name} ({cfg.family}) with mode={args.mode}")
 
+    # ONE PrecisionPolicy drives training (BPS arm set + mode) and, stored
+    # in the exported artifact, later serving.
+    policy = (api.PrecisionPolicy.fixed(8) if args.mode == "fixed"
+              else api.PrecisionPolicy.all_widths(mode=args.mode))
+    result = api.finetune(
+        cfg, out_dir=args.out, policy=policy, steps=args.steps,
+        global_batch=args.batch, seq=args.seq, lr=args.lr,
+        ckpt_every=args.ckpt_every, export=not args.no_export)
+
+    if result.artifact is None:
+        print("done (no export requested); final step",
+              int(result.state.step))
+        return
+
+    art = result.artifact
+    print(f"\nexported {result.artifact_path}: "
+          f"{art.memory_report()['total_bytes']/1e6:.2f} MB packed master; "
+          f"BPS visits {art.bps_stats['t_b']}")
+
+    # evaluate the ONE artifact at every trained precision (the numbers a
+    # deployment will actually see: master-truncation numerics)
     corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=0)
-    ocfg = otaro_lib.OTAROConfig(mode=args.mode)
-    opt = opt_lib.sgd(args.lr)
-    step_fn, init_fn = steps_lib.make_train_step(cfg, ocfg, opt, mesh=None)
-
-    def batch_fn(step):
-        b = corpus.batch(step, args.batch, args.seq)
-        return {k: jnp.asarray(v) for k, v in b.items()}
-
-    job = runner_lib.JobConfig(total_steps=args.steps, out_dir=args.out,
-                               ckpt_every=args.ckpt_every, log_every=20)
-    state, history = runner_lib.run_training(
-        step_fn, lambda: init_fn(jax.random.PRNGKey(0)), batch_fn, job)
-
-    # evaluate the ONE fine-tuned model at every precision
-    evalf = steps_lib.make_eval_step(cfg, ocfg)
-    eb = batch_fn(10_000_000)
-    print("\nfinal PPL by precision:")
-    for m in ocfg.widths:
-        ppl = float(np.exp(float(evalf(state.params, eb, jnp.int32(m)))))
-        print(f"  E5M{m}: {ppl:8.3f}")
+    eb = {k: jnp.asarray(v)
+          for k, v in corpus.batch(10_000_000, args.batch, args.seq).items()}
+    print("\nfinal PPL by precision (one artifact, no re-tuning):")
+    for m, loss in art.evaluate(eb).items():
+        print(f"  E5M{m}: {float(np.exp(loss)):8.3f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,171 @@
+"""repro.api: the single public entry point for the OTARo lifecycle.
+
+    train               finetune(cfg, policy=..., out_dir=...) -> FinetuneResult
+    export              (automatic at the end of finetune, or export_artifact)
+    serve               Artifact.load(path).server(policy).generate(...)
+    evaluate            Artifact.evaluate(batch, widths)
+
+Everything a driver (repro/launch/*, examples/*) needs passes through this
+module; the wiring between the core OTARo policy, the train substrate, the
+packed master format and the serving engine is internal.  A grep-invariant
+test (tests/test_api_facade.py) enforces that no driver reaches around the
+facade into core.packed / serve.packed_step / core.otaro.
+
+The two first-class nouns (DESIGN.md §10):
+
+  * ``PrecisionPolicy`` — the one precision specification, lowered to the
+    BPS arm set in training and to traced decode schedules in serving;
+  * ``Artifact`` — the packed-SEFP deployment artifact, written once at the
+    end of training and served at every precision with pack-free startup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Optional
+
+from repro.artifact import (  # noqa: F401
+    Artifact,
+    export_artifact,
+    load_artifact,
+)
+from repro.core.otaro import OTAROConfig  # noqa: F401
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.model_zoo import init_params, make_loss_fn  # noqa: F401
+from repro.policy import PrecisionPolicy  # noqa: F401
+from repro.serve.engine import GenerationResult, SwitchableServer  # noqa: F401
+
+__all__ = [
+    "Artifact", "FinetuneResult", "GenerationResult", "ModelConfig",
+    "OTAROConfig", "PrecisionPolicy", "SwitchableServer", "export_artifact",
+    "finetune", "init_params", "load_artifact", "make_loss_fn",
+    "make_packed_serve_step", "otaro_config", "packed_param_shapes",
+]
+
+
+def otaro_config(policy: PrecisionPolicy, **overrides) -> OTAROConfig:
+    """Train-side lowering of a policy (the BPS arm set + training mode);
+    ``overrides`` set the remaining OTARo hyperparameters (lam, laa_n...)."""
+    return OTAROConfig.from_policy(policy, **overrides)
+
+
+def make_packed_serve_step(cfg: ModelConfig, kernel_backend=None,
+                           layer_unroll=None):
+    """The packed-master decode step (traced width m), for callers that
+    lower/compile it directly (launch/dryrun.py) rather than serving."""
+    from repro.serve import packed_step as PS
+    return PS.make_master_serve_step(cfg, kernel_backend, layer_unroll)
+
+
+def packed_param_shapes(cfg: ModelConfig, min_size: int = 1 << 16):
+    """ShapeDtypeStruct tree of the packed serving master (dry-run)."""
+    from repro.serve import packed_step as PS
+    return PS.master_param_shapes(cfg, min_size=min_size)
+
+
+@dataclasses.dataclass
+class FinetuneResult:
+    """What ``finetune`` hands back: the exported all-precision artifact
+    (and where it lives), plus the raw final state and metric history for
+    callers that keep training or inspect convergence."""
+    artifact: Optional[Artifact]
+    artifact_path: Optional[str]
+    state: Any
+    history: list
+
+
+def finetune(
+    cfg: ModelConfig,
+    *,
+    out_dir: str,
+    policy: Optional[PrecisionPolicy] = None,
+    steps: int = 300,
+    global_batch: int = 8,
+    seq: int = 128,
+    lr: float = 1e-5,
+    grad_accum: int = 1,
+    mesh=None,
+    compress_pods_m: Optional[int] = None,
+    ckpt_every: int = 200,
+    log_every: int = 20,
+    keep: int = 3,
+    resume: bool = True,
+    data_seed: int = 0,
+    rng_seed: int = 0,
+    export: bool = True,
+    artifact_name: str = "artifact",
+    otaro_overrides: Optional[dict] = None,
+    hooks: Optional[dict] = None,
+) -> FinetuneResult:
+    """Once-tune ``cfg`` for every precision in ``policy`` and export ONE
+    servable artifact.
+
+    Fault tolerance comes from the runner (auto-resume from the newest
+    valid checkpoint under ``out_dir`` — rerunning the same call IS the
+    recovery procedure; ``resume=False`` forces a fresh run instead of
+    restoring); pass ``mesh`` (see repro.launch.mesh) to shard the
+    step, plus ``compress_pods_m`` for SEFP-compressed cross-pod gradients.
+    The export itself runs in the runner's on_complete hook, so a finished
+    run always leaves ``<out_dir>/<artifact_name>`` ready for
+    ``Artifact.load(...).server(policy)``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import compat
+    from repro.train import optimizer as opt_lib
+    from repro.train import runner as runner_lib
+    from repro.train import steps as steps_lib
+    from repro.train.data import SyntheticCorpus
+
+    policy = policy or PrecisionPolicy.all_widths()
+    ocfg = otaro_config(policy, **(otaro_overrides or {}))
+    opt = opt_lib.sgd(lr)
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=data_seed)
+
+    def batch_fn(step):
+        b = corpus.batch(step, global_batch, seq)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    job = runner_lib.JobConfig(total_steps=steps, out_dir=out_dir,
+                               ckpt_every=ckpt_every, log_every=log_every,
+                               keep=keep, resume=resume)
+    artifact_path = os.path.join(out_dir, artifact_name) if export else None
+    box = {"artifact": None}
+    run_hooks = dict(hooks or {})
+
+    if export:
+        def on_complete(state,
+                        _user=run_hooks.get("on_complete")):
+            box["artifact"] = export_artifact(
+                artifact_path, cfg, state, policy=policy,
+                provenance={"source": f"finetune:{cfg.name}",
+                            "total_steps": steps, "lr": lr,
+                            "global_batch": global_batch, "seq": seq})
+            if _user is not None:
+                _user(state)
+
+        run_hooks["on_complete"] = on_complete
+
+    key = jax.random.PRNGKey(rng_seed)
+    if mesh is None:
+        step_fn, init_fn = steps_lib.make_train_step(
+            cfg, ocfg, opt, mesh=None, grad_accum=grad_accum)
+        state, history = runner_lib.run_training(
+            step_fn, lambda: init_fn(key), batch_fn, job, hooks=run_hooks)
+    else:
+        jit_builder, init_fn = steps_lib.make_train_step(
+            cfg, ocfg, opt, mesh=mesh, grad_accum=grad_accum,
+            compress_pods_m=compress_pods_m)
+        batch_shapes = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch_fn(0))
+        with compat.set_mesh(mesh):
+            step_fn = jit_builder(batch_shapes)
+            state, history = runner_lib.run_training(
+                step_fn, lambda: init_fn(key), batch_fn, job,
+                hooks=run_hooks)
+
+    return FinetuneResult(artifact=box["artifact"],
+                          artifact_path=artifact_path,
+                          state=state, history=history)

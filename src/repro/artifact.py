@@ -1,0 +1,412 @@
+"""repro.artifact: the packed-SEFP deployment artifact — ONE file set, ALL
+precisions.
+
+The paper's deliverable is a single fine-tuned model that serves every
+bit-width.  This module makes that deliverable a concrete on-disk format:
+the stacked ``{mag, sign, exp}`` E5M8 master (repro/core/packed.py, the
+exact representation the serving engine keeps device-resident) plus a
+``meta.json`` carrying everything needed to serve it without the source
+fp32 checkpoint.
+
+Layout (atomic, DONE-guarded, same discipline as train/checkpoint.py):
+
+    <dir>/master.npz   flattened packed tree; keys are the escaped path
+                       encoding from train/checkpoint.py (path_key); bf16
+                       leaves are stored as uint16 bit-views (npz cannot
+                       represent bfloat16), recorded in meta under
+                       arrays.dtypes and restored bit-exactly on load.
+    <dir>/meta.json    format/version, the full ModelConfig, pack constants
+                       (master width, group size, min_size), the
+                       PrecisionPolicy the model was tuned under, final BPS
+                       visit/loss statistics, and provenance.
+    <dir>/DONE         marker; a crash mid-export leaves no valid artifact.
+
+Lifecycle:
+
+    train:  ``export_artifact(path, cfg, state, policy=...)`` — the ONE
+            fp32 -> pack pass, paid once at the end of training
+            (repro/train/runner.py's on_complete hook via repro.api).
+    serve:  ``Artifact.load(path).server(policy)`` — the packed arrays go
+            device-resident as-is; startup performs no O(params) quantize/
+            pack pass (the startup analogue of the engine's O(1) precision
+            switch; benchmarks/bench_decode.py measures both constructions).
+
+Because the master tree is dicts all the way down (pack_master_params maps
+a nested-dict param tree to nested dicts with ``{mag, sign, exp}`` leaves),
+``load`` rebuilds the tree purely from the npz key paths — no model init,
+no eval_shape, no dependency on having the architecture code warm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import packed as packed_lib
+from repro.core import sefp
+from repro.models.config import ModelConfig
+from repro.policy import PrecisionPolicy
+from repro.train import checkpoint as CKPT
+
+ARTIFACT_FORMAT = "repro.artifact"
+ARTIFACT_VERSION = 1
+_ARRAYS = "master.npz"
+_META = "meta.json"
+_DONE = "DONE"
+
+
+def _is_valid(path: str) -> bool:
+    return os.path.exists(os.path.join(path, _DONE))
+
+
+@dataclasses.dataclass
+class Artifact:
+    """A loaded (or freshly packed) deployment artifact: the stacked-SEFP
+    master tree + its metadata.  Construct via ``from_state`` /
+    ``from_params`` / ``from_checkpoint`` (train side, pays the one pack
+    pass) or ``load`` (serve side, pack-free)."""
+
+    cfg: ModelConfig
+    master: Any
+    meta: Dict[str, Any]
+
+    # -- construction (train side) -----------------------------------------
+    @classmethod
+    def from_params(cls, cfg: ModelConfig, params,
+                    policy: Optional[PrecisionPolicy] = None,
+                    min_size: int = 4096, bps: Any = None,
+                    provenance: Optional[dict] = None) -> "Artifact":
+        """Pack fp32/bf16 params into the serving master.  This is the one
+        place the fp32 -> SEFP quantize/pack pass happens in the unified
+        lifecycle."""
+        from repro.serve import packed_step as PS
+        policy = policy or PrecisionPolicy.all_widths()
+        master = PS.pack_master_params(params, min_size=min_size)
+        nb = packed_lib.tree_nbytes(master)
+        meta = {
+            "format": ARTIFACT_FORMAT,
+            "version": ARTIFACT_VERSION,
+            "model": dataclasses.asdict(cfg),
+            "pack": {
+                "master_m": packed_lib.MASTER_M,
+                "sign_bits": packed_lib.SIGN_BITS,
+                "exp_bits": packed_lib.EXP_BITS,
+                "group_size": sefp.GROUP_SIZE,
+                "min_size": int(min_size),
+                "bits_per_param": packed_lib.stream_bits_per_param(
+                    packed_lib.MASTER_M),
+                "packed_params": nb["packed_params"],
+                "n_params": nb["n_params"],
+                "total_bytes": nb["total_bytes"],
+            },
+            "policy": policy.describe(),
+            "bps": _bps_meta(bps),
+            "provenance": dict(provenance or {},
+                               created_unix=time.time(),
+                               jax_version=jax.__version__),
+        }
+        return cls(cfg=cfg, master=master, meta=meta)
+
+    @classmethod
+    def from_state(cls, cfg: ModelConfig, state,
+                   policy: Optional[PrecisionPolicy] = None,
+                   min_size: int = 4096,
+                   provenance: Optional[dict] = None) -> "Artifact":
+        """From a training state (OTAROState or anything with ``.params``):
+        packs the params and records the final BPS visit/loss statistics."""
+        params = getattr(state, "params", state)
+        prov = dict(provenance or {})
+        if hasattr(state, "step"):
+            prov.setdefault("train_step", int(state.step))
+        return cls.from_params(cfg, params, policy=policy, min_size=min_size,
+                               bps=getattr(state, "bps", None),
+                               provenance=prov)
+
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str, cfg: ModelConfig,
+                        step: Optional[int] = None,
+                        policy: Optional[PrecisionPolicy] = None,
+                        min_size: int = 4096) -> "Artifact":
+        """Import a train/checkpoint.py checkpoint and pack it.  Fails with
+        a clear error — listing what IS there — when the directory has no
+        DONE-marked step, instead of leaving callers to fall through to
+        random init."""
+        from repro.core import otaro as otaro_lib
+        from repro.models import model_zoo as Z
+        from repro.train import optimizer as opt_lib
+
+        steps = CKPT.list_steps(ckpt_dir)
+        if not steps:
+            if not os.path.isdir(ckpt_dir):
+                raise FileNotFoundError(
+                    f"checkpoint directory {ckpt_dir!r} does not exist")
+            raise FileNotFoundError(
+                f"no DONE-marked checkpoint step under {ckpt_dir!r} "
+                f"(directory contains: {sorted(os.listdir(ckpt_dir))!r}); "
+                f"valid checkpoints are written by repro.api.finetune / "
+                f"repro.launch.train")
+        if step is not None and step not in steps:
+            raise FileNotFoundError(
+                f"checkpoint step {step} not found under {ckpt_dir!r}; "
+                f"available steps: {steps}")
+
+        # the OTARo state layout varies with training hyperparameters in two
+        # ways: the BPS arrays are sized by the trained width COUNT, and the
+        # LAA buffer is param-shaped for mode "otaro" but scalar otherwise.
+        # Read the arm count straight from the stored arrays; the width
+        # VALUES are not recoverable from a checkpoint, so a policy whose
+        # arm count disagrees must come from the caller — recording a
+        # guessed width set would falsify the artifact's provenance.
+        explicit_policy = policy is not None
+        policy = policy or PrecisionPolicy.all_widths()
+        resolved = step if step is not None else steps[-1]
+        with np.load(os.path.join(ckpt_dir, f"step_{resolved:010d}",
+                                  "arrays.npz")) as z:
+            n_arms = (int(z["bps/t_b"].shape[0]) if "bps/t_b" in z.files
+                      else len(policy.widths))
+        if len(policy.widths) != n_arms:
+            whose = ("policy" if explicit_policy
+                     else "default all-widths policy")
+            raise ValueError(
+                f"checkpoint under {ckpt_dir!r} was trained over {n_arms} "
+                f"bit-width arm(s), but the {whose} has "
+                f"{len(policy.widths)} ({policy.widths}); pass the policy "
+                f"the run was trained with (e.g. "
+                f"PrecisionPolicy.fixed(m) for a fixed-width run) so the "
+                f"artifact records truthful trained widths")
+        widths = policy.widths
+        last_err = None
+        for mode in dict.fromkeys((policy.mode, "otaro", "fixed")):
+            ocfg = otaro_lib.OTAROConfig(widths=widths, mode=mode)
+            like = jax.eval_shape(lambda oc=ocfg: otaro_lib.init_state(
+                Z.init_params(cfg, jax.random.PRNGKey(0)),
+                opt_lib.sgd(1e-5), oc))
+            try:
+                state, meta = CKPT.restore_checkpoint(ckpt_dir, like,
+                                                      step=step)
+                break
+            except (KeyError, ValueError) as e:
+                last_err = e
+        else:
+            raise ValueError(
+                f"checkpoint under {ckpt_dir!r} does not match the "
+                f"{cfg.name!r} OTARo state layout: {last_err}") \
+                from last_err
+        return cls.from_state(
+            cfg, state, policy=policy, min_size=min_size,
+            provenance={"source": f"checkpoint:{ckpt_dir}",
+                        "train_step": int(meta["step"])})
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: str) -> str:
+        """Atomically write the artifact directory (tmpdir + fsync +
+        os.replace + DONE, mirroring train/checkpoint.py)."""
+        parent = os.path.dirname(os.path.abspath(path)) or "."
+        os.makedirs(parent, exist_ok=True)
+        tmp = tempfile.mkdtemp(dir=parent, prefix=".tmp_artifact_")
+        try:
+            arrays = CKPT.flatten_arrays(jax.device_get(self.master))
+            dtypes = {}
+            stored = {}
+            for k, a in arrays.items():
+                if a.dtype.name not in _NPZ_SAFE:
+                    dtypes[k] = a.dtype.name
+                    a = a.view(_BITS_VIEW[a.dtype.itemsize])
+                stored[k] = a
+            np.savez(os.path.join(tmp, _ARRAYS), **stored)
+            meta = dict(self.meta)
+            meta["arrays"] = {"n": len(stored), "dtypes": dtypes}
+            with open(os.path.join(tmp, _META), "w") as f:
+                json.dump(meta, f, indent=1)
+                f.flush()
+                os.fsync(f.fileno())
+            open(os.path.join(tmp, _DONE), "w").close()
+            # rename-aside overwrite (checkpoint.replace_dir): the previous
+            # DONE-marked artifact stays valid until the single rename that
+            # installs the new one, and is restored if that rename fails.
+            CKPT.replace_dir(tmp, path)
+        except Exception:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        # sweep rename-aside leftovers from crashed earlier overwrites
+        # (other pids; replace_dir already removed this pid's)
+        for stale in glob.glob(f"{path}.old-*"):
+            shutil.rmtree(stale, ignore_errors=True)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "Artifact":
+        """Load a packed artifact.  No model init, no fp32 pass: the tree is
+        rebuilt from the npz key paths and the packed bytes go straight to
+        the device."""
+        import jax.numpy as jnp
+        import ml_dtypes
+
+        if not os.path.isdir(path):
+            raise FileNotFoundError(f"no artifact directory at {path!r}")
+        if not _is_valid(path):
+            raise FileNotFoundError(
+                f"artifact at {path!r} is incomplete (no DONE marker); "
+                f"directory contains: {sorted(os.listdir(path))!r}")
+        with open(os.path.join(path, _META)) as f:
+            meta = json.load(f)
+        if meta.get("format") != ARTIFACT_FORMAT:
+            raise ValueError(f"{path!r} is not a {ARTIFACT_FORMAT} "
+                             f"directory (format={meta.get('format')!r})")
+        if meta.get("version", 0) > ARTIFACT_VERSION:
+            raise ValueError(
+                f"artifact version {meta['version']} is newer than this "
+                f"library supports ({ARTIFACT_VERSION})")
+        # layout skew is silent garbage, not a crash — refuse it here
+        pack = meta.get("pack", {})
+        expect = {"master_m": packed_lib.MASTER_M,
+                  "sign_bits": packed_lib.SIGN_BITS,
+                  "exp_bits": packed_lib.EXP_BITS,
+                  "group_size": sefp.GROUP_SIZE}
+        skew = {k: (pack[k], want) for k, want in expect.items()
+                if k in pack and pack[k] != want}
+        if skew:
+            raise ValueError(
+                f"artifact at {path!r} was packed with different layout "
+                f"constants than this library uses "
+                f"({{k: (stored, current)}} = {skew}); it cannot be "
+                f"decoded correctly — re-export it from its source "
+                f"checkpoint with this version")
+        dtypes = meta.get("arrays", {}).get("dtypes", {})
+        master: dict = {}
+        with np.load(os.path.join(path, _ARRAYS)) as npz:
+            n_expect = meta.get("arrays", {}).get("n", len(npz.files))
+            if len(npz.files) != n_expect:
+                raise ValueError(
+                    f"artifact at {path!r} is corrupt: meta records "
+                    f"{n_expect} arrays, npz holds {len(npz.files)}")
+            for key in npz.files:
+                a = npz[key]
+                if key in dtypes:
+                    dt = getattr(ml_dtypes, dtypes[key], None)
+                    a = a.view(dt if dt is not None
+                               else np.dtype(dtypes[key]))
+                _tree_insert(master, CKPT.split_key(key, unescape=False),
+                             jnp.asarray(a))
+        cfg = ModelConfig(**meta["model"])
+        return cls(cfg=cfg, master=master, meta=meta)
+
+    # -- serving / evaluation (serve side) ---------------------------------
+    def server(self, policy: Optional[PrecisionPolicy] = None,
+               max_len: int = 256, **kw):
+        """A SwitchableServer over this artifact's master — pack-free
+        startup — with ``policy`` (default: the policy recorded at export)
+        installed for per-class and mid-stream scheduling."""
+        from repro.serve.engine import SwitchableServer
+
+        srv = SwitchableServer.from_master(self.cfg, self.master,
+                                           max_len=max_len, **kw)
+        srv.set_policy(policy if policy is not None else self.policy)
+        return srv
+
+    def evaluate(self, batch, widths: Optional[Sequence[int]] = None) -> dict:
+        """Loss of the DEPLOYED numerics at each width: the master is
+        dequantized at m (the serving truncation) and run through the model
+        loss.  Returns {m: loss}."""
+        import jax.numpy as jnp
+
+        from repro.models import model_zoo as Z
+
+        loss_fn = Z.make_loss_fn(self.cfg)
+
+        @jax.jit
+        def at_width(master, b, m):
+            return loss_fn(packed_lib.dequantize_master_tree(master, m), b)
+
+        widths = tuple(widths) if widths is not None else self.trained_widths
+        return {int(m): float(at_width(self.master, batch, jnp.int32(m)))
+                for m in widths}
+
+    def memory_report(self) -> dict:
+        return packed_lib.tree_nbytes(self.master)
+
+    # -- metadata accessors -------------------------------------------------
+    @property
+    def policy(self) -> PrecisionPolicy:
+        return PrecisionPolicy.from_meta(self.meta["policy"])
+
+    @property
+    def trained_widths(self) -> tuple:
+        return tuple(self.meta["policy"]["widths"])
+
+    @property
+    def bps_stats(self) -> Optional[dict]:
+        return self.meta.get("bps")
+
+    @property
+    def provenance(self) -> dict:
+        return self.meta.get("provenance", {})
+
+
+def export_artifact(path: str, cfg: ModelConfig, state,
+                    policy: Optional[PrecisionPolicy] = None,
+                    min_size: int = 4096,
+                    provenance: Optional[dict] = None) -> Artifact:
+    """End-of-training export: pack ``state`` (OTAROState or bare params)
+    once and persist the all-precision serving artifact at ``path``."""
+    art = Artifact.from_state(cfg, state, policy=policy, min_size=min_size,
+                              provenance=provenance)
+    art.save(path)
+    return art
+
+
+def load_artifact(path: str) -> Artifact:
+    return Artifact.load(path)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+# numpy-native dtypes that survive an npz round-trip; anything else (the
+# bf16 raw leaves) is stored as a same-width unsigned-int bit view.
+_NPZ_SAFE = frozenset({
+    "bool", "int8", "uint8", "int16", "uint16", "int32", "uint32",
+    "int64", "uint64", "float16", "float32", "float64",
+})
+_BITS_VIEW = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _tree_insert(tree: dict, raw_parts, leaf):
+    """Insert a leaf into a nested dict by RAW (still-escaped) path tokens
+    from split_key(..., unescape=False).  Master trees are dicts all the
+    way down (see module docstring); an unescaped "#<idx>" token means a
+    positional (non-dict) container and is a format error — while an
+    escaped dict key "\\#..." unescapes back to its literal "#..." name."""
+    for p in raw_parts:
+        if p.startswith("#"):
+            raise ValueError(
+                f"artifact key path {raw_parts!r} contains positional "
+                f"component {p!r}; master trees must be nested dicts")
+    parts = [CKPT.unescape_component(p) for p in raw_parts]
+    node = tree
+    for p in parts[:-1]:
+        node = node.setdefault(p, {})
+        if not isinstance(node, dict):
+            raise ValueError(f"artifact key path {parts!r} collides with a "
+                             f"leaf at {p!r}")
+    if parts[-1] in node:
+        raise ValueError(f"duplicate artifact key path {parts!r}")
+    node[parts[-1]] = leaf
+
+
+def _bps_meta(bps) -> Optional[dict]:
+    if bps is None:
+        return None
+    return {"t": int(np.asarray(bps.t)),
+            "t_b": np.asarray(bps.t_b).tolist(),
+            "loss_b": np.asarray(bps.loss_b).astype(float).tolist()}

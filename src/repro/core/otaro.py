@@ -44,6 +44,17 @@ class OTAROConfig:
     loss_ema: float = 1.0             # BPS real-time loss (1.0 = latest)
     grad_clip: Optional[float] = None
 
+    @classmethod
+    def from_policy(cls, policy, **overrides) -> "OTAROConfig":
+        """Train-side lowering of a repro.policy.PrecisionPolicy: its width
+        set becomes the BPS arm set, its mode/default the training mode and
+        fixed width.  Duck-typed (anything with ``train_lowering()``) so the
+        core stays importable without the policy layer; ``overrides`` set
+        the remaining hyperparameters (lam, laa_n, ...)."""
+        kw = policy.train_lowering()
+        kw.update(overrides)
+        return cls(**kw)
+
 
 class OTAROState(NamedTuple):
     params: Any

@@ -23,8 +23,8 @@ import traceback         # noqa: E402
 import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro import api                               # noqa: E402
 from repro import configs as C                      # noqa: E402
-from repro.core import otaro as otaro_lib           # noqa: E402
 from repro.kernels import compat                    # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import model_zoo as Z             # noqa: E402
@@ -164,7 +164,7 @@ def build_cell(cfg, shape, mesh, variant: str = ""):
     batch_shapes = Z.input_specs(cfg, shape)
 
     if shape.kind == "train":
-        ocfg = otaro_lib.OTAROConfig(mode="otaro")
+        ocfg = api.otaro_config(api.PrecisionPolicy.all_widths())
         opt = opt_lib.sgd(1e-5)
         kw = {}
         if variant in ("dp", "dp128"):
@@ -206,17 +206,16 @@ def build_cell(cfg, shape, mesh, variant: str = ""):
 
     # decode / long_decode
     if variant == "packed":
-        from repro.serve import packed_step as PS
         # layer_unroll=1: the dry-run lowers deep production stacks on a CPU
         # host — HLO compactness (one layer's graph) beats CPU loop overhead
-        master_serve = PS.make_master_serve_step(cfg, layer_unroll=1)
+        master_serve = api.make_packed_serve_step(cfg, layer_unroll=1)
 
         def serve(params, cache, token, _serve=master_serve):
             # serving width is a traced scalar; lower at the paper's E5M7
             # deployment point (any width shares this executable)
             return _serve(params, cache, token, jnp.int32(7))
 
-        params_shapes = PS.master_param_shapes(cfg)
+        params_shapes = api.packed_param_shapes(cfg)
     else:
         serve = Z.make_serve_step(cfg)
         params_shapes = _serve_param_shapes(cfg)

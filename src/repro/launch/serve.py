@@ -1,75 +1,113 @@
-"""Serving launcher: load (or initialize) weights, pack the SEFP master,
-serve batched synthetic requests with a precision policy.
+"""Serving launcher over the repro.api facade: load an exported artifact
+(pack-free startup) — or import a train checkpoint / random-init weights —
+and serve batched synthetic requests under a PrecisionPolicy.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --reduced \
+    # the production path: serve a train-exported artifact directly
+    PYTHONPATH=src python -m repro.launch.serve --artifact /tmp/run1/artifact \
         --precision 4 --batch 8 --new-tokens 16
+
+    # import a raw train checkpoint (pays the one fp32->pack pass here)
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --reduced \
+        --ckpt /tmp/run1/checkpoints --precision 4
+
+    # smoke-serve random-init weights
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --reduced
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--artifact", default=None,
+                    help="exported repro.artifact directory (model config "
+                    "travels inside it; --arch not needed)")
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (required without --artifact)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt", default=None,
-                    help="checkpoint dir from launch/train.py (optional)")
+                    help="train checkpoint dir to import (fails with the "
+                    "available steps listed if no DONE-marked step exists)")
+    ap.add_argument("--ckpt-widths", default=None,
+                    help="comma-separated width set the checkpoint was "
+                    "trained over (e.g. '4' for a --mode fixed --fixed-m 4 "
+                    "run); default: the full E5M8..E5M3 set")
     ap.add_argument("--precision", type=int, default=8)
     ap.add_argument("--decode-precision", type=int, default=None,
                     help="switch to this width after the first 1/4 of new "
-                    "tokens (mid-generation switching; free — the schedule "
-                    "is a traced array of the fused decode scan)")
+                    "tokens (mid-generation switching; free — the policy "
+                    "compiles to the traced schedule of the fused scan)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args()
+    if args.artifact is None and args.arch is None:
+        ap.error("pass --artifact (self-describing) or --arch")
+    if args.artifact is not None and args.ckpt is not None:
+        ap.error("--artifact and --ckpt are mutually exclusive: an "
+                 "artifact is already packed, a checkpoint would be "
+                 "packed here — pick the weight source")
 
-    import jax
     import numpy as np
 
-    from repro import configs as C
-    from repro.models import init_params
-    from repro.serve import SwitchableServer
+    from repro import api
     from repro.train.data import SyntheticCorpus
 
-    cfg = C.get_reduced(args.arch) if args.reduced else C.get_config(args.arch)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    if args.ckpt:
-        from repro.core import otaro as otaro_lib
-        from repro.train import checkpoint as CKPT
-        from repro.train import optimizer as opt_lib
-        like = jax.eval_shape(lambda: otaro_lib.init_state(
-            params, opt_lib.sgd(1e-5), otaro_lib.OTAROConfig()))
-        state, meta = CKPT.restore_checkpoint(args.ckpt, like)
-        params = state.params
-        print(f"restored checkpoint step {meta['step']} from {args.ckpt}")
+    t0 = time.perf_counter()
+    if args.artifact:
+        artifact = api.Artifact.load(args.artifact)
+        cfg = artifact.cfg
+        source = f"artifact {args.artifact} (pack-free startup)"
+    else:
+        import jax
 
-    server = SwitchableServer(
-        cfg, params, max_len=args.prompt_len + args.new_tokens + 1)
-    server.set_precision(args.precision)
+        from repro import configs as C
+        cfg = (C.get_reduced(args.arch) if args.reduced
+               else C.get_config(args.arch))
+        if args.ckpt:
+            trained_policy = None
+            if args.ckpt_widths:
+                ws = tuple(int(x) for x in args.ckpt_widths.split(","))
+                trained_policy = (
+                    api.PrecisionPolicy.fixed(ws[0]) if len(ws) == 1
+                    else api.PrecisionPolicy.all_widths(widths=ws))
+            artifact = api.Artifact.from_checkpoint(args.ckpt, cfg,
+                                                    policy=trained_policy)
+            source = (f"checkpoint {args.ckpt} step "
+                      f"{artifact.provenance['train_step']} (packed here)")
+        else:
+            artifact = api.Artifact.from_params(
+                cfg, api.init_params(cfg, jax.random.PRNGKey(0)))
+            source = "random init (packed here)"
+
+    # the three historical precision knobs, as ONE policy
+    policy = api.PrecisionPolicy.all_widths(default=args.precision)
+    if args.decode_precision is not None:
+        knee = max(1, args.new_tokens // 4)
+        policy = policy.with_schedule(
+            [(args.precision, knee), (args.decode_precision, None)])
+
+    server = artifact.server(
+        policy, max_len=args.prompt_len + args.new_tokens + 1)
+    startup_s = time.perf_counter() - t0
     rep = server.memory_report()
-    print(f"serving {cfg.name} at E5M{args.precision}: master "
-          f"{rep['master_bytes']/1e6:.2f} MB "
+    print(f"serving {cfg.name} at E5M{server.precision} from {source}: "
+          f"startup {startup_s:.2f}s, master {rep['master_bytes']/1e6:.2f} MB "
           f"(fp16 {rep['fp16_bytes']/1e6:.2f} MB)")
 
     corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=3)
     prompts = np.asarray(
         corpus.batch(0, args.batch, args.prompt_len + 1)["inputs"]
         [:, :args.prompt_len])
-    schedule = None
-    if args.decode_precision is not None:
-        hi, lo, knee = args.precision, args.decode_precision, max(
-            1, args.new_tokens // 4)
-        schedule = [hi if i < knee else lo for i in range(args.new_tokens)]
-    res = server.generate(prompts, max_new=args.new_tokens,
-                          precision_schedule=schedule)
+    res = server.generate(prompts, max_new=args.new_tokens)
     tput = args.batch * args.new_tokens / max(res.decode_seconds, 1e-9)
     print(f"generated {args.new_tokens} tokens x {args.batch} requests "
           f"in {res.decode_seconds:.2f}s ({tput:.1f} tok/s, "
           f"{res.host_transfers} host transfer(s), fused decode scan)")
-    if schedule is not None:
+    if args.decode_precision is not None:
         print(f"precision trace: {res.precision_trace}")
     for i in range(min(2, args.batch)):
         print(f"  req{i}: {res.tokens[i].tolist()}")

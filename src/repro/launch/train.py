@@ -1,11 +1,13 @@
-"""Production training launcher.
+"""Production training launcher over the repro.api facade.
 
 On a TPU pod this is invoked once per host (jax.distributed initializes from
 the TPU environment); on this CPU container it runs the same code path over
 a host mesh (optionally with fake devices via XLA_FLAGS for integration
-rehearsal).  Fault tolerance: the runner auto-resumes from the newest valid
-checkpoint, so the relaunch command IS the recovery procedure; elastic
-resizes restore the same checkpoint onto the new mesh.
+rehearsal).  Fault tolerance: api.finetune auto-resumes from the newest
+valid checkpoint, so the relaunch command IS the recovery procedure; elastic
+resizes restore the same checkpoint onto the new mesh.  Every finished run
+exports the all-precision serving artifact to <out>/artifact — feed it to
+``python -m repro.launch.serve --artifact <out>/artifact``.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --reduced \
         --steps 200 --out /tmp/run1
@@ -29,9 +31,13 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-5)        # paper setting
     ap.add_argument("--mode", default="otaro")
+    ap.add_argument("--fixed-m", type=int, default=8,
+                    help="the single width when --mode fixed")
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--out", default="/tmp/otaro_launch")
     ap.add_argument("--ckpt-every", type=int, default=200)
+    ap.add_argument("--no-export", action="store_true",
+                    help="skip the end-of-training artifact export")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 (or 2x16x16) production mesh; "
                          "requires 256/512 devices (TPU pod or XLA_FLAGS)")
@@ -46,18 +52,10 @@ def main():
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.fake_devices}")
 
-    import jax
-    import jax.numpy as jnp
-
+    from repro import api
     from repro import configs as C
-    from repro.core import otaro as otaro_lib
-    from repro.kernels import compat
     from repro.launch.mesh import describe, make_host_mesh, \
         make_production_mesh
-    from repro.train import optimizer as opt_lib
-    from repro.train import runner as runner_lib
-    from repro.train import steps as steps_lib
-    from repro.train.data import SyntheticCorpus
 
     cfg = C.get_reduced(args.arch) if args.reduced else C.get_config(args.arch)
     if args.production_mesh:
@@ -66,30 +64,21 @@ def main():
         mesh = make_host_mesh()
     print(f"training {cfg.name} on {describe(mesh)}")
 
-    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=0)
-    ocfg = otaro_lib.OTAROConfig(mode=args.mode)
-    opt = opt_lib.sgd(args.lr)
-
-    jit_builder, init_fn = steps_lib.make_train_step(
-        cfg, ocfg, opt, mesh=mesh, grad_accum=args.grad_accum,
-        compress_pods_m=args.compress_pods)
-
-    b0 = corpus.batch(0, args.global_batch, args.seq)
-    batch_shapes = jax.tree_util.tree_map(
-        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-        {k: jnp.asarray(v) for k, v in b0.items()})
-
-    def batch_fn(step):
-        b = corpus.batch(step, args.global_batch, args.seq)
-        return {k: jnp.asarray(v) for k, v in b.items()}
-
-    with compat.set_mesh(mesh):
-        step_fn = jit_builder(batch_shapes)
-        job = runner_lib.JobConfig(total_steps=args.steps, out_dir=args.out,
-                                   ckpt_every=args.ckpt_every, log_every=20)
-        state, _ = runner_lib.run_training(
-            step_fn, lambda: init_fn(jax.random.PRNGKey(0)), batch_fn, job)
-    print("done; final step", int(state.step))
+    policy = (api.PrecisionPolicy.fixed(args.fixed_m)
+              if args.mode == "fixed"
+              else api.PrecisionPolicy.all_widths(mode=args.mode))
+    result = api.finetune(
+        cfg, out_dir=args.out, policy=policy, steps=args.steps,
+        global_batch=args.global_batch, seq=args.seq, lr=args.lr,
+        grad_accum=args.grad_accum, mesh=mesh,
+        compress_pods_m=args.compress_pods, ckpt_every=args.ckpt_every,
+        log_every=20, export=not args.no_export)
+    print("done; final step", int(result.state.step))
+    if result.artifact is not None:
+        nb = result.artifact.memory_report()
+        print(f"exported {result.artifact_path}: "
+              f"{nb['total_bytes']/1e6:.2f} MB packed master, trained "
+              f"widths {list(result.artifact.trained_widths)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,205 @@
+"""PrecisionPolicy: the single first-class precision specification.
+
+Before this module, precision was expressed three incompatible ways —
+``OTAROConfig.widths``/``mode`` in training, ``--precision`` /
+``--decode-precision`` ints in the serve CLI, and ad-hoc per-request schedule
+lists in the examples.  ``PrecisionPolicy`` replaces all three: one immutable
+object describes *which* widths a model is tuned for and *how* a server
+should pick a width per request and per decode step, and it **compiles** to
+each consumer's native form (DESIGN.md §10):
+
+  * train-side lowering: ``OTAROConfig.from_policy(policy)`` maps ``widths``
+    to the BPS arm set and ``mode``/``default`` to the OTARo training mode
+    (repro/core/otaro.py);
+  * serve-side lowering: ``compile_schedule(max_new, request_class)``
+    produces the per-step width list that the engine turns into the traced
+    ``int32[max_new]`` schedule array of the fused decode scan
+    (repro/serve/engine.py) — so a policy switch is data, never a retrace.
+
+A policy covers three serving shapes at once:
+
+  * fixed width — ``PrecisionPolicy.fixed(7)``;
+  * per-request-class mapping — ``.with_class("understanding", 3)``; a class
+    may map to a width or to a mid-stream plan;
+  * mid-stream schedules — ``.with_schedule([(8, 8), (4, None)])``: 8 tokens
+    at E5M8, then E5M4 for the rest (the paper's prefill/decode asymmetry).
+
+Plans are tuples of ``(width, count)`` segments; only the final segment may
+have ``count=None`` ("the rest").  ``compile_schedule`` expands a plan to
+exactly ``max_new`` steps (a too-long plan is truncated, a too-short one is
+extended at its last width), so one policy serves any generation length.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+from repro.core.packed import MASTER_M
+from repro.core.sefp import MANTISSA_WIDTHS
+
+TRAIN_MODES = ("otaro", "bps_only", "uniform", "fixed", "fp16")
+
+# a serving plan: int width | [(width, count_or_None), ...]
+PlanSpec = Union[int, Sequence[Tuple[int, Optional[int]]]]
+Plan = Tuple[Tuple[int, Optional[int]], ...]
+
+
+def _check_width(m: int, what: str) -> int:
+    m = int(m)
+    if not 1 <= m <= MASTER_M:
+        raise ValueError(f"{what} must be a mantissa width in 1..{MASTER_M}, "
+                         f"got {m}")
+    return m
+
+
+def _norm_plan(spec: PlanSpec, what: str) -> Plan:
+    """Normalize a plan spec to ((width, count|None), ...)."""
+    if isinstance(spec, int):
+        return ((_check_width(spec, what), None),)
+    segs = tuple(spec)
+    if not segs:
+        raise ValueError(f"{what}: empty schedule")
+    out = []
+    for i, seg in enumerate(segs):
+        try:
+            m, n = seg
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"{what}: segment {i} must be (width, count), got {seg!r}")
+        m = _check_width(m, f"{what} segment {i}")
+        if n is None:
+            if i != len(segs) - 1:
+                raise ValueError(f"{what}: only the last segment may have "
+                                 f"count=None (segment {i})")
+        else:
+            n = int(n)
+            if n <= 0:
+                raise ValueError(f"{what}: segment {i} count must be "
+                                 f"positive, got {n}")
+        out.append((m, n))
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """One precision policy for the whole train -> export -> serve lifecycle.
+
+    ``widths``  the supported bit-width set, high -> low.  Training lowers it
+                to the BPS arm set; artifacts record it as the set the model
+                was tuned for.
+    ``mode``    training mode (otaro | bps_only | uniform | fixed | fp16).
+    ``default`` the width served when no class / schedule applies (and the
+                fixed training width when ``mode == "fixed"``).
+    ``plan``    optional default mid-stream plan used instead of ``default``.
+    ``classes`` request-class name -> plan (per-request-class serving).
+    """
+
+    widths: Tuple[int, ...] = MANTISSA_WIDTHS
+    mode: str = "otaro"
+    default: int = MANTISSA_WIDTHS[0]
+    plan: Optional[Plan] = None
+    classes: Mapping[str, Plan] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        widths = tuple(_check_width(m, "policy width") for m in self.widths)
+        if not widths:
+            raise ValueError("policy needs at least one width")
+        if len(set(widths)) != len(widths):
+            raise ValueError(f"duplicate widths in {widths}")
+        object.__setattr__(self, "widths", widths)
+        if self.mode not in TRAIN_MODES:
+            raise ValueError(f"unknown training mode {self.mode!r}; "
+                             f"expected one of {TRAIN_MODES}")
+        object.__setattr__(self, "default",
+                           _check_width(self.default, "default width"))
+        if self.plan is not None:
+            object.__setattr__(self, "plan", _norm_plan(self.plan, "plan"))
+        norm = {str(k): _norm_plan(v, f"class {k!r}")
+                for k, v in dict(self.classes).items()}
+        object.__setattr__(self, "classes", norm)
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def all_widths(cls, widths: Sequence[int] = MANTISSA_WIDTHS,
+                   mode: str = "otaro",
+                   default: Optional[int] = None) -> "PrecisionPolicy":
+        """The paper's policy: tune once over ``widths`` (BPS over the full
+        arm set), serve at ``default`` (highest width unless given)."""
+        widths = tuple(widths)
+        return cls(widths=widths, mode=mode,
+                   default=max(widths) if default is None else default)
+
+    @classmethod
+    def fixed(cls, m: int) -> "PrecisionPolicy":
+        """A single width everywhere: fixed-precision fine-tuning and a
+        constant serving schedule."""
+        return cls(widths=(int(m),), mode="fixed", default=int(m))
+
+    # -- functional updates -------------------------------------------------
+    def with_default(self, m: int) -> "PrecisionPolicy":
+        return dataclasses.replace(self, default=int(m))
+
+    def with_schedule(self, spec: PlanSpec) -> "PrecisionPolicy":
+        """Set the default mid-stream plan, e.g. ``[(8, 8), (4, None)]``."""
+        return dataclasses.replace(self, plan=_norm_plan(spec, "plan"))
+
+    def with_class(self, name: str, spec: PlanSpec) -> "PrecisionPolicy":
+        """Map a request class to a width or a mid-stream plan."""
+        classes = dict(self.classes)
+        classes[str(name)] = _norm_plan(spec, f"class {name!r}")
+        return dataclasses.replace(self, classes=classes)
+
+    # -- serve-side lowering ------------------------------------------------
+    def plan_for(self, request_class: Optional[str] = None) -> Plan:
+        if request_class is not None:
+            if request_class not in self.classes:
+                raise KeyError(
+                    f"unknown request class {request_class!r}; policy "
+                    f"defines {sorted(self.classes) or 'no classes'}")
+            return self.classes[request_class]
+        return self.plan if self.plan is not None else (
+            (self.default, None),)
+
+    def compile_schedule(self, max_new: int,
+                         request_class: Optional[str] = None) -> list:
+        """Lower to the per-step width list of length ``max_new`` that the
+        serving engine traces as the ``int32[max_new]`` schedule array."""
+        if max_new <= 0:
+            raise ValueError(f"max_new must be positive, got {max_new}")
+        sched: list = []
+        plan = self.plan_for(request_class)
+        for m, n in plan:
+            if len(sched) >= max_new:
+                break
+            take = max_new - len(sched) if n is None else min(
+                n, max_new - len(sched))
+            sched.extend([m] * take)
+        if len(sched) < max_new:  # finite plan shorter than the generation
+            sched.extend([plan[-1][0]] * (max_new - len(sched)))
+        return sched
+
+    # -- train-side lowering ------------------------------------------------
+    def train_lowering(self) -> dict:
+        """The OTAROConfig precision fields (consumed by
+        ``OTAROConfig.from_policy`` in repro/core/otaro.py)."""
+        return {"widths": self.widths, "mode": self.mode,
+                "fixed_m": self.default}
+
+    # -- provenance ---------------------------------------------------------
+    def describe(self) -> dict:
+        """JSON-ready form, stored in artifact meta and loadable back."""
+        return {"widths": list(self.widths), "mode": self.mode,
+                "default": self.default,
+                "plan": [list(s) for s in self.plan] if self.plan else None,
+                "classes": {k: [list(s) for s in v]
+                            for k, v in self.classes.items()}}
+
+    @classmethod
+    def from_meta(cls, d: dict) -> "PrecisionPolicy":
+        return cls(widths=tuple(d["widths"]), mode=d["mode"],
+                   default=d["default"],
+                   plan=(tuple((m, n) for m, n in d["plan"])
+                         if d.get("plan") else None),
+                   classes={k: tuple((m, n) for m, n in v)
+                            for k, v in d.get("classes", {}).items()})

@@ -44,6 +44,7 @@ from jax import lax
 
 from repro.core import packed as packed_lib
 from repro.models.config import ModelConfig
+from repro.policy import PrecisionPolicy
 from repro.serve import packed_step as PS
 from repro.serve.sampler import sample_token
 
@@ -68,18 +69,25 @@ class SwitchableServer:
     also adopts the kernel's bf16-operand numerics at the logit head (see
     packed_step.master_logits)."""
 
-    def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
+    def __init__(self, cfg: ModelConfig, params=None, max_len: int = 256,
                  cache_dtype=jnp.bfloat16, min_size: int = 4096,
                  kernel_backend: Optional[str] = None,
-                 layer_unroll: Optional[int] = None):
+                 layer_unroll: Optional[int] = None, master=None):
+        if (params is None) == (master is None):
+            raise ValueError("pass exactly one of params (fp32 weights, "
+                             "packed here) or master (pre-packed, e.g. from "
+                             "a repro.artifact load)")
         self.cfg = cfg
         self.max_len = max_len
         self.cache_dtype = cache_dtype
         self.kernel_backend = kernel_backend
-        # pack once: the single multi-precision master
-        self.master = PS.pack_master_params(params, min_size=min_size)
+        # the single multi-precision master: packed once here from fp32, or
+        # adopted pre-packed (the artifact path — no O(params) pack pass)
+        self.master = master if master is not None else \
+            PS.pack_master_params(params, min_size=min_size)
         self.master_bytes = packed_lib.tree_nbytes(self.master)
         self._m = packed_lib.MASTER_M
+        self._policy: Optional[PrecisionPolicy] = None
         serve = PS.make_master_serve_step(cfg, kernel_backend, layer_unroll)
         self._serve = jax.jit(serve)
         self._prefill = jax.jit(PS.make_master_prefill(cfg, kernel_backend),
@@ -87,24 +95,66 @@ class SwitchableServer:
         self._fused = jax.jit(_make_fused_decode(serve),
                               static_argnames=("temperature", "top_k"))
 
+    @classmethod
+    def from_master(cls, cfg: ModelConfig, master,
+                    **kw) -> "SwitchableServer":
+        """Serve a pre-packed stacked-SEFP master (the repro.artifact load
+        path): startup performs no fp32 quantize/pack pass — the packed
+        arrays go device-resident as-is."""
+        return cls(cfg, master=master, **kw)
+
     # -- precision switching ------------------------------------------------
     def set_precision(self, m: int):
         """Set the default serving width E5M<m>.  O(1): no weight pass, no
         recompilation — the width is a traced scalar of the compiled step
-        (per-generation overrides go through ``precision_schedule``)."""
+        (per-generation overrides go through ``precision_schedule``).  With
+        a PrecisionPolicy installed this overrides its default and clears
+        its default mid-stream plan; per-class plans stay in force."""
         m = int(m)
         if not 1 <= m <= packed_lib.MASTER_M:
             raise ValueError(f"mantissa width must be in "
                              f"1..{packed_lib.MASTER_M}, got {m}")
         self._m = m
+        if self._policy is not None:
+            self._policy = dataclasses.replace(self._policy, default=m,
+                                               plan=None)
 
     @property
     def precision(self) -> int:
         return self._m
 
-    def _schedule(self, max_new: int, precision_schedule) -> List[int]:
+    def set_policy(self, policy: Optional[PrecisionPolicy]):
+        """Install a PrecisionPolicy: it supplies the default width and the
+        per-request-class / mid-stream schedules for every following
+        ``generate`` call.  O(1) like ``set_precision`` — policy lowering
+        produces schedule *data* for the one compiled executable."""
+        if policy is not None and not isinstance(policy, PrecisionPolicy):
+            raise TypeError(f"expected PrecisionPolicy, got {type(policy)}")
+        self._policy = policy
+        if policy is not None:
+            self._m = int(policy.default)
+
+    @property
+    def policy(self) -> Optional[PrecisionPolicy]:
+        return self._policy
+
+    def _schedule(self, max_new: int, precision_schedule,
+                  request_class: Optional[str] = None) -> List[int]:
+        if precision_schedule is not None and request_class is not None:
+            raise ValueError("precision_schedule and request_class are "
+                             "mutually exclusive — pass one width source")
+        if max_new == 0:
+            return []          # prefill-only: nothing to schedule
         if precision_schedule is None:
-            sched = [self._m] * max_new
+            if request_class is not None:
+                if self._policy is None:
+                    raise ValueError("request_class routing needs a "
+                                     "PrecisionPolicy (set_policy)")
+                sched = self._policy.compile_schedule(max_new, request_class)
+            elif self._policy is not None and self._policy.plan is not None:
+                sched = self._policy.compile_schedule(max_new)
+            else:
+                sched = [self._m] * max_new
         elif callable(precision_schedule):
             sched = [int(precision_schedule(i)) for i in range(max_new)]
         else:
@@ -128,19 +178,26 @@ class SwitchableServer:
 
     def generate(self, prompts: np.ndarray, max_new: int,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 precision_schedule=None) -> GenerationResult:
+                 precision_schedule=None,
+                 request_class: Optional[str] = None) -> GenerationResult:
         """Batched generation as one fused device-resident scan.
 
         ``precision_schedule``: optional callable ``step_idx -> mantissa
         width`` or int sequence of length ``max_new``; it becomes a traced
         int32 array consumed in-graph, so mid-generation switching (e.g.
         prefill/high, decode/low) costs nothing and triggers no retrace.
+        ``request_class``: route through the installed PrecisionPolicy's
+        per-class plan instead (mutually exclusive with an explicit
+        schedule).  Prefill runs at the width of the first decode step.
         ``temperature``/``top_k`` are static (see serve/sampler.py); a new
         ``max_new`` retraces once (new scan length)."""
         B, S = prompts.shape
         assert S + max_new <= self.max_len
-        sched = self._schedule(max_new, precision_schedule)
-        logits, cache = self.prefill(prompts)
+        sched = self._schedule(max_new, precision_schedule, request_class)
+        logits, cache = self._prefill(
+            self.master, jnp.asarray(prompts, jnp.int32),
+            jnp.int32(sched[0] if sched else self._m),
+            max_len=self.max_len)
         key = jax.random.PRNGKey(seed)
         t0 = time.perf_counter()
         toks = self._fused(self.master, cache, logits,
@@ -154,8 +211,9 @@ class SwitchableServer:
 
     def generate_per_token(self, prompts: np.ndarray, max_new: int,
                            temperature: float = 0.0, top_k: int = 0,
-                           seed: int = 0,
-                           precision_schedule=None) -> GenerationResult:
+                           seed: int = 0, precision_schedule=None,
+                           request_class: Optional[str] = None
+                           ) -> GenerationResult:
         """Legacy decode loop: one jitted step dispatch and one host token
         sync per step.  Numerically the same master step as the fused scan
         (token-for-token identical at temperature 0); kept as the measured
@@ -163,8 +221,11 @@ class SwitchableServer:
         interactive client would run."""
         B, S = prompts.shape
         assert S + max_new <= self.max_len
-        sched = self._schedule(max_new, precision_schedule)
-        logits, cache = self.prefill(prompts)
+        sched = self._schedule(max_new, precision_schedule, request_class)
+        logits, cache = self._prefill(
+            self.master, jnp.asarray(prompts, jnp.int32),
+            jnp.int32(sched[0] if sched else self._m),
+            max_len=self.max_len)
         key = jax.random.PRNGKey(seed)
         out = []
         t0 = time.perf_counter()
@@ -176,7 +237,9 @@ class SwitchableServer:
             key, sub = jax.random.split(key)
             tok = sample_token(logits, sub, temperature, top_k)
         dt = time.perf_counter() - t0
-        return GenerationResult(tokens=np.stack(out, axis=1), prompt_len=S,
+        tokens = (np.stack(out, axis=1) if out
+                  else np.zeros((B, 0), np.int32))
+        return GenerationResult(tokens=tokens, prompt_len=S,
                                 precision_trace=sched, decode_seconds=dt,
                                 host_transfers=len(out))
 

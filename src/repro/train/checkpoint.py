@@ -28,25 +28,115 @@ from typing import Any, Optional, Tuple
 import jax
 import numpy as np
 
+# ---------------------------------------------------------------------------
+# Path <-> key encoding (single owner; repro/artifact.py reuses it).
+#
+# A tree path becomes the "/"-join of one token per path component.  A naive
+# str() join is ambiguous: a dict key containing "/" collides with genuine
+# nesting ({"a/b": x} vs {"a": {"b": y}}), and an int-like string dict key
+# ("0") collides with a positional (list / registered-pytree) child at the
+# same spot.  So: "/" and "\" inside string components are backslash-escaped,
+# and positional components are rendered "#<idx>" with a leading literal "#"
+# in a string component escaped to "\#".
+# ---------------------------------------------------------------------------
 
-def _flatten(state) -> dict:
+
+def _escape(s: str) -> str:
+    s = s.replace("\\", "\\\\").replace("/", "\\/")
+    return "\\" + s if s.startswith("#") else s
+
+
+def _component(k) -> str:
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return f"#{k.idx}"
+    if isinstance(k, jax.tree_util.DictKey):
+        return _escape(str(k.key))
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return _escape(str(k.name))
+    # FlattenedIndexKey (registered pytree nodes without keypaths) and any
+    # future key type carrying an int position
+    inner = getattr(k, "key", getattr(k, "idx", k))
+    if isinstance(inner, int):
+        return f"#{inner}"
+    return _escape(str(inner))
+
+
+def path_key(path) -> str:
+    """Unambiguous flat key for a jax.tree_util key path."""
+    return "/".join(_component(k) for k in path)
+
+
+def split_key(key: str, unescape: bool = True) -> list:
+    """Inverse of ``path_key`` up to component *strings*: split on unescaped
+    "/".  With ``unescape=True`` each component is unescaped ("#<idx>"
+    tokens come back verbatim).  With ``unescape=False`` the raw escaped
+    tokens are returned, so a caller can still distinguish a positional
+    "#<idx>" token from an escaped dict key "\\#..." before unescaping
+    (repro/artifact.py's tree rebuild needs exactly that)."""
+    parts, cur, i = [], [], 0
+    while i < len(key):
+        c = key[i]
+        if c == "\\" and i + 1 < len(key):
+            if unescape:
+                cur.append(key[i + 1])
+            else:
+                cur.append(c)
+                cur.append(key[i + 1])
+            i += 2
+        elif c == "/":
+            parts.append("".join(cur))
+            cur = []
+            i += 1
+        else:
+            cur.append(c)
+            i += 1
+    parts.append("".join(cur))
+    return parts
+
+
+def unescape_component(token: str) -> str:
+    """Undo ``_escape`` on a single raw token from split_key(...,
+    unescape=False)."""
+    out, i = [], 0
+    while i < len(token):
+        if token[i] == "\\" and i + 1 < len(token):
+            out.append(token[i + 1])
+            i += 2
+        else:
+            out.append(token[i])
+            i += 1
+    return "".join(out)
+
+
+def flatten_arrays(state) -> dict:
+    """Pytree -> {path_key: np.ndarray} (host arrays)."""
     flat = jax.tree_util.tree_flatten_with_path(state)[0]
     out = {}
     for path, leaf in flat:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                       for k in path)
+        key = path_key(path)
+        if key in out:
+            raise ValueError(f"duplicate flattened key {key!r}")
         out[key] = np.asarray(leaf)
     return out
 
 
-def _unflatten(like_state, arrays: dict):
+def unflatten_arrays(like_state, arrays: dict):
+    """{path_key: array} -> pytree shaped like ``like_state``."""
     paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(
         like_state)
     leaves = []
     for path, leaf in paths_and_leaves:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                       for k in path)
+        key = path_key(path)
         if key not in arrays:
+            legacy = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                              for k in path)
+            if legacy in arrays:
+                raise KeyError(
+                    f"checkpoint missing array for {key!r}, but found the "
+                    f"pre-escaping key {legacy!r}: this checkpoint was "
+                    f"written before the path-key encoding change and "
+                    f"cannot be restored by this version — re-export it "
+                    f"with the version that wrote it")
             raise KeyError(f"checkpoint missing array for {key!r}")
         arr = arrays[key]
         if tuple(arr.shape) != tuple(leaf.shape):
@@ -57,6 +147,28 @@ def _unflatten(like_state, arrays: dict):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def replace_dir(tmp: str, final: str):
+    """Install ``tmp`` at ``final`` via rename-aside: any existing dir at
+    ``final`` stays valid until the single rename that installs the new
+    one, is restored if that rename fails, and is discarded after it
+    succeeds.  Shared by checkpoint and artifact persistence (the one
+    owner of the overwrite discipline)."""
+    trash = None
+    if os.path.exists(final):
+        trash = f"{final}.old-{os.getpid()}"
+        if os.path.exists(trash):
+            shutil.rmtree(trash)
+        os.replace(final, trash)
+    try:
+        os.replace(tmp, final)
+    except Exception:
+        if trash is not None:
+            os.replace(trash, final)
+        raise
+    if trash is not None:
+        shutil.rmtree(trash, ignore_errors=True)
+
+
 def save_checkpoint(ckpt_dir: str, step: int, state: Any,
                     extra: Optional[dict] = None, keep: int = 3) -> str:
     """Atomically persist `state` (any pytree) at `step`."""
@@ -64,7 +176,7 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any,
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
     try:
-        arrays = _flatten(jax.device_get(state))
+        arrays = flatten_arrays(jax.device_get(state))
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
         meta = {"step": step, "extra": extra or {},
                 "n_arrays": len(arrays)}
@@ -73,9 +185,7 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any,
             f.flush()
             os.fsync(f.fileno())
         open(os.path.join(tmp, "DONE"), "w").close()
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.replace(tmp, final)
+        replace_dir(tmp, final)
     except Exception:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
@@ -120,7 +230,7 @@ def restore_checkpoint(ckpt_dir: str, like_state: Any,
         arrays = {k: npz[k] for k in npz.files}
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
-    state_np = _unflatten(like_state, arrays)
+    state_np = unflatten_arrays(like_state, arrays)
     if shardings is not None:
         state = jax.tree_util.tree_map(
             lambda x, s: jax.device_put(x, s), state_np, shardings)
@@ -134,7 +244,7 @@ def _cleanup(ckpt_dir: str, keep: int):
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
                       ignore_errors=True)
-    # remove stale tmp dirs from crashed saves
+    # remove stale tmp/rename-aside dirs from crashed saves
     for name in os.listdir(ckpt_dir):
-        if name.startswith(".tmp_"):
+        if name.startswith(".tmp_") or ".old-" in name:
             shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)

@@ -69,6 +69,12 @@ def run_training(
 
     step_fn(state, batch) -> (state, metrics);  batch_fn(step) -> batch
     (a pure function of the step index — the resumable data pipeline).
+
+    hooks: "on_log"(record, state) at every log interval;
+    "on_complete"(state) exactly once, after the final step and final
+    checkpoint — the deployment-export point (repro.api.finetune passes
+    repro.artifact's export here so every finished run leaves a servable
+    artifact next to its checkpoints).
     """
     ckpt_dir = os.path.join(job.out_dir, "checkpoints")
     logger = MetricsLogger(os.path.join(job.out_dir, "metrics.jsonl"))
@@ -132,4 +138,6 @@ def run_training(
             pass
         raise
 
+    if hooks and "on_complete" in hooks:
+        hooks["on_complete"](state)
     return state, logger.history

@@ -1,0 +1,86 @@
+"""Facade grep-invariants (PR-2 style): the drivers — repro/launch/* and
+examples/* — speak ONLY repro.api.
+
+Rationale: before the unified API, precision and packing were wired three
+incompatible ways across the drivers (OTAROConfig fields in training, CLI
+ints in serving, ad-hoc schedule lists in the examples), and every serve
+start re-packed fp32.  The facade makes that wiring internal; these
+source-level invariants keep it from leaking back.
+"""
+
+import os
+
+import repro.api
+
+SRC_ROOT = os.path.dirname(os.path.abspath(repro.api.__file__))
+REPO_ROOT = os.path.dirname(os.path.dirname(SRC_ROOT))
+LAUNCH_DIR = os.path.join(SRC_ROOT, "launch")
+EXAMPLES_DIR = os.path.join(REPO_ROOT, "examples")
+
+# the internal wiring no driver may touch directly (the three ad-hoc
+# precision surfaces this API replaced, plus the packing primitives whose
+# presence in a driver would mean an O(params) pack pass on the serve path)
+BANNED = (
+    "repro.core.packed",
+    "repro.serve.packed_step",
+    "repro.core.otaro",
+    "core import packed",
+    "serve import packed_step",
+    "core import otaro",
+    "otaro_lib",
+    "from repro.core import",
+    "from repro.serve import",
+    "pack_master_params",
+    "SwitchableServer(",
+    "make_otaro_step",
+    "dequantize_tree",
+)
+
+# drivers (entry points); launch/mesh.py is shared infrastructure, not a
+# driver, but it must respect the ban list too
+DRIVERS = [
+    os.path.join(LAUNCH_DIR, "train.py"),
+    os.path.join(LAUNCH_DIR, "serve.py"),
+    os.path.join(LAUNCH_DIR, "dryrun.py"),
+    os.path.join(EXAMPLES_DIR, "quickstart.py"),
+    os.path.join(EXAMPLES_DIR, "train_otaro.py"),
+    os.path.join(EXAMPLES_DIR, "serve_switchable.py"),
+]
+
+
+def _py_files(d):
+    return sorted(os.path.join(d, n) for n in os.listdir(d)
+                  if n.endswith(".py"))
+
+
+def test_driver_files_exist():
+    for path in DRIVERS:
+        assert os.path.exists(path), path
+
+
+def test_no_internal_wiring_in_launch_or_examples():
+    for path in _py_files(LAUNCH_DIR) + _py_files(EXAMPLES_DIR):
+        src = open(path).read()
+        for banned in BANNED:
+            assert banned not in src, (
+                f"{os.path.relpath(path, REPO_ROOT)} reaches around the "
+                f"repro.api facade: {banned!r}")
+
+
+def test_every_driver_imports_the_facade():
+    for path in DRIVERS:
+        src = open(path).read()
+        assert ("from repro import api" in src
+                or "from repro.api import" in src
+                or "import repro.api" in src), (
+            f"{os.path.relpath(path, REPO_ROOT)} does not import repro.api")
+
+
+def test_serve_launcher_has_no_pack_or_quantize_call():
+    """The serve startup path must stay O(1) in params: constructing from
+    an artifact moves packed bytes only.  The launcher may mention neither
+    the pack entry points nor the fp32 quantizer."""
+    src = open(os.path.join(LAUNCH_DIR, "serve.py")).read()
+    for banned in ("pack_tree", "quantize_tree", "pack_stacked",
+                   "init_state"):
+        assert banned not in src, banned

@@ -1,0 +1,296 @@
+"""repro.artifact tests: the train -> export -> load -> serve lifecycle.
+
+The acceptance bar: a server constructed from a saved-then-loaded artifact
+produces BITWISE-identical generations to one packed from the original fp32
+params at every supported width, and artifact startup performs no O(params)
+fp32 quantize/pack pass."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.artifact import ARTIFACT_FORMAT, ARTIFACT_VERSION
+from repro.serve import packed_step as packed_step_mod
+
+CFG = api.ModelConfig(name="artifact-tiny", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=256, head_dim=16, q_block=16, kv_block=16,
+                      loss_chunk=16, remat="none", dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def trained(tmp_path_factory):
+    """A few reduced training steps -> (FinetuneResult, artifact dir)."""
+    out = str(tmp_path_factory.mktemp("run"))
+    res = api.finetune(CFG, out_dir=out, steps=3, global_batch=2, seq=32,
+                       lr=1e-3, ckpt_every=2, log_every=1)
+    return res
+
+
+def prompts(b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, CFG.vocab_size, (b, s)).astype(np.int32)
+
+
+class TestExport:
+    def test_finetune_exports_done_marked_artifact(self, trained):
+        assert trained.artifact is not None
+        assert os.path.exists(os.path.join(trained.artifact_path, "DONE"))
+        assert os.path.exists(
+            os.path.join(trained.artifact_path, "master.npz"))
+
+    def test_meta_contents(self, trained):
+        with open(os.path.join(trained.artifact_path, "meta.json")) as f:
+            meta = json.load(f)
+        assert meta["format"] == ARTIFACT_FORMAT
+        assert meta["version"] == ARTIFACT_VERSION
+        assert meta["model"]["name"] == CFG.name
+        assert meta["policy"]["widths"] == [8, 7, 6, 5, 4, 3]
+        assert meta["pack"]["master_m"] == 8
+        assert meta["pack"]["group_size"] == 64
+        # BPS visit/loss statistics from the trained state
+        assert meta["bps"]["t"] == 3
+        assert sum(meta["bps"]["t_b"]) == 3
+        assert meta["provenance"]["train_step"] == 3
+        assert "jax_version" in meta["provenance"]
+
+    def test_atomic_save_leaves_no_tmp(self, trained, tmp_path):
+        art = trained.artifact
+        art.save(str(tmp_path / "a"))
+        art.save(str(tmp_path / "a"))  # overwrite keeps a valid artifact
+        names = os.listdir(tmp_path)
+        assert not [n for n in names if n.startswith(".tmp_")]
+        assert not [n for n in names if ".old-" in n]
+        api.Artifact.load(str(tmp_path / "a"))  # still loadable
+
+    def test_hash_prefixed_dict_key_roundtrips(self, tmp_path):
+        """A dict key starting with '#' must survive save->load: its escaped
+        token ('\\#x') stays distinguishable from a positional '#0'."""
+        tree = {"#odd": {"w": np.ones((4,), np.float32)},
+                "plain": np.full((2,), 2.0, np.float32)}
+        art = api.Artifact.from_params(CFG, tree)
+        art.save(str(tmp_path / "hash"))
+        loaded = api.Artifact.load(str(tmp_path / "hash"))
+        np.testing.assert_array_equal(
+            np.asarray(loaded.master["#odd"]["w"], np.float32),
+            np.ones((4,), np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(loaded.master["plain"], np.float32),
+            np.full((2,), 2.0, np.float32))
+
+
+@pytest.fixture(scope="module")
+def srv_pair(trained):
+    """(server from saved-then-loaded artifact, server packed from the
+    in-memory fp32 params) — one jit cache for all width cases."""
+    srv_art = api.Artifact.load(trained.artifact_path).server(max_len=48)
+    srv_fp32 = api.SwitchableServer(CFG, trained.state.params, max_len=48)
+    return srv_art, srv_fp32
+
+
+class TestRoundtrip:
+    """ISSUE acceptance: bitwise-equal serving at every m in {8, 6, 4, 3}."""
+
+    def test_loaded_master_bit_identical(self, trained):
+        art = api.Artifact.load(trained.artifact_path)
+        fresh = api.Artifact.from_params(CFG, trained.state.params)
+        flat_a = jax.tree_util.tree_leaves(art.master)
+        flat_f = jax.tree_util.tree_leaves(fresh.master)
+        assert len(flat_a) == len(flat_f)
+        for a, f in zip(flat_a, flat_f):
+            assert a.dtype == f.dtype
+            np.testing.assert_array_equal(
+                np.asarray(a).view(np.uint8), np.asarray(f).view(np.uint8))
+
+    @pytest.mark.parametrize("m", [8, 6, 4, 3])
+    def test_server_bitwise_equal_per_width(self, srv_pair, m):
+        srv_art, srv_fp32 = srv_pair
+        srv_art.set_precision(m)
+        srv_fp32.set_precision(m)
+        r_art = srv_art.generate(prompts(), max_new=8)
+        r_fp32 = srv_fp32.generate(prompts(), max_new=8)
+        np.testing.assert_array_equal(r_art.tokens, r_fp32.tokens)
+        assert r_art.precision_trace == [m] * 8
+
+    def test_evaluate_matches_between_loaded_and_fresh(self, trained):
+        art = api.Artifact.load(trained.artifact_path)
+        fresh = api.Artifact.from_params(CFG, trained.state.params)
+        from repro.train.data import SyntheticCorpus
+        b = {k: jnp.asarray(v) for k, v in SyntheticCorpus(
+            vocab_size=CFG.vocab_size, seed=5).batch(0, 2, 32).items()}
+        assert art.evaluate(b, widths=(8, 3)) == \
+            fresh.evaluate(b, widths=(8, 3))
+
+
+class TestPackFreeStartup:
+    """The startup analogue of the O(1) precision switch: loading an
+    artifact and building its server must never run the fp32 quantize/pack
+    pass (grep-invariant on the serve path + a runtime trap)."""
+
+    def test_load_and_serve_never_pack(self, trained, monkeypatch):
+        def boom(*a, **k):
+            raise AssertionError("fp32 pack pass ran on the artifact "
+                                 "startup path")
+        monkeypatch.setattr(packed_step_mod, "pack_master_params", boom)
+        monkeypatch.setattr(api.Artifact, "from_params",
+                            classmethod(lambda *a, **k: boom()))
+        srv = api.Artifact.load(trained.artifact_path).server(max_len=48)
+        toks = srv.generate(prompts(), max_new=4).tokens
+        assert toks.shape == (2, 4)
+
+    def test_policy_travels_with_artifact(self, trained):
+        art = api.Artifact.load(trained.artifact_path)
+        assert art.trained_widths == (8, 7, 6, 5, 4, 3)
+        srv = art.server(max_len=48)
+        assert srv.policy is not None
+        assert srv.precision == 8
+
+    def test_request_class_routing_from_policy(self, trained):
+        art = api.Artifact.load(trained.artifact_path)
+        policy = (api.PrecisionPolicy.all_widths()
+                  .with_class("fast", 3)
+                  .with_class("long", [(8, 2), (4, None)]))
+        srv = art.server(policy, max_len=48)
+        r = srv.generate(prompts(), max_new=4, request_class="fast")
+        assert r.precision_trace == [3, 3, 3, 3]
+        r = srv.generate(prompts(), max_new=4, request_class="long")
+        assert r.precision_trace == [8, 8, 4, 4]
+        with pytest.raises(KeyError, match="unknown request class"):
+            srv.generate(prompts(), max_new=4, request_class="nope")
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            srv.generate(prompts(), max_new=4, precision_schedule=[8] * 4,
+                         request_class="fast")
+
+    def test_max_new_zero_is_prefill_only(self, trained):
+        # must hold on every scheduling path: plain default, a policy with
+        # a mid-stream plan, a request class, and the per-token baseline
+        art = api.Artifact.load(trained.artifact_path)
+        plan_policy = (api.PrecisionPolicy.all_widths()
+                       .with_schedule([(8, 2), (4, None)])
+                       .with_class("fast", 3))
+        for srv, kw in ((art.server(max_len=48), {}),
+                        (art.server(plan_policy, max_len=48), {}),
+                        (art.server(plan_policy, max_len=48),
+                         {"request_class": "fast"})):
+            r = srv.generate(prompts(), max_new=0, **kw)
+            assert r.tokens.shape == (2, 0)
+            assert r.precision_trace == []
+        r = art.server(max_len=48).generate_per_token(prompts(), max_new=0)
+        assert r.tokens.shape == (2, 0)
+
+
+class TestErrors:
+    def test_load_missing_dir(self, tmp_path):
+        with pytest.raises(FileNotFoundError, match="no artifact"):
+            api.Artifact.load(str(tmp_path / "nope"))
+
+    def test_load_torn_write(self, tmp_path, trained):
+        torn = tmp_path / "torn"
+        torn.mkdir()
+        (torn / "master.npz").write_bytes(b"garbage")
+        with pytest.raises(FileNotFoundError, match="DONE"):
+            api.Artifact.load(str(torn))
+
+    def test_load_layout_skew_rejected(self, trained, tmp_path):
+        """An artifact packed under different layout constants must refuse
+        to load (it would decode to silently wrong weights)."""
+        p = str(tmp_path / "skew")
+        trained.artifact.save(p)
+        meta_path = os.path.join(p, "meta.json")
+        with open(meta_path) as f:
+            meta = json.load(f)
+        meta["pack"]["group_size"] = 32
+        with open(meta_path, "w") as f:
+            json.dump(meta, f)
+        with pytest.raises(ValueError, match="layout constants"):
+            api.Artifact.load(p)
+
+    def test_load_wrong_format(self, tmp_path):
+        d = tmp_path / "notart"
+        d.mkdir()
+        (d / "meta.json").write_text(json.dumps({"format": "other"}))
+        (d / "DONE").write_text("")
+        with pytest.raises(ValueError, match="format"):
+            api.Artifact.load(str(d))
+
+    def test_from_checkpoint_no_done_step_lists_contents(self, tmp_path):
+        d = tmp_path / "ckpts"
+        d.mkdir()
+        (d / "step_0000000001").mkdir()  # no DONE: torn write
+        (d / "junk.txt").write_text("")
+        with pytest.raises(FileNotFoundError) as ei:
+            api.Artifact.from_checkpoint(str(d), CFG)
+        msg = str(ei.value)
+        assert "no DONE-marked checkpoint step" in msg
+        assert "junk.txt" in msg and "step_0000000001" in msg
+
+    def test_from_checkpoint_missing_dir(self, tmp_path):
+        with pytest.raises(FileNotFoundError, match="does not exist"):
+            api.Artifact.from_checkpoint(str(tmp_path / "nope"), CFG)
+
+    def test_from_checkpoint_bad_step(self, trained):
+        ckpt_dir = os.path.join(os.path.dirname(trained.artifact_path),
+                                "checkpoints")
+        with pytest.raises(FileNotFoundError, match="available steps"):
+            api.Artifact.from_checkpoint(ckpt_dir, CFG, step=999)
+
+
+class TestFromCheckpoint:
+    def test_import_matches_direct_export(self, trained):
+        ckpt_dir = os.path.join(os.path.dirname(trained.artifact_path),
+                                "checkpoints")
+        art = api.Artifact.from_checkpoint(ckpt_dir, CFG)
+        fresh = api.Artifact.from_params(CFG, trained.state.params)
+        for a, f in zip(jax.tree_util.tree_leaves(art.master),
+                        jax.tree_util.tree_leaves(fresh.master)):
+            np.testing.assert_array_equal(np.asarray(a).view(np.uint8),
+                                          np.asarray(f).view(np.uint8))
+        assert art.provenance["train_step"] == 3
+
+    def test_import_fixed_width_checkpoint(self, tmp_path):
+        """A checkpoint trained under a non-default width set (fixed-m:
+        one BPS arm) imports with the matching policy — the arm count is
+        read from the stored arrays — and is refused (with instructions)
+        under a policy whose arm count contradicts them, so the artifact
+        never records falsified trained widths."""
+        out = str(tmp_path / "fixed_run")
+        api.finetune(CFG, out_dir=out, policy=api.PrecisionPolicy.fixed(4),
+                     steps=2, global_batch=2, seq=32, lr=1e-3,
+                     ckpt_every=2, log_every=1, export=False)
+        ckpt_dir = os.path.join(out, "checkpoints")
+        art = api.Artifact.from_checkpoint(
+            ckpt_dir, CFG, policy=api.PrecisionPolicy.fixed(4))
+        assert art.provenance["train_step"] == 2
+        assert art.trained_widths == (4,)
+        assert art.bps_stats["t"] == 2 and len(art.bps_stats["t_b"]) == 1
+        with pytest.raises(ValueError, match="trained over 1 bit-width"):
+            api.Artifact.from_checkpoint(ckpt_dir, CFG)  # default policy
+
+
+class TestOverwriteSafety:
+    def test_failed_overwrite_restores_old_artifact(self, trained,
+                                                    tmp_path, monkeypatch):
+        """If installing the new artifact fails mid-overwrite, the previous
+        DONE-marked artifact must come back (rename-aside rollback)."""
+        from repro.train import checkpoint as ckpt_mod
+        target = str(tmp_path / "keep")
+        trained.artifact.save(target)
+        real_replace = os.replace
+
+        def fail_final_install(src, dst):
+            if (os.path.abspath(dst) == os.path.abspath(target)
+                    and ".tmp_artifact" in os.path.basename(src)):
+                raise OSError("injected failure installing new artifact")
+            return real_replace(src, dst)
+
+        monkeypatch.setattr(ckpt_mod.os, "replace", fail_final_install)
+        with pytest.raises(OSError, match="injected"):
+            trained.artifact.save(target)
+        monkeypatch.undo()
+        api.Artifact.load(target)  # the old artifact survived
+        assert not [n for n in os.listdir(tmp_path) if ".old-" in n]

@@ -1,0 +1,125 @@
+"""PrecisionPolicy tests: construction/validation, serve-side lowering
+(compile_schedule for fixed / class / mid-stream plans), train-side
+lowering (OTAROConfig.from_policy), and meta round-trip."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.otaro import OTAROConfig
+from repro.core.sefp import MANTISSA_WIDTHS
+from repro.policy import PrecisionPolicy
+
+
+class TestConstruction:
+    def test_defaults_are_the_paper_policy(self):
+        p = PrecisionPolicy.all_widths()
+        assert p.widths == MANTISSA_WIDTHS
+        assert p.mode == "otaro"
+        assert p.default == max(MANTISSA_WIDTHS)
+
+    def test_fixed(self):
+        p = PrecisionPolicy.fixed(4)
+        assert p.widths == (4,)
+        assert p.mode == "fixed"
+        assert p.default == 4
+
+    def test_width_validation(self):
+        with pytest.raises(ValueError, match="width"):
+            PrecisionPolicy(widths=(8, 9))
+        with pytest.raises(ValueError, match="width"):
+            PrecisionPolicy(widths=(8,), default=0)
+        with pytest.raises(ValueError, match="duplicate"):
+            PrecisionPolicy(widths=(8, 8))
+        with pytest.raises(ValueError, match="mode"):
+            PrecisionPolicy(mode="nope")
+
+    def test_plan_validation(self):
+        with pytest.raises(ValueError, match="last segment"):
+            PrecisionPolicy().with_schedule([(8, None), (4, 2)])
+        with pytest.raises(ValueError, match="positive"):
+            PrecisionPolicy().with_schedule([(8, 0)])
+        with pytest.raises(ValueError, match="segment"):
+            PrecisionPolicy().with_schedule([8])  # not (width, count)
+
+    def test_immutable_updates(self):
+        p = PrecisionPolicy.all_widths()
+        q = p.with_class("fast", 3)
+        assert "fast" not in p.classes and "fast" in q.classes
+
+
+class TestServeLowering:
+    def test_fixed_width_schedule(self):
+        assert PrecisionPolicy.fixed(5).compile_schedule(4) == [5, 5, 5, 5]
+
+    def test_default_schedule_uses_default_width(self):
+        p = PrecisionPolicy.all_widths(default=6)
+        assert p.compile_schedule(3) == [6, 6, 6]
+
+    def test_plan_expansion_truncation_extension(self):
+        p = PrecisionPolicy.all_widths().with_schedule([(8, 2), (4, None)])
+        assert p.compile_schedule(5) == [8, 8, 4, 4, 4]
+        assert p.compile_schedule(1) == [8]          # truncated
+        finite = PrecisionPolicy.all_widths().with_schedule([(8, 2), (4, 1)])
+        assert finite.compile_schedule(6) == [8, 8, 4, 4, 4, 4]  # extended
+
+    def test_class_routing(self):
+        p = (PrecisionPolicy.all_widths()
+             .with_class("gen", 7)
+             .with_class("cls", [(3, None)]))
+        assert p.compile_schedule(2, "gen") == [7, 7]
+        assert p.compile_schedule(2, "cls") == [3, 3]
+        with pytest.raises(KeyError, match="unknown request class"):
+            p.compile_schedule(2, "nope")
+
+    def test_int_class_spec_normalizes(self):
+        p = PrecisionPolicy.all_widths().with_class("x", 4)
+        assert p.classes["x"] == ((4, None),)
+
+    def test_max_new_validation(self):
+        with pytest.raises(ValueError, match="max_new"):
+            PrecisionPolicy.fixed(8).compile_schedule(0)
+
+
+class TestTrainLowering:
+    def test_all_widths_to_otaro(self):
+        ocfg = OTAROConfig.from_policy(PrecisionPolicy.all_widths())
+        assert tuple(ocfg.widths) == MANTISSA_WIDTHS
+        assert ocfg.mode == "otaro"
+
+    def test_fixed_to_otaro(self):
+        ocfg = OTAROConfig.from_policy(PrecisionPolicy.fixed(4))
+        assert ocfg.mode == "fixed"
+        assert ocfg.fixed_m == 4
+        assert tuple(ocfg.widths) == (4,)
+
+    def test_overrides(self):
+        ocfg = OTAROConfig.from_policy(PrecisionPolicy.all_widths(),
+                                       lam=2.5, laa_n=7)
+        assert ocfg.lam == 2.5 and ocfg.laa_n == 7
+
+    def test_mode_passthrough(self):
+        for mode in ("bps_only", "uniform", "fp16"):
+            p = PrecisionPolicy.all_widths(mode=mode)
+            assert OTAROConfig.from_policy(p).mode == mode
+
+
+class TestMetaRoundtrip:
+    def test_describe_from_meta_identity(self):
+        p = (PrecisionPolicy.all_widths(default=7)
+             .with_schedule([(8, 4), (3, None)])
+             .with_class("gen", 7)
+             .with_class("long", [(8, 8), (4, None)]))
+        q = PrecisionPolicy.from_meta(p.describe())
+        assert q == p
+
+    def test_meta_is_json_ready(self):
+        import json
+        p = PrecisionPolicy.all_widths().with_class("a", [(8, 1), (3, None)])
+        assert PrecisionPolicy.from_meta(
+            json.loads(json.dumps(p.describe()))) == p
+
+    def test_replace_keeps_validation(self):
+        p = PrecisionPolicy.all_widths()
+        with pytest.raises(ValueError):
+            dataclasses.replace(p, default=99)

@@ -115,6 +115,86 @@ class TestCheckpoint:
                 np.asarray(leaf), np.asarray(state.params["layers"]["attn"]["wq"]))
 
 
+class TestCheckpointKeyEncoding:
+    """Regression tests for the path->key encoding: a naive "/".join of
+    str(component) collides for dict keys containing "/" and for int-like
+    string keys vs positional children; path_key escapes / type-tags each
+    component so every distinct path round-trips distinctly."""
+
+    def _roundtrip(self, tree, tmp_path):
+        CKPT.save_checkpoint(str(tmp_path), 1, tree)
+        like = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(np.shape(x),
+                                           np.asarray(x).dtype), tree)
+        restored, _ = CKPT.restore_checkpoint(str(tmp_path), like)
+        flat_in = jax.tree_util.tree_leaves(tree)
+        flat_out = jax.tree_util.tree_leaves(restored)
+        assert len(flat_in) == len(flat_out)
+        for a, b in zip(flat_in, flat_out):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        return restored
+
+    def test_slash_key_does_not_collide_with_nesting(self, tmp_path):
+        tree = {"a/b": np.float32(1.0), "a": {"b": np.float32(2.0)}}
+        restored = self._roundtrip(tree, tmp_path)
+        assert float(restored["a/b"]) == 1.0
+        assert float(restored["a"]["b"]) == 2.0
+
+    def test_int_like_dict_key_vs_positional_child(self, tmp_path):
+        # dict key "0" and a list index 0 under sibling nodes must encode
+        # differently ("0" vs "#0"); both round-trip
+        tree = {"d": {"0": np.float32(3.0)}, "l": [np.float32(4.0)]}
+        restored = self._roundtrip(tree, tmp_path)
+        assert float(restored["d"]["0"]) == 3.0
+        assert float(restored["l"][0]) == 4.0
+
+    def test_escape_chars_roundtrip(self, tmp_path):
+        tree = {"w\\q": np.float32(5.0), "#0": np.float32(6.0),
+                "a\\/b": np.float32(7.0)}
+        restored = self._roundtrip(tree, tmp_path)
+        assert float(restored["#0"]) == 6.0
+        assert float(restored["w\\q"]) == 5.0
+
+    def test_split_key_inverts_escaping(self):
+        assert CKPT.split_key("a\\/b/#3/c\\\\d") == ["a/b", "#3", "c\\d"]
+
+    def test_packed_master_tree_roundtrip(self, tmp_path):
+        """A packed {mag, sign, exp} stacked-master tree (uint8/int8 leaves,
+        the repro.artifact payload) survives save/restore bit-exactly."""
+        from repro.core import packed as packed_lib
+        w = jax.random.normal(jax.random.PRNGKey(0), (2, 64, 16))
+        tree = {"layers": {"wq": packed_lib.pack_stacked(w)}}
+        restored = self._roundtrip(tree, tmp_path)
+        leaf = restored["layers"]["wq"]
+        assert set(leaf) == {"mag", "sign", "exp"}
+        assert np.asarray(leaf["mag"]).dtype == np.uint8
+        assert np.asarray(leaf["sign"]).dtype == np.uint8
+        assert np.asarray(leaf["exp"]).dtype == np.int8
+
+    def test_distinct_paths_distinct_keys(self):
+        # the collision the escaping exists to prevent: these four paths
+        # used to flatten to two keys
+        arrays = CKPT.flatten_arrays(
+            {"a/b": np.float32(1), "a": {"b": np.float32(2)},
+             "d": {"0": np.float32(3)}, "l": [np.float32(4)]})
+        assert len(arrays) == 4
+
+    def test_split_key_raw_keeps_escape_tags(self):
+        # unescape=False keeps "\#x" (escaped dict key) distinguishable
+        # from "#0" (positional) — the artifact tree rebuild relies on it
+        raw = CKPT.split_key("\\#x/#0", unescape=False)
+        assert raw == ["\\#x", "#0"]
+        assert CKPT.unescape_component(raw[0]) == "#x"
+
+    def test_legacy_format_checkpoint_gets_clear_error(self):
+        # a checkpoint written with the pre-escaping naive keys must fail
+        # with a message naming the format change, not a bare missing-key
+        like = {"l": [jax.ShapeDtypeStruct((1,), np.float32)]}
+        legacy_arrays = {"l/0": np.zeros(1, np.float32)}  # old-style key
+        with pytest.raises(KeyError, match="pre-escaping"):
+            CKPT.unflatten_arrays(like, legacy_arrays)
+
+
 class TestRunnerFaultTolerance:
     def _setup(self, tmp_path):
         corpus = data_lib.SyntheticCorpus(vocab_size=TINY.vocab_size, seed=3)
