@@ -3,6 +3,7 @@
     train               finetune(cfg, policy=..., out_dir=...) -> FinetuneResult
     export              (automatic at the end of finetune, or export_artifact)
     serve               Artifact.load(path).server(policy).generate(...)
+    serve (continuous)  .server(policy).continuous(slots=...).submit()/drain()
     evaluate            Artifact.evaluate(batch, widths)
 
 Everything a driver (repro/launch/*, examples/*) needs passes through this
@@ -35,10 +36,16 @@ from repro.models.config import ModelConfig  # noqa: F401
 from repro.models.model_zoo import init_params, make_loss_fn  # noqa: F401
 from repro.policy import PrecisionPolicy  # noqa: F401
 from repro.serve.engine import GenerationResult, SwitchableServer  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    WIDTH_POLICIES,
+    ContinuousScheduler,
+)
+from repro.serve.slots import FinishedRequest, Request  # noqa: F401
 
 __all__ = [
-    "Artifact", "FinetuneResult", "GenerationResult", "ModelConfig",
-    "OTAROConfig", "PrecisionPolicy", "SwitchableServer", "export_artifact",
+    "Artifact", "ContinuousScheduler", "FinetuneResult", "FinishedRequest",
+    "GenerationResult", "ModelConfig", "OTAROConfig", "PrecisionPolicy",
+    "Request", "SwitchableServer", "WIDTH_POLICIES", "export_artifact",
     "finetune", "init_params", "load_artifact", "make_loss_fn",
     "make_packed_serve_step", "otaro_config", "packed_param_shapes",
 ]

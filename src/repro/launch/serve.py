@@ -1,6 +1,8 @@
 """Serving launcher over the repro.api facade: load an exported artifact
 (pack-free startup) — or import a train checkpoint / random-init weights —
-and serve batched synthetic requests under a PrecisionPolicy.
+and serve either batched synthetic requests under a PrecisionPolicy
+(lockstep mode) or a JSONL request replay through the continuous-batching
+scheduler (precision-aware scheduling over per-request classes).
 
     # the production path: serve a train-exported artifact directly
     PYTHONPATH=src python -m repro.launch.serve --artifact /tmp/run1/artifact \
@@ -12,12 +14,111 @@ and serve batched synthetic requests under a PrecisionPolicy.
 
     # smoke-serve random-init weights
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --reduced
+
+    # continuous batching: replay a JSONL workload with per-request classes
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --reduced \
+        --requests workload.jsonl --slots 8 --width-policy width-rr \
+        --classes "generation=8,understanding=4"
+
+JSONL request lines (one object per request):
+
+    {"prompt_len": 24, "max_new": 12, "class": "understanding",
+     "arrival": 3, "temperature": 0.0, "top_k": 0, "seed": 1}
+
+``prompt`` may be an explicit token-id list instead of ``prompt_len``
+(synthetic tokens are derived from ``seed`` otherwise); ``arrival`` is the
+scheduler step clock tick at which the request becomes visible; ``class``
+may be a registered class name or a bare int width (auto-registered as a
+fixed-width class).  Requests are admitted into free slots as they arrive
+and leave on EOS/max_new — no lockstep barrier.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+
+
+def _load_requests(path: str, vocab_size: int):
+    import numpy as np
+
+    reqs = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{lineno}: bad JSON: {e}") from e
+            if "prompt" in d:
+                prompt = np.asarray(d["prompt"], np.int32)
+            else:
+                n = int(d.get("prompt_len", 16))
+                rng = np.random.default_rng(int(d.get("seed", 0)) + lineno)
+                prompt = rng.integers(0, vocab_size, (n,)).astype(np.int32)
+            reqs.append({
+                "prompt": prompt,
+                "max_new": int(d.get("max_new", 16)),
+                "request_class": d.get("class"),
+                "arrival": int(d.get("arrival", 0)),
+                "temperature": float(d.get("temperature", 0.0)),
+                "top_k": int(d.get("top_k", 0)),
+                "seed": int(d.get("seed", 0)),
+                "eos_id": d.get("eos_id"),
+            })
+    if not reqs:
+        raise ValueError(f"{path}: no requests")
+    return sorted(reqs, key=lambda r: r["arrival"])
+
+
+def _replay(server, args, policy):
+    """Drive the continuous scheduler over the JSONL workload via
+    ``ContinuousScheduler.replay`` (the shared arrival-clock loop)."""
+    reqs = _load_requests(args.requests, server.cfg.vocab_size)
+    # bare-int classes auto-register as fixed-width plans (bool is an int
+    # subclass in JSON — reject it rather than serving "mTrue" at width 1)
+    for r in reqs:
+        c = r["request_class"]
+        if isinstance(c, bool):
+            raise ValueError(f"request class must be a name or a width "
+                             f"int, got {c!r}")
+        if isinstance(c, int):
+            name = f"m{c}"
+            if name not in policy.classes:
+                policy = policy.with_class(name, c)
+            r["request_class"] = name
+    server.set_policy(policy)
+    sched = server.continuous(slots=args.slots,
+                              width_policy=args.width_policy,
+                              eos_id=args.eos_id)
+    t0 = time.perf_counter()
+    done = sched.replay([{"prompt": r["prompt"], "max_new": r["max_new"],
+                          "request_class": r["request_class"],
+                          "temperature": r["temperature"],
+                          "top_k": r["top_k"], "seed": r["seed"],
+                          "eos_id": r["eos_id"], "arrival": r["arrival"]}
+                         for r in reqs])
+    wall = time.perf_counter() - t0
+    stats = sched.stats
+    total_toks = sum(len(fr.tokens) for fr in done.values())
+    print(f"replayed {len(reqs)} requests / {total_toks} tokens in "
+          f"{wall:.2f}s ({total_toks / max(wall, 1e-9):.1f} tok/s) — "
+          f"{stats['steps']} steps, occupancy {stats['occupancy']:.2f}, "
+          f"commit rate {stats['commit_rate']:.2f}")
+    print(f"width steps: {stats['width_steps']}  "
+          f"starvation: {stats['starvation']}  "
+          f"policy: {stats['width_policy']}")
+    for rid in sorted(done):
+        fr = done[rid]
+        widths = dict.fromkeys(fr.decode_widths)
+        print(f"  req{rid} class={fr.request_class or '-'} "
+              f"submit@{fr.submit_step} admit@{fr.admit_step} "
+              f"finish@{fr.finish_step} {fr.finish_reason} "
+              f"tokens={len(fr.tokens)} prefill=E5M{fr.prefill_precision} "
+              f"widths={list(widths)}")
 
 
 def main():
@@ -43,6 +144,25 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    # continuous-batching replay mode
+    ap.add_argument("--requests", default=None, metavar="PATH.jsonl",
+                    help="continuous-batching mode: replay this JSONL "
+                    "workload (per-request class/arrival/sampling) through "
+                    "the precision-aware scheduler instead of a lockstep "
+                    "batch")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="continuous batch slots (replay mode)")
+    ap.add_argument("--width-policy", default="max-width",
+                    choices=("max-width", "width-rr"),
+                    help="per-step weight-width selection policy")
+    ap.add_argument("--classes", default=None,
+                    help="register request classes, e.g. "
+                    "'generation=8,understanding=4' (name=width)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="default EOS token id for replayed requests")
+    ap.add_argument("--max-len", type=int, default=None,
+                    help="serving cache length (replay mode; default "
+                    "prompt-len + new-tokens + 1)")
     args = ap.parse_args()
     if args.artifact is None and args.arch is None:
         ap.error("pass --artifact (self-describing) or --arch")
@@ -89,14 +209,25 @@ def main():
         knee = max(1, args.new_tokens // 4)
         policy = policy.with_schedule(
             [(args.precision, knee), (args.decode_precision, None)])
+    if args.classes:
+        for part in args.classes.split(","):
+            name, sep, w = part.partition("=")
+            if not sep or not name.strip() or not w.strip().isdigit():
+                ap.error(f"--classes: expected 'name=width' segments, got "
+                         f"{part!r}")
+            policy = policy.with_class(name.strip(), int(w))
 
-    server = artifact.server(
-        policy, max_len=args.prompt_len + args.new_tokens + 1)
+    max_len = args.max_len or (args.prompt_len + args.new_tokens + 1)
+    server = artifact.server(policy, max_len=max_len)
     startup_s = time.perf_counter() - t0
     rep = server.memory_report()
     print(f"serving {cfg.name} at E5M{server.precision} from {source}: "
           f"startup {startup_s:.2f}s, master {rep['master_bytes']/1e6:.2f} MB "
           f"(fp16 {rep['fp16_bytes']/1e6:.2f} MB)")
+
+    if args.requests:
+        _replay(server, args, policy)
+        return
 
     corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=3)
     prompts = np.asarray(

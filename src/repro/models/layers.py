@@ -141,7 +141,13 @@ def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 512,
 
 def decode_attention(q, k_cache, v_cache, kv_len=None) -> jax.Array:
     """Single-token attention: q [B,1,H,hd] vs cache [B,S,KV,hd].
-    kv_len: optional int32 — number of valid cache positions."""
+    kv_len: optional int32 — number of valid cache positions; either a
+    scalar (lockstep batch, every row at the same position) or int32[B]
+    (continuous batching: per-slot causal masking over the shared cache —
+    each row sees only its own valid prefix).  The scalar branch is kept
+    byte-for-byte as before; per-row masking is the same elementwise
+    ``where`` with a broadcast over the batch axis, so a row masked at
+    kv_len=n is bitwise identical either way."""
     B, _, H, hd = q.shape
     _, S, KV, _ = k_cache.shape
     G = H // KV
@@ -151,7 +157,12 @@ def decode_attention(q, k_cache, v_cache, kv_len=None) -> jax.Array:
                    k_cache.astype(jnp.float32)) * scale
     if kv_len is not None:
         pos = jnp.arange(S, dtype=jnp.int32)
-        s = jnp.where(pos[None, None, None] >= kv_len, NEG_INF, s)
+        kv_len = jnp.asarray(kv_len)
+        if kv_len.ndim == 0:
+            s = jnp.where(pos[None, None, None] >= kv_len, NEG_INF, s)
+        else:  # per-slot valid lengths [B]
+            s = jnp.where(pos[None, None, None, :]
+                          >= kv_len[:, None, None, None], NEG_INF, s)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
     return o.reshape(B, 1, H, hd).astype(q.dtype)
@@ -218,15 +229,29 @@ def attention_apply(params, x, cfg: ModelConfig, positions=None,
 
 
 def attention_decode(params, x, cfg: ModelConfig, k_cache, v_cache, pos):
-    """x: [B,1,d]; caches [B,S,KV,hd]; pos: int32[] current position.
-    Returns (out [B,1,d], new_k_cache, new_v_cache)."""
+    """x: [B,1,d]; caches [B,S,KV,hd]; pos: current position — int32[]
+    (lockstep: one position broadcast to every row, the original path,
+    unchanged) or int32[B] (continuous batching: each slot writes its k/v
+    at its OWN position and attends to its own causal prefix of the shared
+    cache).  Returns (out [B,1,d], new_k_cache, new_v_cache)."""
     B = x.shape[0]
-    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
-    q, k, v = qkv_project(params, x, cfg, positions)
-    k_cache = lax.dynamic_update_slice_in_dim(
-        k_cache, k.astype(k_cache.dtype), pos, axis=1)
-    v_cache = lax.dynamic_update_slice_in_dim(
-        v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        positions = jnp.broadcast_to(pos, (B, 1))
+        q, k, v = qkv_project(params, x, cfg, positions)
+        k_cache = lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), pos, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    else:  # per-slot positions [B]: vmapped row-wise cache update
+        positions = pos[:, None]
+        q, k, v = qkv_project(params, x, cfg, positions)
+
+        def row_update(c, new, p):
+            return lax.dynamic_update_slice_in_dim(c, new, p, axis=0)
+
+        k_cache = jax.vmap(row_update)(k_cache, k.astype(k_cache.dtype), pos)
+        v_cache = jax.vmap(row_update)(v_cache, v.astype(v_cache.dtype), pos)
     o = decode_attention(q, k_cache, v_cache, kv_len=pos + 1)
     o = o.reshape(B, 1, cfg.n_heads * cfg.hd)
     return o @ params["wo"].astype(x.dtype), k_cache, v_cache

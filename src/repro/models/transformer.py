@@ -335,8 +335,15 @@ def lm_apply_hidden(params, x_emb, cfg: ModelConfig, positions=None):
 # -- caches ------------------------------------------------------------------
 
 def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int,
-                  dtype=jnp.bfloat16):
-    """Stacked decode cache for the whole model + position counter."""
+                  dtype=jnp.bfloat16, per_slot: bool = False):
+    """Stacked decode cache for the whole model + position counter.
+
+    ``per_slot=True`` makes the position counter ``int32[batch]`` instead of
+    a scalar — the continuous-batching cache shape (repro/serve/slots.py):
+    each batch slot tracks its own sequence position and ``attention_decode``
+    writes/masks the shared KV cache per row.  The scalar form is the
+    lockstep shape (every request in the batch at the same position)."""
+    pos0 = jnp.zeros((batch,) if per_slot else (), jnp.int32)
     if cfg.family == "hybrid":
         def one_layer(_):
             return M2.mamba2_init_cache(cfg, batch, dtype=dtype)
@@ -345,24 +352,28 @@ def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int,
         attn_caches = jax.vmap(
             lambda _: attn_cache_init(cfg, batch, max_len, dtype))(
             jnp.arange(n_inv))
-        return {"layers": layer_caches, "attn": attn_caches,
-                "pos": jnp.zeros((), jnp.int32)}
+        return {"layers": layer_caches, "attn": attn_caches, "pos": pos0}
     if cfg.family == "rwkv":
         layer_caches = jax.vmap(
             lambda _: rwkv_cache_init(cfg, batch, dtype))(
             jnp.arange(cfg.n_layers))
-        return {"layers": layer_caches, "pos": jnp.zeros((), jnp.int32)}
+        return {"layers": layer_caches, "pos": pos0}
     layer_caches = jax.vmap(
         lambda _: attn_cache_init(cfg, batch, max_len, dtype))(
         jnp.arange(cfg.n_layers))
-    return {"layers": layer_caches, "pos": jnp.zeros((), jnp.int32)}
+    return {"layers": layer_caches, "pos": pos0}
 
 
 # -- decode (one token) --------------------------------------------------------
 
 def lm_decode_hidden(params, x_emb, cache, cfg: ModelConfig, resolve=None,
                      layer_unroll: int = 1):
-    """x_emb: [B,1,d]; returns (hidden [B,1,d], new_cache).  ``resolve``
+    """x_emb: [B,1,d]; returns (hidden [B,1,d], new_cache).  ``cache["pos"]``
+    may be a scalar (lockstep decode) or ``int32[B]`` (continuous batching:
+    per-slot positions threaded through ``attention_decode`` for row-wise
+    cache writes and per-slot causal masking — see ``lm_init_cache``
+    ``per_slot=``); every family handles both, since only attention consumes
+    ``pos``.  ``resolve``
     (optional) maps each layer's parameter slice before use — the packed
     master's in-scan dequant hook (see ``_resolve``).  ``layer_unroll``
     unrolls the layer scan by that factor: per-step compute is tiny at

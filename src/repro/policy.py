@@ -161,6 +161,19 @@ class PrecisionPolicy:
         return self.plan if self.plan is not None else (
             (self.default, None),)
 
+    def request_schedule(self, max_new: int,
+                         request_class: Optional[str] = None) -> list:
+        """The per-step width list ONE request decodes under, resolving in
+        serving priority order: request-class plan > default mid-stream plan
+        > constant default width.  ``max_new <= 0`` is an empty schedule
+        (prefill-only request).  This is the single resolution rule shared
+        by the lockstep engine (repro/serve/engine.py) and the continuous
+        scheduler (repro/serve/scheduler.py), so a request class means the
+        same thing on both serving paths."""
+        if max_new <= 0:
+            return []
+        return self.compile_schedule(max_new, request_class)
+
     def compile_schedule(self, max_new: int,
                          request_class: Optional[str] = None) -> list:
         """Lower to the per-step width list of length ``max_new`` that the

@@ -1,2 +1,10 @@
 from repro.serve.engine import GenerationResult, SwitchableServer  # noqa: F401
-from repro.serve.sampler import sample_token  # noqa: F401
+from repro.serve.sampler import sample_token, sample_token_vec  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    WIDTH_POLICIES,
+    ContinuousScheduler,
+    MaxWidthPolicy,
+    WidthPolicy,
+    WidthRoundRobinPolicy,
+)
+from repro.serve.slots import FinishedRequest, Request  # noqa: F401

@@ -25,7 +25,13 @@ step (repro/serve/packed_step.py).  Consequences, in order of importance:
 ``generate_per_token`` keeps the legacy loop — one jitted call and one
 host sync per token — as the measured baseline; benchmarks/bench_decode.py
 tracks fused-scan vs per-token vs materialized throughput, host-sync
-counts and switch latency in BENCH_decode.json.  On TPU the unembed gemv
+counts and switch latency in BENCH_decode.json.  Both lockstep paths stop
+at ``eos_id`` (the fused scan by masking its fixed-length emissions, the
+loop by actually breaking).  For arrival-driven traffic, ``continuous()``
+wraps this server in the continuous-batching scheduler
+(repro/serve/scheduler.py, DESIGN.md §11): per-slot admission/retirement
+over a shared cache, with the lockstep ``generate`` kept as the bitwise
+replay oracle for any realized schedule.  On TPU the unembed gemv
 can be routed through the fused sefp_matmul_gemv kernel
 (``kernel_backend=``); layer matmuls use the XLA-fused in-scan dequant,
 which is numerically identical (tests/test_serving.py asserts it).
@@ -56,6 +62,11 @@ class GenerationResult:
     precision_trace: List[int]  # mantissa width used at each decode step
     decode_seconds: float
     host_transfers: int         # device->host syncs during decode
+    # eos_id generations only: per-row emitted count INCLUDING the eos
+    # token; rows that never emitted eos have lengths == tokens.shape[1].
+    # Positions past a row's length are padded with eos_id.
+    lengths: Optional[np.ndarray] = None
+    prefill_precision: Optional[int] = None  # width the prompt ran at
 
 
 class SwitchableServer:
@@ -150,9 +161,9 @@ class SwitchableServer:
                 if self._policy is None:
                     raise ValueError("request_class routing needs a "
                                      "PrecisionPolicy (set_policy)")
-                sched = self._policy.compile_schedule(max_new, request_class)
+                sched = self._policy.request_schedule(max_new, request_class)
             elif self._policy is not None and self._policy.plan is not None:
-                sched = self._policy.compile_schedule(max_new)
+                sched = self._policy.request_schedule(max_new)
             else:
                 sched = [self._m] * max_new
         elif callable(precision_schedule):
@@ -176,10 +187,24 @@ class SwitchableServer:
         return self._prefill(self.master, toks, jnp.int32(self._m),
                              max_len=self.max_len)
 
+    def _prefill_m(self, sched: List[int],
+                   prefill_precision: Optional[int]) -> int:
+        """Width the prompt runs at: an explicit override, else the first
+        decode step's width (the historical rule), else the default."""
+        if prefill_precision is None:
+            return sched[0] if sched else self._m
+        m = int(prefill_precision)
+        if not 1 <= m <= packed_lib.MASTER_M:
+            raise ValueError(f"prefill_precision must be in "
+                             f"1..{packed_lib.MASTER_M}, got {m}")
+        return m
+
     def generate(self, prompts: np.ndarray, max_new: int,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  precision_schedule=None,
-                 request_class: Optional[str] = None) -> GenerationResult:
+                 request_class: Optional[str] = None,
+                 eos_id: Optional[int] = None,
+                 prefill_precision: Optional[int] = None) -> GenerationResult:
         """Batched generation as one fused device-resident scan.
 
         ``precision_schedule``: optional callable ``step_idx -> mantissa
@@ -188,15 +213,25 @@ class SwitchableServer:
         prefill/high, decode/low) costs nothing and triggers no retrace.
         ``request_class``: route through the installed PrecisionPolicy's
         per-class plan instead (mutually exclusive with an explicit
-        schedule).  Prefill runs at the width of the first decode step.
+        schedule).  Prefill runs at the width of the first decode step
+        unless ``prefill_precision`` overrides it (the continuous
+        scheduler's lockstep-oracle hook: a slot admitted at one width may
+        be stepped at another — repro/serve/scheduler.py).
+        ``eos_id``: a row's generation semantically ends at the first
+        emission of this id — positions after it are padded with ``eos_id``
+        and per-row counts come back in ``result.lengths``.  The fused scan
+        has fixed length, so the remaining steps still execute (tokens
+        masked after the fact, bitwise-identical prefix); use
+        ``generate_per_token`` when actually cutting compute matters more
+        than the single host transfer.
         ``temperature``/``top_k`` are static (see serve/sampler.py); a new
         ``max_new`` retraces once (new scan length)."""
         B, S = prompts.shape
         assert S + max_new <= self.max_len
         sched = self._schedule(max_new, precision_schedule, request_class)
+        pm = self._prefill_m(sched, prefill_precision)
         logits, cache = self._prefill(
-            self.master, jnp.asarray(prompts, jnp.int32),
-            jnp.int32(sched[0] if sched else self._m),
+            self.master, jnp.asarray(prompts, jnp.int32), jnp.int32(pm),
             max_len=self.max_len)
         key = jax.random.PRNGKey(seed)
         t0 = time.perf_counter()
@@ -205,33 +240,48 @@ class SwitchableServer:
                            temperature=temperature, top_k=top_k)
         tokens = np.asarray(toks)  # the single device->host transfer
         dt = time.perf_counter() - t0
+        lengths = None
+        if eos_id is not None:
+            tokens, lengths = _mask_after_eos(tokens, int(eos_id))
         return GenerationResult(tokens=tokens, prompt_len=S,
                                 precision_trace=sched, decode_seconds=dt,
-                                host_transfers=1)
+                                host_transfers=1, lengths=lengths,
+                                prefill_precision=pm)
 
     def generate_per_token(self, prompts: np.ndarray, max_new: int,
                            temperature: float = 0.0, top_k: int = 0,
                            seed: int = 0, precision_schedule=None,
-                           request_class: Optional[str] = None
+                           request_class: Optional[str] = None,
+                           eos_id: Optional[int] = None,
+                           prefill_precision: Optional[int] = None
                            ) -> GenerationResult:
         """Legacy decode loop: one jitted step dispatch and one host token
         sync per step.  Numerically the same master step as the fused scan
         (token-for-token identical at temperature 0); kept as the measured
         baseline for BENCH_decode.json and as the shape a non-batched
-        interactive client would run."""
+        interactive client would run.  With ``eos_id`` the loop genuinely
+        stops once every row has emitted it — fewer steps, fewer host
+        syncs, ``tokens.shape[1]`` may be < ``max_new`` and
+        ``precision_trace`` is truncated to the steps that ran."""
         B, S = prompts.shape
         assert S + max_new <= self.max_len
         sched = self._schedule(max_new, precision_schedule, request_class)
+        pm = self._prefill_m(sched, prefill_precision)
         logits, cache = self._prefill(
-            self.master, jnp.asarray(prompts, jnp.int32),
-            jnp.int32(sched[0] if sched else self._m),
+            self.master, jnp.asarray(prompts, jnp.int32), jnp.int32(pm),
             max_len=self.max_len)
         key = jax.random.PRNGKey(seed)
         out = []
+        done = np.zeros((B,), bool)
         t0 = time.perf_counter()
         tok = sample_token(logits, key, temperature, top_k)
         for m in sched:
-            out.append(np.asarray(tok))  # per-step host sync (the cost)
+            tok_np = np.asarray(tok)
+            out.append(tok_np)  # per-step host sync (the cost)
+            if eos_id is not None:
+                done |= tok_np == eos_id
+                if done.all():  # every row finished: skip remaining steps
+                    break
             logits, cache = self._serve(self.master, cache, tok,
                                         jnp.int32(m))
             key, sub = jax.random.split(key)
@@ -239,9 +289,30 @@ class SwitchableServer:
         dt = time.perf_counter() - t0
         tokens = (np.stack(out, axis=1) if out
                   else np.zeros((B, 0), np.int32))
+        lengths = None
+        if eos_id is not None:
+            tokens, lengths = _mask_after_eos(tokens, int(eos_id))
         return GenerationResult(tokens=tokens, prompt_len=S,
-                                precision_trace=sched, decode_seconds=dt,
-                                host_transfers=len(out))
+                                precision_trace=sched[:len(out)],
+                                decode_seconds=dt,
+                                host_transfers=len(out), lengths=lengths,
+                                prefill_precision=pm)
+
+    # -- continuous batching ---------------------------------------------------
+    def continuous(self, slots: int = 8, width_policy="max-width",
+                   policy: Optional[PrecisionPolicy] = None, **kw):
+        """A ContinuousScheduler over this server: requests enter a queue,
+        are admitted into free batch slots via per-slot prefill, decode in
+        one jitted step with per-slot positions/sampling, and leave on EOS
+        or max_new so their slot is immediately re-admitted
+        (repro/serve/scheduler.py).  ``width_policy`` selects the per-step
+        weight width from the active slots' precision classes; ``policy``
+        defaults to the installed PrecisionPolicy.  Shares this server's
+        compiled prefill/decode executables and packed master."""
+        from repro.serve.scheduler import ContinuousScheduler
+        return ContinuousScheduler(self, slots=slots,
+                                   width_policy=width_policy,
+                                   policy=policy, **kw)
 
     # -- accounting ------------------------------------------------------------
     def memory_report(self) -> dict:
@@ -262,6 +333,20 @@ class SwitchableServer:
                 stream_bits / 8 * nb["packed_params"]) + nb["raw_bytes"],
             "precision": self._m,
         }
+
+
+def _mask_after_eos(tokens: np.ndarray, eos_id: int):
+    """Host-side eos semantics: positions strictly after a row's first
+    ``eos_id`` are padded with ``eos_id``; returns (masked, lengths) where
+    lengths[b] counts emitted tokens INCLUDING the eos (== width for rows
+    that never emitted it).  The prefix up to and including eos is
+    untouched, so eos handling never perturbs the generation numerics."""
+    B, T = tokens.shape
+    hit = tokens == eos_id
+    after = (np.cumsum(hit, axis=1) - hit) > 0
+    masked = np.where(after, eos_id, tokens)
+    lengths = np.where(hit.any(axis=1), hit.argmax(axis=1) + 1, T)
+    return masked.astype(tokens.dtype), lengths.astype(np.int64)
 
 
 def _make_fused_decode(serve_step):

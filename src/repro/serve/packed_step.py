@@ -23,9 +23,13 @@ width m:
     VMEM registers.
 
 Supports every LM family (dense/vlm/moe/rwkv/hybrid); enc-dec serving is
-not wired up (the engine never supported it).  Used by the switchable
-serving engine (repro/serve/engine.py), the dry-run's "packed" variant
-(hillclimb cell C) and covered by tests/test_packed_step.py.
+not wired up (the engine never supported it).  The decode step is
+position-shape polymorphic: ``cache["pos"]`` may be the lockstep scalar or
+the continuous batcher's per-slot ``int32[B]`` (repro/serve/scheduler.py) —
+the same step function traces once per cache shape and the packed-master
+dequant is identical in both.  Used by the switchable serving engine
+(repro/serve/engine.py), the continuous scheduler, the dry-run's "packed"
+variant (hillclimb cell C) and covered by tests/test_packed_step.py.
 """
 
 from __future__ import annotations

@@ -1,12 +1,27 @@
 """Token samplers (greedy / temperature / top-k), jit- and scan-body-safe.
 
-``temperature`` and ``top_k`` are STATIC python numbers, not traced values:
-the branches below resolve at trace time, so the function can sit inside a
-jitted ``lax.scan`` decode body (repro/serve/engine.py) without introducing
-data-dependent control flow.  Callers that jit a wrapper must mark both as
-static arguments (the engine does); passing a tracer here raises a
-TracerBoolConversionError by design — sampling *strategy* is a compile-time
-property of a generation, unlike the SEFP mantissa width, which is traced.
+Two entry points:
+
+``sample_token`` — the scalar fast path.  ``temperature`` and ``top_k`` are
+STATIC python numbers, not traced values: the branches below resolve at
+trace time, so the function can sit inside a jitted ``lax.scan`` decode body
+(repro/serve/engine.py) without introducing data-dependent control flow.
+Callers that jit a wrapper must mark both as static arguments (the engine
+does); passing a tracer here raises a TracerBoolConversionError by design —
+for a lockstep batch, sampling *strategy* is a compile-time property of a
+generation, unlike the SEFP mantissa width, which is traced.
+
+``sample_token_vec`` — the per-slot path for mixed continuous batches
+(repro/serve/scheduler.py): every argument is TRACED, including per-row
+``temperature: f32[B]`` and ``top_k: int32[B]`` and one PRNG key per row, so
+ONE compiled step serves any mix of greedy/temperature/top-k requests and a
+request joining or leaving a slot never retraces.  Per-row semantics match
+``sample_token`` applied to that row alone with that row's key
+(tests/test_scheduler.py property-tests the agreement): the traced top-k
+cutoff is the same k-th largest value ``lax.top_k`` produces, the same
+``finfo.min`` masking, and a row's categorical draw uses the row's own key
+over a [V] logit vector — the identical threefry stream a [1, V] lockstep
+call consumes.  The scalar path is untouched (bitwise-stable fast path).
 """
 
 from __future__ import annotations
@@ -32,3 +47,31 @@ def sample_token(logits: jax.Array, key, temperature: float = 0.0,
         neg = jnp.finfo(logits.dtype).min
         logits = jnp.where(logits < cutoff, neg, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_token_vec(logits: jax.Array, keys, temperature: jax.Array,
+                     top_k: jax.Array) -> jax.Array:
+    """Per-slot sampling for mixed batches: logits [B, V], keys [B] PRNG
+    keys (or [B, 2] uint32), temperature f32[B], top_k int32[B] -> ids [B].
+
+    All parameters traced — one executable serves every request mix.  Rows
+    with ``temperature <= 0`` are greedy argmax (their key is not consumed);
+    rows with ``top_k > 0`` sample only among their k largest logits.  Each
+    row's draw depends only on that row's (logits, key, temperature, top_k),
+    so a request's token stream is independent of its batch neighbours."""
+    B, V = logits.shape
+    temperature = jnp.asarray(temperature, jnp.float32)
+    top_k = jnp.asarray(top_k, jnp.int32)
+    greedy = temperature <= 0.0
+    scaled = logits / jnp.where(greedy, 1.0, temperature)[:, None]
+    # traced per-row top-k: the k-th largest value via a descending sort
+    # (same value lax.top_k's vals[:, -1] yields for a static k)
+    desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    kth_idx = jnp.clip(top_k, 1, V) - 1
+    cutoff = jnp.take_along_axis(desc, kth_idx[:, None], axis=-1)
+    neg = jnp.finfo(scaled.dtype).min
+    masked = jnp.where((top_k > 0)[:, None] & (scaled < cutoff), neg, scaled)
+    sampled = jax.vmap(
+        lambda k, row: jax.random.categorical(k, row, axis=-1))(keys, masked)
+    out = jnp.where(greedy, jnp.argmax(logits, axis=-1), sampled)
+    return out.astype(jnp.int32)

@@ -1,0 +1,454 @@
+"""Continuous-batching scheduler with precision-aware width selection.
+
+The lockstep engine (repro/serve/engine.py) serves equal-length batches in
+lockstep: one scalar position, no EOS exit, and a new request waits for the
+whole batch.  This module turns the same compiled executables into a
+continuous batcher: requests enter a FIFO queue, are admitted into free
+slots of a shared per-slot cache (repro/serve/slots.py) via batch-1
+prefill, decode together in ONE jitted step with per-slot positions,
+sampling params and PRNG streams, and leave on EOS or ``max_new`` — their
+slot is re-admitted on the very next step.
+
+Precision is where this batcher differs from a vanilla one.  Each request
+carries a class/width plan (PrecisionPolicy), and because SEFP precision
+switching is O(1) — the step width is a *traced* int32 of the one compiled
+step, switching moves zero bytes and repacks nothing — the scheduler can
+choose a different weight width EVERY step with no cost.  Width selection
+is therefore pure scheduling policy over the active slots' wanted widths:
+
+  * ``max-width``  — every active slot commits every step; the step runs at
+    the maximum wanted width (nobody is served below their requested
+    fidelity; low-width requests ride along at higher quality).
+  * ``width-rr``   — round-robin over width GROUPS with aging: each step
+    serves exactly the slots whose wanted width is the chosen group's, at
+    exactly that width; unserved groups accumulate wait, and the group
+    with the largest wait wins next (ties broken by cyclic rotation), so
+    no width class can starve.  Max observed waits are reported as the
+    ``starvation`` stat.
+
+Commitment discipline: the batched step computes all rows, but only the
+scheduled ("committed") rows take effect — ``select_slots`` keeps stalled
+and free rows' cache/position/PRNG state byte-for-byte, so a request's
+token stream depends only on its own (prompt, seed, realized widths), never
+on its batch neighbours.  That yields the oracle property the tests pin
+down: a finished request replayed on the lockstep engine with its realized
+schedule (``FinishedRequest.oracle_schedule``) reproduces the SAME tokens
+bitwise, at every width.
+
+Host/device split per decode step: one jitted dispatch and ONE host sync
+(the committed tokens) — the continuous analogue of the per-token loop's
+cadence; admission adds one batch-1 prefill per request (retraced per
+distinct prompt length, as with any shape-bucketed server).
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.policy import PrecisionPolicy
+from repro.serve import slots as slots_lib
+from repro.serve.sampler import sample_token, sample_token_vec
+from repro.serve.slots import FinishedRequest, Request, SlotState, SlotTable
+
+
+# ---------------------------------------------------------------------------
+# width-selection policies
+# ---------------------------------------------------------------------------
+
+class WidthPolicy:
+    """Selects (step width, committed slot set) from the active slots'
+    wanted widths; stateful across steps (fairness accounting)."""
+
+    name = "abstract"
+
+    def select(self, wanted: Dict[int, int]) -> tuple:
+        """wanted: {slot_idx: wanted_width} (non-empty).  Returns
+        (m, committed_idxs)."""
+        raise NotImplementedError
+
+    @property
+    def starvation(self) -> Dict[int, int]:
+        """Max steps any width group waited while active (empty for
+        policies that never stall a slot)."""
+        return {}
+
+
+class MaxWidthPolicy(WidthPolicy):
+    """Serve everyone, every step, at the maximum wanted width — zero
+    stalls; low-width requests are upgraded, never degraded."""
+
+    name = "max-width"
+
+    def select(self, wanted: Dict[int, int]) -> tuple:
+        return max(wanted.values()), set(wanted)
+
+
+class WidthRoundRobinPolicy(WidthPolicy):
+    """Width-group round-robin with aging.  Each step serves exactly one
+    width group AT its wanted width (classes get their requested
+    precision, unlike max-width's upgrade).  Fairness: every unserved
+    group's wait counter grows each step and the largest wait wins, so a
+    group waits at most (#groups - 1) consecutive steps under a steady
+    mix; ties rotate cyclically through the width order.  ``starvation``
+    reports the largest wait each width ever accumulated."""
+
+    name = "width-rr"
+
+    def __init__(self):
+        self._wait: Dict[int, int] = {}
+        self._starvation: Dict[int, int] = {}
+        self._last: Optional[int] = None
+
+    def _rotation_key(self, w: int, present: list) -> int:
+        """Cyclic preference after the last served width (next width in
+        sorted order first; repeating the same group is least preferred)."""
+        if self._last is None or self._last not in present:
+            return w  # first step: prefer higher widths
+        n = len(present)
+        d = (present.index(w) - present.index(self._last)) % n
+        return n - d if d else 0
+
+    def select(self, wanted: Dict[int, int]) -> tuple:
+        present = sorted(set(wanted.values()))
+        # drop groups that emptied out (their requests finished)
+        self._wait = {w: c for w, c in self._wait.items() if w in present}
+        for w in present:
+            self._wait.setdefault(w, 0)
+        pick = max(present,
+                   key=lambda w: (self._wait[w],
+                                  self._rotation_key(w, present)))
+        for w in present:
+            if w == pick:
+                self._wait[w] = 0
+            else:
+                self._wait[w] += 1
+                self._starvation[w] = max(self._starvation.get(w, 0),
+                                          self._wait[w])
+        self._last = pick
+        return pick, {i for i, w in wanted.items() if w == pick}
+
+    @property
+    def starvation(self) -> Dict[int, int]:
+        return dict(self._starvation)
+
+
+WIDTH_POLICIES = {
+    MaxWidthPolicy.name: MaxWidthPolicy,
+    WidthRoundRobinPolicy.name: WidthRoundRobinPolicy,
+}
+
+
+def make_width_policy(spec) -> WidthPolicy:
+    if isinstance(spec, WidthPolicy):
+        return spec
+    try:
+        return WIDTH_POLICIES[spec]()
+    except KeyError:
+        raise ValueError(f"unknown width policy {spec!r}; registered: "
+                         f"{sorted(WIDTH_POLICIES)}") from None
+
+
+# ---------------------------------------------------------------------------
+# the jitted continuous decode step
+# ---------------------------------------------------------------------------
+
+def _make_continuous_step(serve_step):
+    """One continuous decode step: batched serve at traced width m, per-slot
+    sampling, masked commit.  Non-committed rows (stalled width groups,
+    free slots) keep token/cache/PRNG state unchanged, so their streams are
+    exactly as if the step never ran for them.
+
+    ``commit_all`` (static, two compiled variants) is the no-stall fast
+    path: when every ACTIVE slot commits — always under max-width, and
+    under width-rr whenever a single width group is active — the cache
+    select is skipped entirely.  Free slots then do take the step's
+    garbage writes, which is safe by the admission contract: ``write_slot``
+    overwrites a row's every leaf (KV, recurrent state, pos) before the
+    slot is used again, and row independence keeps garbage rows from
+    perturbing active ones (token/PRNG state is still mask-gated)."""
+
+    def step(master, cache, toks, m, keys, temps, topks, mask, commit_all):
+        logits, new_cache = serve_step(master, cache, toks, m)
+        if not commit_all:
+            new_cache = slots_lib.select_slots(mask, new_cache, cache)
+        pair = jax.vmap(jax.random.split)(keys)        # [B, 2, 2]
+        new_keys, subs = pair[:, 0], pair[:, 1]
+        new_keys = jnp.where(mask[:, None], new_keys, keys)
+        nxt = sample_token_vec(logits, subs, temps, topks)
+        nxt = jnp.where(mask, nxt, toks)
+        return nxt, new_cache, new_keys
+
+    return jax.jit(step, static_argnames=("commit_all",))
+
+
+# ---------------------------------------------------------------------------
+# the scheduler
+# ---------------------------------------------------------------------------
+
+class ContinuousScheduler:
+    """Continuous batcher over a SwitchableServer (use
+    ``server.continuous(...)`` or ``Artifact.server(...).continuous(...)``).
+
+    ``submit()`` enqueues a request and returns its rid; ``step()`` runs
+    one scheduler step (admissions + one batched decode at the selected
+    width), returning False once queue and slots are empty; ``drain()``
+    steps to completion and returns {rid: FinishedRequest}.  Streaming:
+    per-request ``stream(rid, token, done)`` callbacks and/or a
+    scheduler-wide ``on_token``.  Time is counted in decode steps
+    (``clock``); latency accounting lives on each FinishedRequest.
+    """
+
+    def __init__(self, server, slots: int = 8, width_policy="max-width",
+                 policy: Optional[PrecisionPolicy] = None,
+                 eos_id: Optional[int] = None,
+                 on_token: Optional[Callable[[int, int, bool], None]] = None):
+        self._srv = server
+        self.cfg = server.cfg
+        self.n_slots = int(slots)
+        self.max_len = server.max_len
+        self._policy = (policy if policy is not None
+                        else (server.policy
+                              or PrecisionPolicy.all_widths(
+                                  default=server.precision)))
+        self._width_policy = make_width_policy(width_policy)
+        self.default_eos_id = eos_id
+        self.on_token = on_token
+
+        self._table = SlotTable(self.n_slots)
+        self._queue: collections.deque = collections.deque()
+        self._finished: Dict[int, FinishedRequest] = {}
+        self._next_rid = 0
+        self.clock = 0  # decode-step clock
+
+        # device-side per-slot state
+        self._cache = slots_lib.init_slot_cache(
+            self.cfg, self.n_slots, self.max_len, server.cache_dtype)
+        self._tok = jnp.zeros((self.n_slots,), jnp.int32)
+        self._keys = jnp.zeros((self.n_slots, 2), jnp.uint32)
+        self._temps = np.zeros((self.n_slots,), np.float32)
+        self._topks = np.zeros((self.n_slots,), np.int32)
+        # the jitted step/write executables are cached ON the server, so
+        # constructing a fresh scheduler over the same server (new workload,
+        # different width policy) reuses the compiled code — scheduler state
+        # is host data, the executables are shape-keyed only.
+        if not hasattr(server, "_continuous_step_fn"):
+            server._continuous_step_fn = _make_continuous_step(server._serve)
+            server._write_slot_fn = jax.jit(slots_lib.write_slot)
+        self._step_fn = server._continuous_step_fn
+        self._write_slot = server._write_slot_fn
+
+        self._counts = {"steps": 0, "committed_tokens": 0,
+                        "slot_steps_active": 0, "slot_steps_committed": 0,
+                        "admitted": 0, "finished": 0,
+                        "width_steps": collections.Counter()}
+
+    # -- queueing -----------------------------------------------------------
+    def submit(self, prompt, max_new: int,
+               request_class: Optional[str] = None,
+               temperature: float = 0.0, top_k: int = 0,
+               eos_id: Optional[int] = None, seed: int = 0,
+               stream: Optional[Callable[[int, int, bool], None]] = None
+               ) -> int:
+        """Enqueue a request; returns its rid.  Validates length and class
+        routing here (fail fast), admission happens inside ``step()``."""
+        prompt = np.ascontiguousarray(np.asarray(prompt, np.int32).ravel())
+        max_new = int(max_new)
+        if max_new < 0:
+            raise ValueError(f"max_new must be >= 0, got {max_new}")
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if prompt.size + max_new > self.max_len:
+            raise ValueError(
+                f"prompt_len {prompt.size} + max_new {max_new} exceeds the "
+                f"server max_len {self.max_len}")
+        # resolves class > plan > default; unknown classes raise KeyError
+        schedule = self._policy.request_schedule(max_new, request_class)
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt, max_new=max_new,
+                      request_class=request_class,
+                      temperature=float(temperature), top_k=int(top_k),
+                      eos_id=(self.default_eos_id if eos_id is None
+                              else int(eos_id)),
+                      seed=int(seed), stream=stream,
+                      submit_step=self.clock)
+        self._queue.append((req, schedule))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def active(self) -> int:
+        return self._table.n_active
+
+    # -- admission ----------------------------------------------------------
+    def _admit_one(self, req: Request, schedule, idx: int) -> None:
+        pm = schedule[0]
+        logits, slot_cache = self._srv._prefill(
+            self._srv.master, jnp.asarray(req.prompt[None, :]),
+            jnp.int32(pm), max_len=self.max_len)
+        k0 = jax.random.PRNGKey(req.seed)
+        tok0 = int(sample_token(logits, k0, req.temperature, req.top_k)[0])
+        self._cache = self._write_slot(self._cache, slot_cache,
+                                       jnp.int32(idx))
+        self._tok = self._tok.at[idx].set(tok0)
+        self._keys = self._keys.at[idx].set(k0)
+        self._temps[idx] = req.temperature
+        self._topks[idx] = req.top_k
+        state = SlotState(req=req, schedule=schedule, emitted=[tok0],
+                          decode_widths=[], prefill_precision=pm,
+                          admit_step=self.clock)
+        self._table.admit(idx, state)
+        self._counts["admitted"] += 1
+        done = (tok0 == req.eos_id if req.eos_id is not None
+                else False) or req.max_new <= 1
+        self._emit(req, tok0, done)
+        if done:
+            self._retire(idx, "eos" if (req.eos_id is not None
+                                        and tok0 == req.eos_id)
+                         else "length")
+
+    def _admit(self) -> None:
+        while self._queue:
+            req, schedule = self._queue[0]
+            if req.max_new == 0:
+                # prefill-only: nothing to decode, no slot needed — finish
+                # at the queue head without waiting for (or blocking on) a
+                # free slot.  No prefill actually runs; the recorded width
+                # is the one the request's class would have prefilled at.
+                self._queue.popleft()
+                self._finished[req.rid] = FinishedRequest(
+                    rid=req.rid, tokens=np.zeros((0,), np.int32),
+                    prompt_len=req.prompt.size, finish_reason="length",
+                    prefill_precision=self._policy.request_schedule(
+                        1, req.request_class)[0],
+                    decode_widths=[], request_class=req.request_class,
+                    submit_step=req.submit_step, admit_step=self.clock,
+                    finish_step=self.clock)
+                self._counts["admitted"] += 1
+                self._counts["finished"] += 1
+                continue
+            idx = self._table.free_idx()
+            if idx is None:
+                return
+            self._queue.popleft()
+            self._admit_one(req, schedule, idx)
+
+    # -- stepping -----------------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler step: admit from the queue, pick the step width
+        from the active slots' wanted widths, run one batched decode,
+        commit the scheduled rows, retire finished requests.  Returns
+        False when there is nothing left to do."""
+        self._admit()
+        wanted = {idx: s.wanted for idx, s in self._table.active()}
+        if not wanted:
+            return False
+        m, commit = self._width_policy.select(wanted)
+        mask = np.zeros((self.n_slots,), bool)
+        mask[sorted(commit)] = True
+        nxt, cache, keys = self._step_fn(
+            self._srv.master, self._cache, self._tok, jnp.int32(m),
+            self._keys, jnp.asarray(self._temps), jnp.asarray(self._topks),
+            jnp.asarray(mask), commit_all=len(commit) == len(wanted))
+        self._cache, self._keys, self._tok = cache, keys, nxt
+        toks = np.asarray(nxt)  # ONE host sync per continuous step
+        self.clock += 1
+        self._counts["steps"] += 1
+        self._counts["slot_steps_active"] += len(wanted)
+        self._counts["slot_steps_committed"] += len(commit)
+        self._counts["committed_tokens"] += len(commit)
+        self._counts["width_steps"][int(m)] += 1
+        for idx in sorted(commit):
+            slot = self._table.get(idx)
+            t = int(toks[idx])
+            slot.decode_widths.append(int(m))
+            slot.emitted.append(t)
+            eos = slot.req.eos_id
+            hit_eos = eos is not None and t == eos
+            done = hit_eos or len(slot.emitted) >= slot.req.max_new
+            self._emit(slot.req, t, done)
+            if done:
+                self._retire(idx, "eos" if hit_eos else "length")
+        return True
+
+    def drain(self) -> Dict[int, FinishedRequest]:
+        """Step until queue and slots are empty; returns (and clears) every
+        request finished since the last drain, keyed by rid."""
+        while self.step():
+            pass
+        out, self._finished = self._finished, {}
+        return out
+
+    def replay(self, requests) -> Dict[int, FinishedRequest]:
+        """Drive the scheduler over an arrival-ordered workload and drain:
+        each request is a dict of ``submit()`` kwargs plus an optional
+        ``arrival`` (step-clock tick at which it becomes visible).  Idle
+        gaps before the next arrival tick the clock once, so latency stats
+        count real waiting.  This is THE replay loop — the serve CLI's
+        JSONL mode and benchmarks/bench_serving.py both run through it, so
+        the clock/idle semantics (which define the latency metrics) cannot
+        diverge between them.  Returns ``drain()``'s {rid: FinishedRequest}."""
+        reqs = sorted(requests, key=lambda r: int(r.get("arrival", 0)))
+        i = 0
+        while i < len(reqs) or self.pending or self.active:
+            while (i < len(reqs)
+                   and int(reqs[i].get("arrival", 0)) <= self.clock):
+                kw = {k: v for k, v in reqs[i].items() if k != "arrival"}
+                self.submit(**kw)
+                i += 1
+            if not self.step() and i < len(reqs):
+                self.clock += 1  # idle gap before the next arrival
+        return self.drain()
+
+    # -- internals ----------------------------------------------------------
+    def _emit(self, req: Request, token: int, done: bool) -> None:
+        if req.stream is not None:
+            req.stream(req.rid, token, done)
+        if self.on_token is not None:
+            self.on_token(req.rid, token, done)
+
+    def _retire(self, idx: int, reason: str) -> None:
+        slot = self._table.retire(idx)
+        self._temps[idx] = 0.0
+        self._topks[idx] = 0
+        self._counts["finished"] += 1
+        self._finished[slot.req.rid] = FinishedRequest(
+            rid=slot.req.rid,
+            tokens=np.asarray(slot.emitted, np.int32),
+            prompt_len=slot.req.prompt.size,
+            finish_reason=reason,
+            prefill_precision=slot.prefill_precision,
+            decode_widths=list(slot.decode_widths),
+            request_class=slot.req.request_class,
+            submit_step=slot.req.submit_step,
+            admit_step=slot.admit_step,
+            finish_step=self.clock)
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def stats(self) -> dict:
+        c = self._counts
+        steps = max(c["steps"], 1)
+        return {
+            "steps": c["steps"],
+            "committed_tokens": c["committed_tokens"],
+            "admitted": c["admitted"],
+            "finished": c["finished"],
+            "pending": self.pending,
+            "active": self.active,
+            # mean fraction of slots occupied / committed per step
+            "occupancy": c["slot_steps_active"] / (steps * self.n_slots),
+            "commit_rate": (c["slot_steps_committed"]
+                            / max(c["slot_steps_active"], 1)),
+            "width_steps": dict(c["width_steps"]),
+            "starvation": self._width_policy.starvation,
+            "width_policy": self._width_policy.name,
+        }

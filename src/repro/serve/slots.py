@@ -1,0 +1,197 @@
+"""Slot-level state for continuous batching: request/result records, host
+bookkeeping, and the device-side cache slot operations.
+
+A continuous batch is a fixed set of ``n_slots`` rows of one shared decode
+cache (``lm_init_cache(..., per_slot=True)``: every row carries its OWN
+position counter ``pos: int32[B]``).  A request occupies one slot from
+admission to finish; the row's lifecycle is
+
+    free -> admitted (batch-1 prefill written into the row, first token
+    sampled from the prefill logits) -> decoding (committed on the steps
+    its width group is served) -> finished (EOS or max_new) -> free again,
+    immediately re-admittable — no waiting for batch neighbours.
+
+Two device operations define the slot discipline, both pure tree maps keyed
+on the one structural fact of the cache layout (``pos`` is per-slot at axis
+0; every other leaf is stacked ``[layers, B, ...]`` with batch at axis 1):
+
+  * ``write_slot(cache, slot_cache, idx)`` — install a batch-1 prefill
+    cache into row ``idx``.  ``idx`` is traced, so one compiled write
+    serves every slot.
+  * ``select_slots(mask, new, old)`` — per-row commit of a decode step:
+    rows with ``mask[b]`` take the stepped cache, the rest keep their
+    previous state byte-for-byte.  This is what makes a batched step safe
+    for rows that are free or whose width group was not scheduled this
+    step: their KV rows, recurrent (Mamba2/RWKV6) states and positions are
+    untouched, so a stalled request resumes exactly where it stopped.
+
+The scheduling logic that drives these lives in repro/serve/scheduler.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# host-side records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One queued generation request.  ``request_class`` routes through the
+    scheduler's PrecisionPolicy (named class -> width plan); sampling
+    params are per-request (the vectorized sampler serves any mix);
+    ``stream`` is an optional ``stream(rid, token, done)`` callback fired
+    as each token is committed."""
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    request_class: Optional[str] = None
+    temperature: float = 0.0
+    top_k: int = 0
+    eos_id: Optional[int] = None
+    seed: int = 0
+    stream: Optional[Callable[[int, int, bool], None]] = None
+    submit_step: int = 0        # scheduler step clock at submit()
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    """A completed request with its realized precision trace and step-clock
+    latency accounting (submit -> admit is queue wait; admit -> finish is
+    service time, both in scheduler decode steps)."""
+    rid: int
+    tokens: np.ndarray          # [n] int32, n <= max_new (incl. eos if hit)
+    prompt_len: int
+    finish_reason: str          # "eos" | "length"
+    prefill_precision: int      # width the prompt ran at
+    decode_widths: List[int]    # realized width of each committed step
+    request_class: Optional[str]
+    submit_step: int
+    admit_step: int
+    finish_step: int
+
+    def oracle_schedule(self) -> tuple:
+        """(precision_schedule, prefill_precision) that reproduces this
+        request bitwise on the lockstep engine:
+        ``server.generate(prompt[None], max_new=len(tokens),
+        precision_schedule=sched, prefill_precision=pm)``.  Step i of a
+        lockstep generation consumes token i at schedule[i]; the last
+        step's logits are never sampled from, so its width is padded with
+        the final realized width (it cannot affect the tokens)."""
+        n = len(self.tokens)
+        if n == 0:
+            return [], self.prefill_precision
+        pad = (self.decode_widths[-1] if self.decode_widths
+               else self.prefill_precision)
+        return list(self.decode_widths) + [pad], self.prefill_precision
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Host view of one occupied slot."""
+    req: Request
+    schedule: List[int]         # wanted per-step widths (len == max_new)
+    emitted: List[int]          # committed tokens (first from prefill)
+    decode_widths: List[int]    # realized width per committed decode step
+    prefill_precision: int
+    admit_step: int
+
+    @property
+    def wanted(self) -> int:
+        """Width this slot wants for its next decode step — the schedule
+        entry of the token that step consumes (active slots always have
+        1 <= len(emitted) < max_new, so the index is in range)."""
+        return self.schedule[len(self.emitted) - 1]
+
+
+class SlotTable:
+    """Fixed-size slot occupancy map (host side)."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self._slots: List[Optional[SlotState]] = [None] * n_slots
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    def free_idx(self) -> Optional[int]:
+        for i, s in enumerate(self._slots):
+            if s is None:
+                return i
+        return None
+
+    def admit(self, idx: int, state: SlotState) -> None:
+        if self._slots[idx] is not None:
+            raise ValueError(f"slot {idx} is occupied (rid="
+                             f"{self._slots[idx].req.rid})")
+        self._slots[idx] = state
+
+    def get(self, idx: int) -> SlotState:
+        s = self._slots[idx]
+        if s is None:
+            raise KeyError(f"slot {idx} is free")
+        return s
+
+    def retire(self, idx: int) -> SlotState:
+        s = self.get(idx)
+        self._slots[idx] = None
+        return s
+
+    def active(self) -> list:
+        """[(idx, SlotState)] for occupied slots, in slot order."""
+        return [(i, s) for i, s in enumerate(self._slots) if s is not None]
+
+
+# ---------------------------------------------------------------------------
+# device-side slot operations
+# ---------------------------------------------------------------------------
+
+def init_slot_cache(cfg: ModelConfig, n_slots: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Any:
+    """The shared continuous-batching cache: per-slot ``pos: int32[B]``."""
+    from repro.models import transformer as T
+    return T.lm_init_cache(cfg, n_slots, max_len, dtype, per_slot=True)
+
+
+def _is_pos(path) -> bool:
+    last = path[-1]
+    return getattr(last, "key", None) == "pos"
+
+
+def write_slot(cache: Any, slot_cache: Any, idx) -> Any:
+    """Install a batch-1 prefill cache (leaves ``[L, 1, ...]``, scalar
+    ``pos``) into row ``idx`` of the shared cache.  ``idx`` is traced —
+    one compiled write serves every slot."""
+    def wr(path, c, s):
+        if _is_pos(path):
+            return c.at[idx].set(jnp.asarray(s, c.dtype))
+        return lax.dynamic_update_slice_in_dim(c, s.astype(c.dtype), idx,
+                                               axis=1)
+    return jax.tree_util.tree_map_with_path(wr, cache, slot_cache)
+
+
+def select_slots(mask, new_cache: Any, old_cache: Any) -> Any:
+    """Commit the stepped cache only for rows where ``mask`` is True;
+    stalled/free rows keep their previous state byte-for-byte (KV rows,
+    recurrent states, positions)."""
+    def sel(path, n, o):
+        ax = 0 if _is_pos(path) else 1
+        shape = [1] * n.ndim
+        shape[ax] = mask.shape[0]
+        return jnp.where(mask.reshape(shape), n, o)
+    return jax.tree_util.tree_map_with_path(sel, new_cache, old_cache)

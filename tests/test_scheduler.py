@@ -1,0 +1,357 @@
+"""Continuous-batching scheduler tests: slot lifecycle, width-selection
+policies (fairness/starvation), and the load-bearing invariant — a request
+served continuously (ragged admission, per-slot positions, masked commits,
+mixed width classes) produces BITWISE the same tokens as the lockstep
+engine replaying its realized schedule (`FinishedRequest.oracle_schedule`),
+at every precision."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import model_zoo as Z
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.policy import PrecisionPolicy
+from repro.serve import SwitchableServer
+from repro.serve import slots as slots_lib
+from repro.serve.scheduler import (
+    MaxWidthPolicy,
+    WidthRoundRobinPolicy,
+    make_width_policy,
+)
+
+CFG = ModelConfig(name="sched-tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, q_block=16, kv_block=16, loss_chunk=16,
+                  remat="none", dtype="bfloat16")
+
+RWKV_CFG = ModelConfig(name="sched-rwkv", family="rwkv", n_layers=2,
+                       d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+                       d_ff=256, vocab_size=256, rwkv_head_dim=32,
+                       q_block=32, kv_block=32, loss_chunk=32, remat="none",
+                       dtype="bfloat16")
+
+
+@pytest.fixture(scope="module")
+def server():
+    params = Z.init_params(CFG, jax.random.PRNGKey(0))
+    srv = SwitchableServer(CFG, params, max_len=96)
+    srv.set_policy(PrecisionPolicy.all_widths()
+                   .with_class("gen", 8).with_class("cheap", 4)
+                   .with_class("mid", [(6, 3), (3, None)]))
+    return srv
+
+
+def prompts(b=4, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, CFG.vocab_size, (b, s)).astype(np.int32)
+
+
+def check_oracle(server, fr, prompt):
+    """A finished request replayed on the lockstep engine with its realized
+    schedule must reproduce the same tokens bitwise."""
+    sched, pm = fr.oracle_schedule()
+    solo = server.generate(prompt[None], max_new=len(fr.tokens),
+                           precision_schedule=sched, prefill_precision=pm)
+    np.testing.assert_array_equal(fr.tokens, solo.tokens[0])
+
+
+# ---------------------------------------------------------------------------
+# per-slot position plumbing (the model-layer substrate)
+# ---------------------------------------------------------------------------
+
+class TestPerSlotPositions:
+    def test_vector_pos_decode_matches_scalar(self):
+        """One decode step with pos: int32[B] (all equal) is bitwise the
+        scalar-pos step — the lockstep path is a special case of the
+        per-slot path."""
+        params = Z.init_params(CFG, jax.random.PRNGKey(1))
+        toks = prompts(3, 8, seed=5)
+        from repro.models import layers as L
+        x = L.embed(params["embed"], jnp.asarray(toks), jnp.bfloat16)
+        h, cache = T.lm_prefill_hidden(params, x, CFG, 24)
+        xe = L.embed(params["embed"], jnp.asarray([[1], [2], [3]]),
+                     jnp.bfloat16)
+        h1, c1 = T.lm_decode_hidden(params, xe, cache, CFG)
+        cache_v = dict(cache)
+        cache_v["pos"] = jnp.full((3,), 8, jnp.int32)
+        h2, c2 = T.lm_decode_hidden(params, xe, cache_v, CFG)
+        np.testing.assert_array_equal(np.asarray(h1, np.float32),
+                                      np.asarray(h2, np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(c1["layers"]["k"], np.float32),
+            np.asarray(c2["layers"]["k"], np.float32))
+        np.testing.assert_array_equal(np.asarray(c2["pos"]), [9, 9, 9])
+
+    def test_per_slot_cache_init(self):
+        cache = slots_lib.init_slot_cache(CFG, 5, 32)
+        assert cache["pos"].shape == (5,)
+        assert cache["layers"]["k"].shape[1] == 5
+
+    def test_write_and_select_slots(self):
+        """write_slot installs a batch-1 tree into one row; select_slots
+        keeps unmasked rows byte-for-byte."""
+        cache = {"layers": {"k": jnp.zeros((2, 3, 4), jnp.float32)},
+                 "pos": jnp.zeros((3,), jnp.int32)}
+        slot = {"layers": {"k": jnp.ones((2, 1, 4), jnp.float32)},
+                "pos": jnp.asarray(7, jnp.int32)}
+        w = jax.jit(slots_lib.write_slot)(cache, slot, jnp.int32(1))
+        np.testing.assert_array_equal(np.asarray(w["pos"]), [0, 7, 0])
+        assert float(w["layers"]["k"][:, 1].sum()) == 8.0
+        assert float(w["layers"]["k"][:, 0].sum()) == 0.0
+        new = jax.tree_util.tree_map(lambda a: a + 100, w)
+        sel = slots_lib.select_slots(jnp.asarray([True, False, True]),
+                                     new, w)
+        np.testing.assert_array_equal(np.asarray(sel["pos"]), [100, 7, 100])
+        np.testing.assert_array_equal(np.asarray(sel["layers"]["k"][:, 1]),
+                                      np.asarray(w["layers"]["k"][:, 1]))
+
+
+# ---------------------------------------------------------------------------
+# width-selection policies
+# ---------------------------------------------------------------------------
+
+class TestWidthPolicies:
+    def test_max_width_commits_everyone(self):
+        p = MaxWidthPolicy()
+        m, commit = p.select({0: 4, 2: 8, 5: 3})
+        assert m == 8 and commit == {0, 2, 5}
+        assert p.starvation == {}
+
+    def test_round_robin_alternates_and_serves_at_wanted_width(self):
+        p = WidthRoundRobinPolicy()
+        wanted = {0: 8, 1: 4, 2: 8, 3: 4}
+        picks = [p.select(dict(wanted)) for _ in range(6)]
+        ms = [m for m, _ in picks]
+        # strict alternation under a steady two-group mix
+        assert ms in ([8, 4, 8, 4, 8, 4], [4, 8, 4, 8, 4, 8])
+        for m, commit in picks:
+            assert commit == {i for i, w in wanted.items() if w == m}
+        # aging bounds the wait: with two groups nobody waits > 1 step
+        assert set(p.starvation.values()) == {1}
+
+    def test_round_robin_no_starvation_three_groups(self):
+        p = WidthRoundRobinPolicy()
+        wanted = {0: 8, 1: 6, 2: 3}
+        served = [p.select(dict(wanted))[0] for _ in range(9)]
+        for w in (8, 6, 3):
+            assert served.count(w) == 3, served
+        assert max(p.starvation.values()) <= 2
+
+    def test_round_robin_single_group_never_stalls(self):
+        p = WidthRoundRobinPolicy()
+        for _ in range(4):
+            m, commit = p.select({0: 5, 1: 5})
+            assert m == 5 and commit == {0, 1}
+        assert p.starvation == {}
+
+    def test_registry(self):
+        assert isinstance(make_width_policy("max-width"), MaxWidthPolicy)
+        assert isinstance(make_width_policy("width-rr"),
+                          WidthRoundRobinPolicy)
+        with pytest.raises(ValueError, match="unknown width policy"):
+            make_width_policy("nope")
+
+
+# ---------------------------------------------------------------------------
+# lockstep <-> continuous equivalence (the acceptance invariant)
+# ---------------------------------------------------------------------------
+
+class TestLockstepEquivalence:
+    @pytest.mark.parametrize("m", [8, 6, 4, 3])
+    def test_same_class_batch_matches_lockstep(self, server, m):
+        """Same prompts, same width schedule => bitwise-same tokens: a
+        uniform-class continuous batch (max-width => constant width m)
+        reproduces the lockstep batch exactly."""
+        p = prompts(b=4, seed=m)
+        ref = server.generate(p, max_new=8, precision_schedule=[m] * 8)
+        # route the constant width via a fixed-width policy
+        sched = server.continuous(
+            slots=4, policy=PrecisionPolicy.all_widths(default=m))
+        rids = [sched.submit(p[i], 8) for i in range(4)]
+        done = sched.drain()
+        for i, rid in enumerate(rids):
+            fr = done[rid]
+            assert fr.decode_widths == [m] * 7
+            assert fr.prefill_precision == m
+            np.testing.assert_array_equal(fr.tokens, ref.tokens[i])
+
+    def test_mixed_classes_width_rr_oracle(self, server):
+        """Mixed precision classes under width-rr: every request's realized
+        schedule replays bitwise on the lockstep engine (including the
+        mid-stream 'mid' plan whose wanted width drops 6 -> 3)."""
+        p = prompts(b=4, seed=42)
+        classes = ["gen", "cheap", "mid", "cheap"]
+        sched = server.continuous(slots=4, width_policy="width-rr")
+        rids = [sched.submit(p[i], 6, request_class=classes[i], seed=i)
+                for i in range(4)]
+        done = sched.drain()
+        assert len(done) == 4
+        widths_seen = set()
+        for i, rid in enumerate(rids):
+            fr = done[rid]
+            widths_seen.update(fr.decode_widths)
+            check_oracle(server, fr, p[i])
+        assert len(widths_seen) > 1  # genuinely mixed-width serving
+        stats = sched.stats
+        assert stats["commit_rate"] < 1.0  # groups actually stalled
+        assert sum(stats["width_steps"].values()) == stats["steps"]
+
+    def test_staggered_ragged_reuses_slots(self, server):
+        """More requests than slots with staggered arrivals and ragged
+        max_new: slots are re-admitted, every request completes, and each
+        one still matches its lockstep oracle."""
+        lens = [16, 12, 16, 12, 16, 12]
+        news = [9, 5, 7, 3, 6, 4]
+        ps = [prompts(1, lens[i], seed=100 + i)[0] for i in range(6)]
+        sched = server.continuous(slots=2)
+        rids = [sched.submit(ps[0], news[0]), sched.submit(ps[1], news[1])]
+        k = 2
+        while True:
+            prog = sched.step()
+            if k < 6:  # late arrivals while serving
+                rids.append(sched.submit(ps[k], news[k]))
+                k += 1
+            if not prog and k >= 6:
+                break
+        done = sched.drain()
+        assert len(done) == 6
+        assert sched.stats["admitted"] == 6
+        for i, rid in enumerate(rids):
+            fr = done[rid]
+            assert len(fr.tokens) == news[i]
+            assert fr.admit_step >= fr.submit_step
+            assert fr.finish_step > fr.admit_step
+            check_oracle(server, fr, ps[i])
+
+    def test_recurrent_family_continuous(self):
+        """rwkv: slot admission writes recurrent state rows (not KV
+        positions); continuous still matches the lockstep oracle."""
+        params = Z.init_params(RWKV_CFG, jax.random.PRNGKey(3))
+        srv = SwitchableServer(RWKV_CFG, params, max_len=64)
+        p = prompts(2, 12, seed=9)
+        ref = srv.generate(p, max_new=6)
+        sched = srv.continuous(slots=2)
+        rids = [sched.submit(p[i], 6) for i in range(2)]
+        done = sched.drain()
+        for i, rid in enumerate(rids):
+            np.testing.assert_array_equal(done[rid].tokens, ref.tokens[i])
+
+    def test_sampled_solo_matches_lockstep_stream(self, server):
+        """Per-slot PRNG streams: a sampled request served continuously
+        (even sharing the batch) equals the lockstep generation with the
+        same seed — slot-neighbour independence at temperature > 0."""
+        p = prompts(b=2, seed=77)
+        ref = server.generate(p[:1], max_new=8, temperature=0.8, top_k=8,
+                              seed=11)
+        sched = server.continuous(slots=2)
+        rid = sched.submit(p[0], 8, temperature=0.8, top_k=8, seed=11)
+        sched.submit(p[1], 8, temperature=1.2, top_k=4, seed=5)  # neighbour
+        done = sched.drain()
+        np.testing.assert_array_equal(done[rid].tokens, ref.tokens[0])
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: EOS, streaming, validation, stats
+# ---------------------------------------------------------------------------
+
+class TestLifecycle:
+    def test_eos_frees_slot_early(self, server):
+        p = prompts(1, seed=1)[0]
+        base = server.generate(p[None], max_new=8)
+        eos = int(base.tokens[0, 3])
+        sched = server.continuous(slots=1)
+        rid = sched.submit(p, 8, eos_id=eos)
+        rid2 = sched.submit(p, 2)  # queued behind; admitted after eos
+        done = sched.drain()
+        fr = done[rid]
+        assert fr.finish_reason == "eos"
+        assert fr.tokens[-1] == eos and len(fr.tokens) <= 4
+        np.testing.assert_array_equal(fr.tokens,
+                                      base.tokens[0, :len(fr.tokens)])
+        assert done[rid2].finish_reason == "length"
+
+    def test_streaming_callbacks(self, server):
+        p = prompts(2, seed=2)
+        got = []
+        sched = server.continuous(
+            slots=2, on_token=lambda rid, t, d: got.append((rid, t, d)))
+        per_req = []
+        rid = sched.submit(p[0], 4,
+                           stream=lambda r, t, d: per_req.append((t, d)))
+        sched.submit(p[1], 3)
+        done = sched.drain()
+        np.testing.assert_array_equal([t for t, _ in per_req],
+                                      done[rid].tokens)
+        assert [d for _, d in per_req] == [False, False, False, True]
+        assert len(got) == sum(len(fr.tokens) for fr in done.values())
+
+    def test_submit_validation(self, server):
+        sched = server.continuous(slots=2)
+        with pytest.raises(KeyError, match="unknown request class"):
+            sched.submit(prompts(1)[0], 4, request_class="nope")
+        with pytest.raises(ValueError, match="max_len"):
+            sched.submit(prompts(1, s=90)[0], 90)
+        with pytest.raises(ValueError, match="empty"):
+            sched.submit(np.zeros((0,), np.int32), 4)
+
+    def test_prefill_only_request(self, server):
+        sched = server.continuous(slots=1)
+        rid = sched.submit(prompts(1)[0], 0)
+        done = sched.drain()
+        assert len(done[rid].tokens) == 0
+        assert done[rid].finish_reason == "length"
+
+    def test_prefill_only_does_not_wait_for_slots(self, server):
+        """max_new=0 never occupies a slot, so it finishes at the queue
+        head even while every slot is busy — and records the width its
+        class would have prefilled at."""
+        p = prompts(2, seed=6)
+        sched = server.continuous(slots=1)
+        sched.submit(p[0], 6)                 # occupies the only slot
+        sched.step()
+        rid = sched.submit(p[1], 0, request_class="cheap")
+        assert sched.step()                   # admission poll, slot busy
+        assert rid in sched._finished         # finished without a slot
+        done = sched.drain()
+        assert done[rid].finish_step <= done[rid].submit_step + 1
+        assert done[rid].prefill_precision == 4  # class width, not default
+
+    def test_replay_matches_manual_drive(self, server):
+        """ContinuousScheduler.replay (the shared CLI/bench loop) gives the
+        same per-request results as hand-driven submit/step."""
+        p = prompts(3, seed=12)
+        news = [5, 3, 4]
+        work = [{"prompt": p[i], "max_new": news[i], "seed": i,
+                 "arrival": 2 * i} for i in range(3)]
+        done = server.continuous(slots=2).replay(work)
+        assert len(done) == 3
+        for rid, fr in done.items():
+            assert len(fr.tokens) == news[rid]
+            check_oracle(server, fr, p[rid])
+            assert fr.submit_step >= 2 * rid  # arrival clock respected
+
+    def test_max_new_one_finishes_at_admission(self, server):
+        sched = server.continuous(slots=1)
+        p = prompts(1, seed=3)[0]
+        rid = sched.submit(p, 1)
+        done = sched.drain()
+        fr = done[rid]
+        assert len(fr.tokens) == 1 and fr.decode_widths == []
+        ref = server.generate(p[None], max_new=1)
+        np.testing.assert_array_equal(fr.tokens, ref.tokens[0])
+
+    def test_stats_accounting(self, server):
+        p = prompts(3, seed=8)
+        sched = server.continuous(slots=2)
+        for i in range(3):
+            sched.submit(p[i], 4)
+        done = sched.drain()
+        st = sched.stats
+        assert st["finished"] == st["admitted"] == 3
+        assert st["committed_tokens"] == sum(
+            len(fr.tokens) - 1 for fr in done.values())
+        assert 0 < st["occupancy"] <= 1
+        assert st["width_policy"] == "max-width"
