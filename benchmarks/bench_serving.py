@@ -28,10 +28,23 @@ continuous wins exactly by backfilling the arrival gaps and the ragged
 tail.  Absolute numbers are CPU-relative (DESIGN.md §9) — the *structure*
 (steps saved, occupancy) is what transfers.
 
+``--faults`` additionally runs the resilience scenarios (DESIGN.md §12)
+through the fault-injection harness (repro/serve/faults.py) and records a
+``faults`` section: an arrival flood against the slo-degrade policy
+(degraded-mode tokens/s, width-downshift counts, SLO-hold rate, floor
+violations), NaN-logits and cache-corruption quarantine (co-resident
+streams must be bitwise equal to a no-fault run), and a stall driving the
+latency-EWMA trigger.  Every scenario runs under a drain watchdog and a
+set of hard checks — a hang, a crossed min_width floor, a perturbed
+co-resident, or a broken lockstep-oracle replay fails the bench (and the
+CI leg that runs it).
+
 Writes BENCH_serving.json at the repo root.  CI runs ``--smoke`` then
-``--check`` and uploads the JSON, extending the serving perf trajectory.
+``--check`` and uploads the JSON, extending the serving perf trajectory;
+a second CI leg runs ``--faults --smoke --check``.
 
     PYTHONPATH=src python benchmarks/bench_serving.py [--smoke] [--out PATH]
+    PYTHONPATH=src python benchmarks/bench_serving.py --faults [--smoke]
     PYTHONPATH=src python benchmarks/bench_serving.py --check PATH
 """
 
@@ -42,8 +55,11 @@ import json
 import sys
 import time
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 MODES = ("lockstep", "continuous", "continuous_rr")
+FAULT_SCENARIOS = ("flood", "nan_slot", "cache_corruption", "stall")
+# per-token service budget (scheduler steps) the flood scenario must hold
+SLO_STEPS_PER_TOKEN = 1.5
 
 
 # ---------------------------------------------------------------------------
@@ -89,6 +105,29 @@ def check_schema(doc: dict) -> list:
             need(entry, "starvation", dict, f"$.modes.{mode}")
     need(doc, "speedup_continuous_vs_lockstep", (int, float), "$")
     need(doc, "steps_saved_vs_lockstep", int, "$")
+    # faults: always present; null when the run skipped --faults
+    if "faults" not in doc:
+        errs.append("$: missing key 'faults' (null when not run)")
+    elif doc["faults"] is not None:
+        fl = doc["faults"]
+        if not isinstance(fl, dict):
+            errs.append(f"$.faults: expected dict, got "
+                        f"{type(fl).__name__}")
+            return errs
+        need(fl, "slo_steps_per_token", (int, float), "$.faults")
+        for scen in FAULT_SCENARIOS:
+            need(fl, scen, dict, "$.faults")
+        fld = fl.get("flood") or {}
+        for k in ("slo_hold_rate", "tokens_per_sec_degraded",
+                  "p95_service_steps_per_token"):
+            need(fld, k, (int, float), "$.faults.flood")
+        for k in ("downshifted_slot_steps", "escalations",
+                  "floor_violations", "oracle_checked"):
+            need(fld, k, int, "$.faults.flood")
+        checks = need(fl, "checks", dict, "$.faults") or {}
+        for name, ok in checks.items():
+            if ok is not True:
+                errs.append(f"$.faults.checks.{name}: failed ({ok!r})")
     return errs
 
 
@@ -201,10 +240,192 @@ def run_continuous(server, reqs, slots: int, width_policy: str) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# fault-injection scenarios (--faults; DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _oracle_ok(server, fr, prompt) -> bool:
+    """Bitwise lockstep-oracle replay of one finished request."""
+    import numpy as np
+
+    sched, pm = fr.oracle_schedule()
+    solo = server.generate(np.asarray(prompt)[None], max_new=len(fr.tokens),
+                           precision_schedule=sched, prefill_precision=pm)
+    return bool(np.array_equal(fr.tokens, solo.tokens[0]))
+
+
+def _service_steps_per_token(fr) -> float:
+    return (fr.finish_step - fr.admit_step) / max(len(fr.tokens), 1)
+
+
+def run_faults(server, policy, smoke: bool) -> dict:
+    """The resilience scenarios.  Every drain runs under a max_steps
+    watchdog (a hung scheduler raises instead of wedging CI), and the
+    returned ``checks`` dict must be all-True — ``main`` asserts it, so a
+    crossed floor, a perturbed co-resident, a missed SLO or a broken
+    oracle fails the bench."""
+    import numpy as np
+
+    from repro.serve.faults import (
+        ArrivalFlood,
+        CacheCorruptionFault,
+        NaNLogitsFault,
+        StallFault,
+    )
+    from repro.serve.scheduler import SLODegradePolicy
+
+    vocab = server.cfg.vocab_size
+    watchdog = 2_000
+    checks = {}
+    out = {"slo_steps_per_token": SLO_STEPS_PER_TOKEN}
+
+    def P(n, seed):
+        return np.random.default_rng(seed).integers(
+            0, vocab, (n,)).astype(np.int32)
+
+    # the faults policy adds a degradation-refusing class (floor 8) on top
+    # of the bench classes; passed per-scheduler, the server is untouched
+    fpolicy = policy.with_class("pinned", 8, min_width=8)
+
+    # -- flood: degrade under queue pressure, hold the SLO, respect floors
+    slots = 4
+    flood_n = 8 if smoke else 16
+    flood_new = 5 if smoke else 8
+    sd = SLODegradePolicy(queue_high=3, hold_steps=2)
+
+    # one single-request flood per arrival, classes alternating, so FIFO
+    # admission puts BOTH width groups in the slots at once — that's what
+    # makes width-rr genuinely rotate (~2 steps/token) in the contrast run
+    # while commit-everyone degradation holds ~1
+    def make_floods():
+        return [ArrivalFlood(at_step=1, n=1, prompt_len=8,
+                             max_new=flood_new,
+                             request_class=("generation" if j % 2 == 0
+                                            else "understanding"),
+                             seed=5 + j)
+                for j in range(flood_n)]
+
+    floods = make_floods()
+    sched = server.continuous(slots=slots, width_policy=sd, policy=fpolicy,
+                              faults=floods)
+    pinned_prompts = [P(8, seed=100 + i) for i in range(2)]
+    pinned = [sched.submit(pinned_prompts[i], 4, request_class="pinned",
+                           seed=i) for i in range(2)]
+    t0 = time.perf_counter()
+    done = sched.drain(max_steps=watchdog)
+    wall = time.perf_counter() - t0
+    deg = sd.degradation
+    flood_pairs = [(rid, fl.prompts[j])
+                   for fl in floods for j, rid in enumerate(fl.rids)]
+    decoded = [fr for fr in done.values() if fr.tokens.size]
+    hold = [fr for fr in decoded
+            if _service_steps_per_token(fr) <= SLO_STEPS_PER_TOKEN]
+    floor_violations = sum(
+        sum(1 for w in done[rid].decode_widths if w < 8) for rid in pinned)
+    # oracle replay: the pinned (non-degraded) requests always, plus a
+    # deterministic sample of the degraded flood (cap the lockstep cost)
+    oracle_pairs = ([(rid, pinned_prompts[i])
+                     for i, rid in enumerate(pinned)]
+                    + flood_pairs[:4 if smoke else 8])
+    oracle_ok = all(_oracle_ok(server, done[rid], pr)
+                    for rid, pr in oracle_pairs)
+    useful = sum(len(fr.tokens) for fr in done.values())
+    out["flood"] = {
+        "requests": len(done),
+        "flood_requests": len(flood_pairs),
+        "escalations": int(deg["escalations"]),
+        "max_shift_seen": int(deg["max_shift_seen"]),
+        "degraded_steps": int(deg["degraded_steps"]),
+        "downshifted_slot_steps": int(deg["downshifted_slot_steps"]),
+        "width_steps": {str(k): v
+                        for k, v in sched.stats["width_steps"].items()},
+        "tokens_per_sec_degraded": useful / max(wall, 1e-9),
+        "slo_hold_rate": len(hold) / max(len(decoded), 1),
+        "p95_service_steps_per_token": _pctl(
+            [_service_steps_per_token(fr) for fr in decoded], 95),
+        "floor_violations": int(floor_violations),
+        "oracle_checked": len(oracle_pairs),
+        "statuses": {s: sum(fr.status == s for fr in done.values())
+                     for s in {fr.status for fr in done.values()}},
+    }
+    checks["flood_escalated"] = deg["escalations"] >= 1
+    checks["flood_downshifted"] = deg["downshifted_slot_steps"] > 0
+    checks["flood_slo_hold"] = out["flood"]["slo_hold_rate"] >= 0.9
+    checks["floors_respected"] = floor_violations == 0
+    checks["oracle_bitwise"] = oracle_ok
+
+    # contrast: the same flood under plain width-rr (fidelity, no
+    # degradation) — shows the SLO hold is the policy's doing
+    rr = server.continuous(slots=slots, width_policy="width-rr",
+                           policy=fpolicy, faults=make_floods())
+    for i in range(2):
+        rr.submit(pinned_prompts[i], 4, request_class="pinned", seed=i)
+    rr_done = rr.drain(max_steps=watchdog)
+    rr_decoded = [fr for fr in rr_done.values() if fr.tokens.size]
+    out["flood"]["slo_hold_rate_width_rr"] = (
+        sum(_service_steps_per_token(fr) <= SLO_STEPS_PER_TOKEN
+            for fr in rr_decoded) / max(len(rr_decoded), 1))
+
+    # -- nan_slot / cache_corruption: quarantine containment, bitwise
+    upolicy = policy.with_default(6)
+    base_prompts = [P(12, seed=10 + i) for i in range(3)]
+
+    def run_trio(faults):
+        s = server.continuous(slots=3, policy=upolicy, faults=faults)
+        rids = [s.submit(base_prompts[i], 8, seed=i) for i in range(3)]
+        d = s.drain(max_steps=watchdog)
+        return s, [d[r] for r in rids]
+
+    _, base = run_trio([])
+    for scen, fault, victim_slot in (
+            ("nan_slot", NaNLogitsFault(slot=1, step=2), 1),
+            ("cache_corruption", CacheCorruptionFault(slot=2, step=3), 2)):
+        s, frs = run_trio([fault])
+        victim = frs[victim_slot]
+        survivors_equal = all(
+            np.array_equal(frs[i].tokens, base[i].tokens)
+            for i in range(3) if i != victim_slot)
+        prefix_equal = np.array_equal(
+            victim.tokens, base[victim_slot].tokens[:len(victim.tokens)])
+        out[scen] = {
+            "fired": len(fault.fired),
+            "victim_status": victim.status,
+            "victim_tokens": int(len(victim.tokens)),
+            "co_resident_bitwise_equal": bool(survivors_equal),
+            "victim_prefix_equal": bool(prefix_equal),
+            "poisoned": int(s.stats["poisoned"]),
+            "leaked_slots": int(s.active),
+        }
+        checks[f"{scen}_quarantined"] = (victim.status == "poisoned"
+                                         and s.stats["poisoned"] == 1)
+        checks[f"{scen}_contained"] = survivors_equal and prefix_equal
+        checks[f"{scen}_no_leak"] = s.active == 0
+
+    # -- stall: the latency-EWMA trigger (queue depth can't exercise it)
+    stall_policy = SLODegradePolicy(slo_step_seconds=0.05,
+                                    queue_high=10_000, hold_steps=3)
+    stall = StallFault([1, 2], 0.4)
+    s = server.continuous(slots=2, width_policy=stall_policy,
+                          faults=[stall])
+    rids = [s.submit(P(10, seed=50 + i), 6, seed=i) for i in range(2)]
+    d = s.drain(max_steps=watchdog)
+    out["stall"] = {
+        "fired": len(stall.fired),
+        "escalations": int(stall_policy.degradation["escalations"]),
+        "all_ok": all(d[r].status == "ok" for r in rids),
+    }
+    checks["stall_escalated"] = out["stall"]["escalations"] >= 1
+    checks["stall_finished_ok"] = out["stall"]["all_ok"]
+
+    checks["no_hangs"] = True  # every drain above returned under watchdog
+    out["checks"] = checks
+    return out
+
+
+# ---------------------------------------------------------------------------
 # measurement
 # ---------------------------------------------------------------------------
 
-def run(smoke: bool = False) -> dict:
+def run(smoke: bool = False, faults: bool = False) -> dict:
     import jax
 
     from repro import api
@@ -287,6 +508,7 @@ def run(smoke: bool = False) -> dict:
             / max(modes["lockstep"]["tokens_per_sec"], 1e-9)),
         "steps_saved_vs_lockstep": (modes["lockstep"]["total_steps"]
                                     - modes["continuous"]["total_steps"]),
+        "faults": run_faults(server, policy, smoke) if faults else None,
     }
     return doc
 
@@ -295,6 +517,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny run (CI leg): few requests, short decodes")
+    ap.add_argument("--faults", action="store_true",
+                    help="also run the fault-injection scenarios and "
+                    "record the 'faults' section (hard-fails on a hang, "
+                    "crossed floor, or broken bitwise oracle)")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--check", default=None, metavar="PATH",
                     help="validate an existing JSON against the schema "
@@ -313,7 +539,7 @@ def main():
               f"{doc['speedup_continuous_vs_lockstep']:.2f}x)")
         return
 
-    doc = run(smoke=args.smoke)
+    doc = run(smoke=args.smoke, faults=args.faults)
     errs = check_schema(doc)
     assert not errs, errs
     with open(args.out, "w") as f:
@@ -331,6 +557,25 @@ def main():
     print(f"  continuous vs lockstep: "
           f"{doc['speedup_continuous_vs_lockstep']:.2f}x tokens/s, "
           f"{doc['steps_saved_vs_lockstep']} decode steps saved")
+    fl = doc.get("faults")
+    if fl:
+        f = fl["flood"]
+        print(f"  faults/flood: SLO-hold {f['slo_hold_rate']:.2f} "
+              f"(width-rr {f['slo_hold_rate_width_rr']:.2f}), "
+              f"{f['escalations']} escalations, "
+              f"{f['downshifted_slot_steps']} downshifted slot-steps, "
+              f"{f['tokens_per_sec_degraded']:.1f} tok/s degraded, "
+              f"{f['floor_violations']} floor violations")
+        for scen in ("nan_slot", "cache_corruption"):
+            s = fl[scen]
+            print(f"  faults/{scen}: victim {s['victim_status']}, "
+                  f"co-resident bitwise equal: "
+                  f"{s['co_resident_bitwise_equal']}")
+        print(f"  faults/stall: {fl['stall']['escalations']} escalations "
+              f"from latency EWMA")
+        bad = [k for k, v in fl["checks"].items() if v is not True]
+        print(f"  faults/checks: "
+              f"{'ALL PASS' if not bad else 'FAILED: ' + ', '.join(bad)}")
 
 
 if __name__ == "__main__":

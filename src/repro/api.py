@@ -35,19 +35,32 @@ from repro.core.otaro import OTAROConfig  # noqa: F401
 from repro.models.config import ModelConfig  # noqa: F401
 from repro.models.model_zoo import init_params, make_loss_fn  # noqa: F401
 from repro.policy import PrecisionPolicy  # noqa: F401
+from repro.serve import errors as serve_errors  # noqa: F401
+from repro.serve import faults as serve_faults  # noqa: F401
 from repro.serve.engine import GenerationResult, SwitchableServer  # noqa: F401
+from repro.serve.errors import (  # noqa: F401
+    DeadlineExceeded,
+    QueueFull,
+    ServeError,
+    SlotPoisoned,
+    UnknownRequestClass,
+)
 from repro.serve.scheduler import (  # noqa: F401
     WIDTH_POLICIES,
+    Admission,
     ContinuousScheduler,
+    SLODegradePolicy,
 )
 from repro.serve.slots import FinishedRequest, Request  # noqa: F401
 
 __all__ = [
-    "Artifact", "ContinuousScheduler", "FinetuneResult", "FinishedRequest",
-    "GenerationResult", "ModelConfig", "OTAROConfig", "PrecisionPolicy",
-    "Request", "SwitchableServer", "WIDTH_POLICIES", "export_artifact",
-    "finetune", "init_params", "load_artifact", "make_loss_fn",
-    "make_packed_serve_step", "otaro_config", "packed_param_shapes",
+    "Admission", "Artifact", "ContinuousScheduler", "DeadlineExceeded",
+    "FinetuneResult", "FinishedRequest", "GenerationResult", "ModelConfig",
+    "OTAROConfig", "PrecisionPolicy", "QueueFull", "Request",
+    "SLODegradePolicy", "ServeError", "SlotPoisoned", "SwitchableServer",
+    "UnknownRequestClass", "WIDTH_POLICIES", "export_artifact", "finetune",
+    "init_params", "load_artifact", "make_loss_fn", "make_packed_serve_step",
+    "otaro_config", "packed_param_shapes", "serve_errors", "serve_faults",
 ]
 
 

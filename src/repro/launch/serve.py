@@ -23,7 +23,8 @@ scheduler (precision-aware scheduling over per-request classes).
 JSONL request lines (one object per request):
 
     {"prompt_len": 24, "max_new": 12, "class": "understanding",
-     "arrival": 3, "temperature": 0.0, "top_k": 0, "seed": 1}
+     "arrival": 3, "temperature": 0.0, "top_k": 0, "seed": 1,
+     "deadline": 40, "min_width": 4}
 
 ``prompt`` may be an explicit token-id list instead of ``prompt_len``
 (synthetic tokens are derived from ``seed`` otherwise); ``arrival`` is the
@@ -31,6 +32,15 @@ scheduler step clock tick at which the request becomes visible; ``class``
 may be a registered class name or a bare int width (auto-registered as a
 fixed-width class).  Requests are admitted into free slots as they arrive
 and leave on EOS/max_new — no lockstep barrier.
+
+Resilience knobs (DESIGN.md §12) apply in replay mode:
+``--width-policy slo-degrade`` downshifts widths under pressure (tune with
+``--slo-step-ms``), ``--max-queue`` bounds the queue (overflowing arrivals
+are *rejected*, reported in the summary), ``--queue-ttl`` evicts stale
+queued requests, and per-request ``deadline``/``min_width`` JSONL fields
+set step budgets and degradation floors (``--floors
+"generation=8"`` sets class-level floors).  Each replayed request prints
+its terminal status (ok / evicted / deadline / poisoned).
 """
 
 from __future__ import annotations
@@ -68,6 +78,10 @@ def _load_requests(path: str, vocab_size: int):
                 "top_k": int(d.get("top_k", 0)),
                 "seed": int(d.get("seed", 0)),
                 "eos_id": d.get("eos_id"),
+                "deadline": (int(d["deadline"])
+                             if d.get("deadline") is not None else None),
+                "min_width": (int(d["min_width"])
+                              if d.get("min_width") is not None else None),
             })
     if not reqs:
         raise ValueError(f"{path}: no requests")
@@ -91,15 +105,24 @@ def _replay(server, args, policy):
                 policy = policy.with_class(name, c)
             r["request_class"] = name
     server.set_policy(policy)
+    width_policy = args.width_policy
+    if width_policy == "slo-degrade" and args.slo_step_ms is not None:
+        from repro.serve.scheduler import SLODegradePolicy
+        width_policy = SLODegradePolicy(
+            slo_step_seconds=args.slo_step_ms / 1e3)
     sched = server.continuous(slots=args.slots,
-                              width_policy=args.width_policy,
-                              eos_id=args.eos_id)
+                              width_policy=width_policy,
+                              eos_id=args.eos_id,
+                              max_queue=args.max_queue,
+                              queue_ttl=args.queue_ttl)
     t0 = time.perf_counter()
     done = sched.replay([{"prompt": r["prompt"], "max_new": r["max_new"],
                           "request_class": r["request_class"],
                           "temperature": r["temperature"],
                           "top_k": r["top_k"], "seed": r["seed"],
-                          "eos_id": r["eos_id"], "arrival": r["arrival"]}
+                          "eos_id": r["eos_id"], "arrival": r["arrival"],
+                          "deadline": r["deadline"],
+                          "min_width": r["min_width"]}
                          for r in reqs])
     wall = time.perf_counter() - t0
     stats = sched.stats
@@ -111,12 +134,24 @@ def _replay(server, args, policy):
     print(f"width steps: {stats['width_steps']}  "
           f"starvation: {stats['starvation']}  "
           f"policy: {stats['width_policy']}")
+    if (stats["rejected"] or stats["evicted"] or stats["deadline_missed"]
+            or stats["poisoned"]):
+        print(f"resilience: rejected={stats['rejected']} "
+              f"evicted={stats['evicted']} "
+              f"deadline_missed={stats['deadline_missed']} "
+              f"poisoned={stats['poisoned']}")
+    deg = stats["degradation"]
+    if deg.get("escalations"):
+        print(f"degradation: escalations={deg['escalations']} "
+              f"degraded_steps={deg['degraded_steps']} "
+              f"downshifted_slot_steps={deg['downshifted_slot_steps']} "
+              f"final_shift={deg['shift']}")
     for rid in sorted(done):
         fr = done[rid]
         widths = dict.fromkeys(fr.decode_widths)
         print(f"  req{rid} class={fr.request_class or '-'} "
               f"submit@{fr.submit_step} admit@{fr.admit_step} "
-              f"finish@{fr.finish_step} {fr.finish_reason} "
+              f"finish@{fr.finish_step} {fr.status}/{fr.finish_reason} "
               f"tokens={len(fr.tokens)} prefill=E5M{fr.prefill_precision} "
               f"widths={list(widths)}")
 
@@ -153,11 +188,25 @@ def main():
     ap.add_argument("--slots", type=int, default=8,
                     help="continuous batch slots (replay mode)")
     ap.add_argument("--width-policy", default="max-width",
-                    choices=("max-width", "width-rr"),
-                    help="per-step weight-width selection policy")
+                    choices=("max-width", "width-rr", "slo-degrade"),
+                    help="per-step weight-width selection policy "
+                    "(slo-degrade downshifts widths under overload)")
     ap.add_argument("--classes", default=None,
                     help="register request classes, e.g. "
                     "'generation=8,understanding=4' (name=width)")
+    ap.add_argument("--floors", default=None,
+                    help="per-class degradation floors, e.g. "
+                    "'generation=8' — slo-degrade never serves the class "
+                    "below its floor")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the request queue (overflowing replay "
+                    "arrivals are rejected with backpressure)")
+    ap.add_argument("--queue-ttl", type=int, default=None,
+                    help="evict requests queued longer than this many "
+                    "scheduler steps")
+    ap.add_argument("--slo-step-ms", type=float, default=None,
+                    help="step-latency SLO budget for slo-degrade's EWMA "
+                    "trigger (milliseconds)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="default EOS token id for replayed requests")
     ap.add_argument("--max-len", type=int, default=None,
@@ -216,6 +265,13 @@ def main():
                 ap.error(f"--classes: expected 'name=width' segments, got "
                          f"{part!r}")
             policy = policy.with_class(name.strip(), int(w))
+    if args.floors:
+        for part in args.floors.split(","):
+            name, sep, w = part.partition("=")
+            if not sep or not name.strip() or not w.strip().isdigit():
+                ap.error(f"--floors: expected 'name=width' segments, got "
+                         f"{part!r}")
+            policy = policy.with_floor(name.strip(), int(w))
 
     max_len = args.max_len or (args.prompt_len + args.new_tokens + 1)
     server = artifact.server(policy, max_len=max_len)

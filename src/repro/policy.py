@@ -93,6 +93,13 @@ class PrecisionPolicy:
                 fixed training width when ``mode == "fixed"``).
     ``plan``    optional default mid-stream plan used instead of ``default``.
     ``classes`` request-class name -> plan (per-request-class serving).
+    ``floors``  request-class name -> minimum serving width: the class's
+                degradation floor.  Overload policies (the scheduler's
+                slo-degrade, DESIGN.md §12) may serve a request *below* its
+                wanted width to hold latency SLOs — but never below its
+                class floor, so a class can refuse degradation outright
+                (floor == its wanted width).  Classes without a floor
+                degrade freely down to the policy's lowest width.
     """
 
     widths: Tuple[int, ...] = MANTISSA_WIDTHS
@@ -100,6 +107,7 @@ class PrecisionPolicy:
     default: int = MANTISSA_WIDTHS[0]
     plan: Optional[Plan] = None
     classes: Mapping[str, Plan] = dataclasses.field(default_factory=dict)
+    floors: Mapping[str, int] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         widths = tuple(_check_width(m, "policy width") for m in self.widths)
@@ -118,6 +126,13 @@ class PrecisionPolicy:
         norm = {str(k): _norm_plan(v, f"class {k!r}")
                 for k, v in dict(self.classes).items()}
         object.__setattr__(self, "classes", norm)
+        fl = {str(k): _check_width(v, f"floor for class {k!r}")
+              for k, v in dict(self.floors).items()}
+        for k in fl:
+            if k not in norm:
+                raise ValueError(f"floor names unknown class {k!r}; "
+                                 f"defined classes: {sorted(norm)}")
+        object.__setattr__(self, "floors", fl)
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -144,11 +159,25 @@ class PrecisionPolicy:
         """Set the default mid-stream plan, e.g. ``[(8, 8), (4, None)]``."""
         return dataclasses.replace(self, plan=_norm_plan(spec, "plan"))
 
-    def with_class(self, name: str, spec: PlanSpec) -> "PrecisionPolicy":
-        """Map a request class to a width or a mid-stream plan."""
+    def with_class(self, name: str, spec: PlanSpec,
+                   min_width: Optional[int] = None) -> "PrecisionPolicy":
+        """Map a request class to a width or a mid-stream plan.
+        ``min_width`` sets the class's degradation floor (see ``floors``):
+        overload policies never serve the class below it."""
         classes = dict(self.classes)
         classes[str(name)] = _norm_plan(spec, f"class {name!r}")
-        return dataclasses.replace(self, classes=classes)
+        floors = dict(self.floors)
+        if min_width is not None:
+            floors[str(name)] = _check_width(min_width,
+                                             f"floor for class {name!r}")
+        return dataclasses.replace(self, classes=classes, floors=floors)
+
+    def with_floor(self, name: str, min_width: int) -> "PrecisionPolicy":
+        """Set the degradation floor of an already-defined class."""
+        floors = dict(self.floors)
+        floors[str(name)] = _check_width(min_width,
+                                         f"floor for class {name!r}")
+        return dataclasses.replace(self, floors=floors)
 
     # -- serve-side lowering ------------------------------------------------
     def plan_for(self, request_class: Optional[str] = None) -> Plan:
@@ -160,6 +189,15 @@ class PrecisionPolicy:
             return self.classes[request_class]
         return self.plan if self.plan is not None else (
             (self.default, None),)
+
+    def min_width_for(self, request_class: Optional[str] = None) -> int:
+        """The degradation floor an overload policy must respect for this
+        class: the class's declared floor, else the policy's lowest tuned
+        width (no width outside ``widths`` is ever servable — the model
+        was not tuned for it)."""
+        if request_class is not None and request_class in self.floors:
+            return self.floors[request_class]
+        return min(self.widths)
 
     def request_schedule(self, max_new: int,
                          request_class: Optional[str] = None) -> list:
@@ -206,7 +244,8 @@ class PrecisionPolicy:
                 "default": self.default,
                 "plan": [list(s) for s in self.plan] if self.plan else None,
                 "classes": {k: [list(s) for s in v]
-                            for k, v in self.classes.items()}}
+                            for k, v in self.classes.items()},
+                "floors": dict(self.floors)}
 
     @classmethod
     def from_meta(cls, d: dict) -> "PrecisionPolicy":
@@ -215,4 +254,6 @@ class PrecisionPolicy:
                    plan=(tuple((m, n) for m, n in d["plan"])
                          if d.get("plan") else None),
                    classes={k: tuple((m, n) for m, n in v)
-                            for k, v in d.get("classes", {}).items()})
+                            for k, v in d.get("classes", {}).items()},
+                   floors={k: int(v)
+                           for k, v in d.get("floors", {}).items()})

@@ -1,9 +1,26 @@
 from repro.serve.engine import GenerationResult, SwitchableServer  # noqa: F401
+from repro.serve.errors import (  # noqa: F401
+    BadDeadline,
+    DeadlineExceeded,
+    QueueFull,
+    ServeError,
+    SlotPoisoned,
+    UnknownRequestClass,
+)
+from repro.serve.faults import (  # noqa: F401
+    ArrivalFlood,
+    CacheCorruptionFault,
+    FaultInjector,
+    NaNLogitsFault,
+    StallFault,
+)
 from repro.serve.sampler import sample_token, sample_token_vec  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     WIDTH_POLICIES,
+    Admission,
     ContinuousScheduler,
     MaxWidthPolicy,
+    SLODegradePolicy,
     WidthPolicy,
     WidthRoundRobinPolicy,
 )

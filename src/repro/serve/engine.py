@@ -306,9 +306,14 @@ class SwitchableServer:
         one jitted step with per-slot positions/sampling, and leave on EOS
         or max_new so their slot is immediately re-admitted
         (repro/serve/scheduler.py).  ``width_policy`` selects the per-step
-        weight width from the active slots' precision classes; ``policy``
-        defaults to the installed PrecisionPolicy.  Shares this server's
-        compiled prefill/decode executables and packed master."""
+        weight width from the active slots' precision classes ("max-width",
+        "width-rr", "slo-degrade", or a WidthPolicy instance); ``policy``
+        defaults to the installed PrecisionPolicy.  Resilience knobs
+        (DESIGN.md §12) pass through as keywords: ``max_queue`` (bounded
+        queue + QueueFull backpressure), ``queue_ttl``, per-request
+        deadlines via ``submit``, ``repetition_limit``, and ``faults``
+        (repro/serve/faults.py injectors).  Shares this server's compiled
+        prefill/decode executables and packed master."""
         from repro.serve.scheduler import ContinuousScheduler
         return ContinuousScheduler(self, slots=slots,
                                    width_policy=width_policy,

@@ -1,0 +1,98 @@
+"""Structured error taxonomy for the serve subsystem (DESIGN.md §12).
+
+Every failure the serving stack can signal to a caller is a named exception
+below, replacing the bare ``ValueError``/``KeyError`` leaks of the early
+scheduler.  The split that matters operationally:
+
+  * **admission-time errors** are raised from ``submit``/``try_submit`` —
+    the request never entered the system (``QueueFull``, ``BadDeadline``,
+    ``UnknownRequestClass``);
+  * **in-flight failures** are *terminal statuses* on ``FinishedRequest``
+    (``evicted`` / ``deadline`` / ``poisoned``), never exceptions: a
+    continuous batch must keep stepping for its healthy co-residents, so a
+    mid-stream failure retires one slot and surfaces through the normal
+    drain path.  The exception classes ``DeadlineExceeded``/``SlotPoisoned``
+    exist for callers that *choose* to re-raise a failed result
+    (``FinishedRequest.raise_for_status()``).
+
+``QueueFull`` carries ``retry_after_steps`` — the scheduler's estimate (in
+decode steps, its native clock) of when a slot or queue seat frees — so a
+client can implement honest backoff instead of hammering ``submit``.
+
+``UnknownRequestClass`` subclasses ``KeyError`` (the pre-taxonomy leak) so
+existing ``except KeyError`` call sites keep working; its message names the
+registered classes, turning a routing typo into a one-glance fix.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+
+class ServeError(Exception):
+    """Base of every serve-layer error (catch-all for callers that only
+    care that the serving stack, not their own code, failed)."""
+
+
+class QueueFull(ServeError):
+    """Admission rejected: the bounded request queue is at capacity.
+
+    ``retry_after_steps`` is the scheduler's backoff hint in decode steps
+    (>= 1); convert with your observed step latency for a wall-clock
+    retry-after."""
+
+    def __init__(self, depth: int, max_queue: int, retry_after_steps: int):
+        self.depth = int(depth)
+        self.max_queue = int(max_queue)
+        self.retry_after_steps = max(1, int(retry_after_steps))
+        super().__init__(
+            f"request queue is full ({depth}/{max_queue} pending); "
+            f"retry in ~{self.retry_after_steps} decode steps")
+
+
+class BadDeadline(ServeError):
+    """Admission rejected: the request's deadline can never be met (already
+    expired, or shorter than the work it asks for)."""
+
+
+class DeadlineExceeded(ServeError):
+    """A request missed its deadline in flight.  Surfaced as terminal
+    status ``deadline`` (partial tokens kept) or ``evicted`` (never
+    admitted); raised only by ``FinishedRequest.raise_for_status()``."""
+
+
+class SlotPoisoned(ServeError):
+    """A slot's decode step produced non-finite logits (or tripped the
+    repetition guard) and was quarantined.  Surfaced as terminal status
+    ``poisoned``; co-resident slots are unaffected by construction
+    (DESIGN.md §12).  Raised only by ``raise_for_status()``."""
+
+
+class UnknownRequestClass(ServeError, KeyError):
+    """Request-class routing failed: the PrecisionPolicy defines no plan
+    for this class.  Names the registered classes so the fix is evident.
+
+    Also a ``KeyError`` for backward compatibility with pre-taxonomy
+    callers (the class lookup used to leak the policy's bare KeyError)."""
+
+    def __init__(self, request_class: str,
+                 registered: Optional[Sequence[str]] = None):
+        self.request_class = request_class
+        self.registered = sorted(registered or [])
+        msg = (f"unknown request class {request_class!r}; policy defines "
+               f"{self.registered if self.registered else 'no classes'}")
+        # KeyError renders args[0] with repr(); keep the readable message.
+        ServeError.__init__(self, msg)
+
+    def __str__(self) -> str:  # undo KeyError's repr-quoting
+        return self.args[0]
+
+
+# terminal statuses a FinishedRequest can carry, and the exception each one
+# maps to under raise_for_status() (None = success, nothing to raise)
+TERMINAL_STATUSES = {
+    "ok": None,
+    "evicted": DeadlineExceeded,
+    "deadline": DeadlineExceeded,
+    "poisoned": SlotPoisoned,
+}

@@ -1,0 +1,222 @@
+"""Deterministic fault injectors for the continuous scheduler (DESIGN.md
+§12).
+
+Robustness claims are only as good as the faults they were tested against,
+so the resilience layer ships its own harness: small, seedable injector
+objects that plug into a ``ContinuousScheduler`` (``faults=[...]`` at
+construction or ``sched.inject(fault)``) and fire at exact step-clock
+ticks.  Everything is deterministic — the same workload with the same
+injectors produces the same token streams, retirements and width traces,
+which is what lets tests pin down the recovery behaviour *bitwise* (a
+faulted run's surviving slots must equal the no-fault run exactly) and
+lets CI replay the whole scenario as a pass/fail check
+(``benchmarks/bench_serving.py --faults --smoke --check``).
+
+Two hook points, both called once per ``step()``:
+
+  * ``before_step(sched)`` — runs first, with full scheduler access:
+    mutate device state (cache corruption), sleep (stalls), submit load
+    (floods).
+  * ``poison_slots(sched, poison)`` — fill the boolean poison mask the
+    jitted step consumes; flagged rows get their logits overwritten with
+    NaN in-graph *before* the health check, exercising the quarantine
+    path exactly as a real numerical blow-up would (and costing nothing
+    when the mask is all-False — the select is a bitwise identity).
+
+The four injectors cover the failure modes the acceptance tests demand:
+
+  ``NaNLogitsFault``        non-finite logits on slot k at step t
+  ``CacheCorruptionFault``  NaN bit-pattern OR'd into slot k's cache row
+  ``StallFault``            artificial wall-clock step stalls (drives the
+                            slo-degrade latency-EWMA trigger)
+  ``ArrivalFlood``          a burst of synthetic arrivals at one tick
+                            (drives backpressure + queue-depth triggers)
+
+Every injector records what it actually did in ``fired`` (a list of event
+dicts with the step clock), so tests and the bench can assert a fault
+*happened* rather than silently missing its window.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.serve.slots import _is_pos
+
+
+class FaultInjector:
+    """Base injector: override one (or both) hooks.  ``fired`` records the
+    events the injector actually performed."""
+
+    def __init__(self):
+        self.fired: List[dict] = []
+
+    def before_step(self, sched) -> None:
+        """Called at the top of every ``step()``, before eviction and
+        admission; may mutate the scheduler (device state, queue, clock
+        side effects like sleeping)."""
+
+    def poison_slots(self, sched, poison: np.ndarray) -> None:
+        """Called after width selection with the step's poison mask
+        (bool[n_slots], host side); set entries True to NaN that row's
+        logits in-graph this step."""
+
+    def describe(self) -> dict:
+        return {"kind": type(self).__name__, "fired": len(self.fired)}
+
+
+class NaNLogitsFault(FaultInjector):
+    """Overwrite slot ``slot``'s logits with NaN at step-clock ``step``
+    (via the traced poison mask — the forward pass itself is untouched,
+    so co-resident rows are bitwise unaffected by construction)."""
+
+    def __init__(self, slot: int, step: int):
+        super().__init__()
+        self.slot = int(slot)
+        self.step = int(step)
+
+    def poison_slots(self, sched, poison: np.ndarray) -> None:
+        if sched.clock == self.step:
+            poison[self.slot] = True
+            self.fired.append({"clock": sched.clock, "slot": self.slot,
+                               "kind": "nan-logits"})
+
+
+def _corrupt_row(cache, idx: int) -> tuple:
+    """OR a quiet-NaN bit pattern into row ``idx`` of every floating cache
+    leaf, at sequence position 0 (always written by prefill, so the NaN
+    sits where attention *will* read it — corrupting unwritten tail
+    positions would be masked out and never detected).  Returns
+    (new_cache, n_leaves_corrupted).  Bit-level corruption (not value
+    assignment) is the point: this models a radiation/DRAM-style flip that
+    lands in cache bytes, and the quiet-NaN pattern guarantees the
+    corruption *propagates* to the logits instead of denormalizing away.
+    Non-float leaves (int8 KV) are left alone — their corruption stays
+    finite and is a silent-accuracy fault outside the quarantine's
+    detection model."""
+    nan_bits = {"bfloat16": (jnp.uint16, 0x7FC0),
+                "float32": (jnp.uint32, 0x7FC00000),
+                "float16": (jnp.uint16, 0x7E00)}
+
+    n_hit = 0
+
+    def cor(path, leaf):
+        nonlocal n_hit
+        if _is_pos(path) or leaf.dtype.name not in nan_bits:
+            return leaf
+        utype, pattern = nan_bits[leaf.dtype.name]
+        u = lax.bitcast_convert_type(leaf, utype)
+        ix = ((slice(None), idx, 0) if leaf.ndim >= 3
+              else (slice(None), idx))
+        u = u.at[ix].set(u[ix] | jnp.asarray(pattern, utype))
+        n_hit += 1
+        return lax.bitcast_convert_type(u, leaf.dtype)
+
+    new = jax.tree_util.tree_map_with_path(cor, cache)
+    return new, n_hit
+
+
+class CacheCorruptionFault(FaultInjector):
+    """Flip NaN bits into slot ``slot``'s cache row at step-clock ``step``
+    — unlike ``NaNLogitsFault`` this corrupts *state*, so detection relies
+    on the corruption actually propagating through the next decode step's
+    attention reads into the logits health check."""
+
+    def __init__(self, slot: int, step: int):
+        super().__init__()
+        self.slot = int(slot)
+        self.step = int(step)
+
+    def before_step(self, sched) -> None:
+        if sched.clock == self.step:
+            sched._cache, n = _corrupt_row(sched._cache, self.slot)
+            self.fired.append({"clock": sched.clock, "slot": self.slot,
+                               "kind": "cache-corruption",
+                               "leaves_corrupted": n})
+
+
+class StallFault(FaultInjector):
+    """Sleep ``seconds`` of wall-clock at each step-clock tick in
+    ``steps`` — the scheduler's step-latency EWMA sees a real latency
+    spike, which is the slo-degrade policy's third trigger (the one queue
+    depth cannot exercise)."""
+
+    def __init__(self, steps, seconds: float):
+        super().__init__()
+        self.steps = {int(s) for s in (
+            steps if hasattr(steps, "__iter__") else [steps])}
+        self.seconds = float(seconds)
+
+    def before_step(self, sched) -> None:
+        if sched.clock in self.steps:
+            time.sleep(self.seconds)
+            self.fired.append({"clock": sched.clock, "kind": "stall",
+                               "seconds": self.seconds})
+
+
+class ArrivalFlood(FaultInjector):
+    """Submit ``n`` synthetic requests in one burst at step-clock
+    ``at_step`` (deterministic prompts from ``seed``), via ``try_submit``
+    so a bounded queue exercises real backpressure — accepted and
+    rejected counts land in ``fired`` and the rids in ``rids`` for
+    post-hoc assertions."""
+
+    def __init__(self, at_step: int, n: int, prompt_len: int = 4,
+                 max_new: int = 8, request_class: Optional[str] = None,
+                 min_width: Optional[int] = None,
+                 deadline: Optional[int] = None,
+                 temperature: float = 0.0, top_k: int = 0,
+                 seed: int = 0):
+        super().__init__()
+        self.at_step = int(at_step)
+        self.n = int(n)
+        self.prompt_len = int(prompt_len)
+        self.max_new = int(max_new)
+        self.request_class = request_class
+        self.min_width = min_width
+        self.deadline = deadline
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.seed = int(seed)
+        self.rids: List[int] = []
+        self.prompts: List[np.ndarray] = []  # rids[i] was sent prompts[i]
+        self.rejected = 0
+
+    def before_step(self, sched) -> None:
+        if sched.clock != self.at_step:
+            return
+        rng = np.random.default_rng(self.seed)
+        vocab = sched.cfg.vocab_size
+        for j in range(self.n):
+            prompt = rng.integers(0, vocab, size=self.prompt_len,
+                                  dtype=np.int64).astype(np.int32)
+            adm = sched.try_submit(
+                prompt=prompt,
+                max_new=self.max_new,
+                request_class=self.request_class,
+                min_width=self.min_width,
+                deadline=self.deadline,
+                temperature=self.temperature, top_k=self.top_k,
+                seed=self.seed + j)
+            if adm.accepted:
+                self.rids.append(adm.rid)
+                self.prompts.append(prompt)
+            else:
+                self.rejected += 1
+        self.fired.append({"clock": sched.clock, "kind": "flood",
+                           "submitted": len(self.rids),
+                           "rejected": self.rejected})
+
+
+FAULT_KINDS: Dict[str, type] = {
+    "nan-logits": NaNLogitsFault,
+    "cache-corruption": CacheCorruptionFault,
+    "stall": StallFault,
+    "flood": ArrivalFlood,
+}

@@ -1,4 +1,5 @@
-"""Continuous-batching scheduler with precision-aware width selection.
+"""Continuous-batching scheduler with precision-aware width selection and
+an overload/failure resilience layer (DESIGN.md §11–§12).
 
 The lockstep engine (repro/serve/engine.py) serves equal-length batches in
 lockstep: one scalar position, no EOS exit, and a new request waits for the
@@ -16,42 +17,80 @@ step, switching moves zero bytes and repacks nothing — the scheduler can
 choose a different weight width EVERY step with no cost.  Width selection
 is therefore pure scheduling policy over the active slots' wanted widths:
 
-  * ``max-width``  — every active slot commits every step; the step runs at
-    the maximum wanted width (nobody is served below their requested
+  * ``max-width``   — every active slot commits every step; the step runs
+    at the maximum wanted width (nobody is served below their requested
     fidelity; low-width requests ride along at higher quality).
-  * ``width-rr``   — round-robin over width GROUPS with aging: each step
+  * ``width-rr``    — round-robin over width GROUPS with aging: each step
     serves exactly the slots whose wanted width is the chosen group's, at
     exactly that width; unserved groups accumulate wait, and the group
     with the largest wait wins next (ties broken by cyclic rotation), so
     no width class can starve.  Max observed waits are reported as the
     ``starvation`` stat.
+  * ``slo-degrade`` — graceful degradation (§12): behaves as width-rr
+    while healthy; under pressure (queue depth, full slots, step-latency
+    EWMA over an SLO budget) it abandons per-class fidelity and steps the
+    WHOLE batch every step at a downshifted width (8→6→4…), upshifting
+    hysteretically when pressure relents.  Per-request ``min_width``
+    floors (resolved through the PrecisionPolicy) are never crossed — a
+    floored request keeps the step width at or above its floor.
+
+Resilience (§12) on top of the width policies:
+
+  * **admission control** — a bounded queue (``max_queue``) with explicit
+    backpressure: ``submit`` raises ``QueueFull`` carrying a retry-after
+    hint, ``try_submit`` returns an ``Admission`` verdict instead of
+    raising; per-request deadlines and a queue TTL evict requests that can
+    no longer be served in time (terminal statuses ``evicted`` /
+    ``deadline``), so an overloaded scheduler sheds load instead of
+    growing an unbounded backlog.
+  * **per-slot quarantine** — the jitted step computes a traced per-slot
+    health mask (``isfinite`` over each row's logits); an unhealthy row is
+    NOT committed (its cache/token/PRNG state stays at the last healthy
+    step, exactly as if the step never ran for it) and the host retires
+    only that slot with status ``poisoned``.  Row independence of the
+    batched step means co-resident slots' streams are bitwise unaffected.
+    A host-side repetition guard (``repetition_limit``) additionally
+    retires slots emitting the same token unboundedly.
+  * **fault injection** — deterministic injectors (repro/serve/faults.py)
+    plug in via ``faults=[...]``/``inject()``: NaN logits on slot k at
+    step t (a traced poison mask, zero-cost when clean), slot-cache bit
+    corruption, artificial step stalls, arrival floods.  Tests and
+    ``benchmarks/bench_serving.py --faults`` drive them.
 
 Commitment discipline: the batched step computes all rows, but only the
-scheduled ("committed") rows take effect — ``select_slots`` keeps stalled
-and free rows' cache/position/PRNG state byte-for-byte, so a request's
-token stream depends only on its own (prompt, seed, realized widths), never
-on its batch neighbours.  That yields the oracle property the tests pin
-down: a finished request replayed on the lockstep engine with its realized
-schedule (``FinishedRequest.oracle_schedule``) reproduces the SAME tokens
-bitwise, at every width.
+scheduled-AND-healthy ("committed") rows take effect — ``select_slots``
+keeps stalled, free and quarantined rows' cache/position/PRNG state
+byte-for-byte, so a request's token stream depends only on its own
+(prompt, seed, realized widths), never on its batch neighbours.  That
+yields the oracle property the tests pin down: a finished request replayed
+on the lockstep engine with its realized schedule
+(``FinishedRequest.oracle_schedule``) reproduces the SAME tokens bitwise,
+at every width — including degraded and partially-poisoned requests.
 
-Host/device split per decode step: one jitted dispatch and ONE host sync
-(the committed tokens) — the continuous analogue of the per-token loop's
-cadence; admission adds one batch-1 prefill per request (retraced per
-distinct prompt length, as with any shape-bucketed server).
+Host/device split per decode step: one jitted dispatch and ONE host
+round-trip (the committed tokens + the per-slot health mask) — the
+continuous analogue of the per-token loop's cadence; admission adds one
+batch-1 prefill per request (retraced per distinct prompt length, as with
+any shape-bucketed server).
 """
 
 from __future__ import annotations
 
 import collections
-from typing import Callable, Dict, Optional
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
+from repro.core.packed import MASTER_M
 from repro.policy import PrecisionPolicy
+from repro.serve import errors as errors_lib
 from repro.serve import slots as slots_lib
+from repro.serve.errors import BadDeadline, QueueFull, UnknownRequestClass
 from repro.serve.sampler import sample_token, sample_token_vec
 from repro.serve.slots import FinishedRequest, Request, SlotState, SlotTable
 
@@ -71,10 +110,22 @@ class WidthPolicy:
         (m, committed_idxs)."""
         raise NotImplementedError
 
+    def observe(self, signals: dict) -> None:
+        """Pressure telemetry, delivered by the scheduler once per step
+        BEFORE ``select``: ``clock``, ``queue_depth``, ``active``,
+        ``slots``, ``step_seconds`` (previous step's wall time, None on
+        the first step), ``floors`` ({slot_idx: min_width}) and ``widths``
+        (the policy ladder).  Stateless policies ignore it."""
+
     @property
     def starvation(self) -> Dict[int, int]:
         """Max steps any width group waited while active (empty for
         policies that never stall a slot)."""
+        return {}
+
+    @property
+    def degradation(self) -> dict:
+        """Degradation accounting (slo-degrade only; empty elsewhere)."""
         return {}
 
 
@@ -137,9 +188,154 @@ class WidthRoundRobinPolicy(WidthPolicy):
         return dict(self._starvation)
 
 
+class SLODegradePolicy(WidthPolicy):
+    """SLO-aware graceful degradation (DESIGN.md §12).
+
+    A small hysteretic state machine over a degradation level ``shift``:
+
+      * ``shift == 0`` (healthy): exact width-rr fidelity — every class is
+        served AT its wanted width, groups rotate with aging.
+      * ``shift == k > 0`` (degraded): per-class fidelity is abandoned;
+        every active slot commits EVERY step at the single width
+        ``max_i max(floor_i, down(wanted_i, k))`` where ``down`` steps k
+        positions lower on the policy's width ladder.  Committing the
+        whole batch removes the width-rr rotation tax (one step per token
+        for everyone) and the downshifted width cuts the bytes a real
+        accelerator streams per step ((m+1.125)/16 of bf16 — DESIGN.md
+        §7); per-request ``min_width`` floors are never crossed, because
+        the step width is the max over the floored effective widths.
+
+    Escalation (one level per observation) triggers on any of: queue depth
+    at/above ``queue_high``; all slots busy with a backlog; step-latency
+    EWMA above ``slo_step_seconds``.  De-escalation is hysteretic: only
+    after ``hold_steps`` consecutive calm observations (queue at/below
+    ``queue_low`` and EWMA back under ``upshift_ratio * slo``), one level
+    at a time — so the policy does not oscillate at the SLO boundary.
+
+    All pressure signals arrive via ``observe``; ``select`` stays a pure
+    function of (wanted, current level), so this remains *scheduling* over
+    the traced SEFP width — no recompile, no repack, per-step switching.
+    """
+
+    name = "slo-degrade"
+
+    def __init__(self, slo_step_seconds: Optional[float] = None,
+                 queue_high: int = 4, queue_low: int = 0,
+                 ewma_alpha: float = 0.25, hold_steps: int = 6,
+                 upshift_ratio: float = 0.7,
+                 max_shift: Optional[int] = None):
+        if queue_low > queue_high:
+            raise ValueError(f"queue_low {queue_low} > queue_high "
+                             f"{queue_high}")
+        self.slo_step_seconds = slo_step_seconds
+        self.queue_high = int(queue_high)
+        self.queue_low = int(queue_low)
+        self.ewma_alpha = float(ewma_alpha)
+        self.hold_steps = int(hold_steps)
+        self.upshift_ratio = float(upshift_ratio)
+        self._max_shift = max_shift
+        self._rr = WidthRoundRobinPolicy()
+        self._ladder: Tuple[int, ...] = ()
+        self._floors: Dict[int, int] = {}
+        self._shift = 0
+        self._relief = 0
+        self._clock = 0
+        self._ewma: Optional[float] = None
+        self._escalations = 0
+        self._downshifted_slot_steps = 0
+        self._degraded_steps = 0
+        self._trace: List[Tuple[int, int]] = []  # (clock, new shift)
+
+    # -- pressure state machine --------------------------------------------
+    def observe(self, signals: dict) -> None:
+        self._clock = int(signals.get("clock", self._clock))
+        self._floors = dict(signals.get("floors") or {})
+        widths = signals.get("widths")
+        if widths:
+            self._ladder = tuple(sorted(widths, reverse=True))
+        dt = signals.get("step_seconds")
+        if dt is not None:
+            self._ewma = (dt if self._ewma is None else
+                          self.ewma_alpha * dt
+                          + (1.0 - self.ewma_alpha) * self._ewma)
+        qd = int(signals.get("queue_depth", 0))
+        full = (signals.get("active", 0) >= signals.get("slots", 1))
+        lat_breach = (self.slo_step_seconds is not None
+                      and self._ewma is not None
+                      and self._ewma > self.slo_step_seconds)
+        breach = (qd >= self.queue_high
+                  or (full and qd > max(self.queue_low, 0))
+                  or lat_breach)
+        if breach:
+            self._relief = 0
+            if self._shift < self._shift_cap():
+                self._shift += 1
+                self._escalations += 1
+                self._trace.append((self._clock, self._shift))
+            return
+        lat_calm = (self.slo_step_seconds is None or self._ewma is None
+                    or self._ewma <= self.upshift_ratio
+                    * self.slo_step_seconds)
+        if qd <= self.queue_low and not full and lat_calm:
+            self._relief += 1
+            if self._relief >= self.hold_steps and self._shift > 0:
+                self._shift -= 1
+                self._relief = 0
+                self._trace.append((self._clock, self._shift))
+        else:
+            self._relief = 0
+
+    def _shift_cap(self) -> int:
+        if self._max_shift is not None:
+            return self._max_shift
+        return max(len(self._ladder) - 1, 1)
+
+    def _down(self, w: int, k: int) -> int:
+        """k positions lower on the ladder, from the first rung <= w."""
+        ladder = self._ladder or (w,)
+        i = next((j for j, r in enumerate(ladder) if r <= w),
+                 len(ladder) - 1)
+        return ladder[min(i + k, len(ladder) - 1)]
+
+    # -- selection ----------------------------------------------------------
+    def select(self, wanted: Dict[int, int]) -> tuple:
+        if self._shift == 0:
+            return self._rr.select(wanted)
+        lowest = self._ladder[-1] if self._ladder else min(wanted.values())
+        m = max(max(self._floors.get(i, lowest),
+                    self._down(w, self._shift))
+                for i, w in wanted.items())
+        self._degraded_steps += 1
+        self._downshifted_slot_steps += sum(
+            1 for w in wanted.values() if m < w)
+        return m, set(wanted)
+
+    # -- reporting ----------------------------------------------------------
+    @property
+    def shift(self) -> int:
+        return self._shift
+
+    @property
+    def starvation(self) -> Dict[int, int]:
+        return self._rr.starvation
+
+    @property
+    def degradation(self) -> dict:
+        return {
+            "shift": self._shift,
+            "max_shift_seen": max((s for _, s in self._trace), default=0),
+            "escalations": self._escalations,
+            "degraded_steps": self._degraded_steps,
+            "downshifted_slot_steps": self._downshifted_slot_steps,
+            "latency_ewma_seconds": self._ewma,
+            "trace": list(self._trace),
+        }
+
+
 WIDTH_POLICIES = {
     MaxWidthPolicy.name: MaxWidthPolicy,
     WidthRoundRobinPolicy.name: WidthRoundRobinPolicy,
+    SLODegradePolicy.name: SLODegradePolicy,
 }
 
 
@@ -159,31 +355,70 @@ def make_width_policy(spec) -> WidthPolicy:
 
 def _make_continuous_step(serve_step):
     """One continuous decode step: batched serve at traced width m, per-slot
-    sampling, masked commit.  Non-committed rows (stalled width groups,
-    free slots) keep token/cache/PRNG state unchanged, so their streams are
-    exactly as if the step never ran for them.
+    sampling, masked commit, traced per-slot health.  Non-committed rows
+    (stalled width groups, free slots, quarantined slots) keep
+    token/cache/PRNG state unchanged, so their streams are exactly as if
+    the step never ran for them.
+
+    Health (§12): ``ok[b] = isfinite(logits[b]).all()`` is computed
+    in-graph — logits never visit the host, so NaN/Inf detection must live
+    inside the step — and gates the commit (``mask & ok``): a poisoned
+    row's device state stays at its last healthy step while the host
+    retires it.  ``poison`` is the fault-injection hook, also traced: rows
+    flagged there get their logits overwritten with NaN *before* the
+    health check, simulating upstream numerical corruption at zero cost
+    when clean (an all-False select is the identity, bitwise).
 
     ``commit_all`` (static, two compiled variants) is the no-stall fast
-    path: when every ACTIVE slot commits — always under max-width, and
-    under width-rr whenever a single width group is active — the cache
-    select is skipped entirely.  Free slots then do take the step's
-    garbage writes, which is safe by the admission contract: ``write_slot``
-    overwrites a row's every leaf (KV, recurrent state, pos) before the
-    slot is used again, and row independence keeps garbage rows from
-    perturbing active ones (token/PRNG state is still mask-gated)."""
+    path: when every ACTIVE slot commits — always under max-width and
+    degraded slo-degrade, and under width-rr whenever a single width group
+    is active — the cache select is skipped via a ``lax.cond`` that only
+    falls back to the masked select when a committed row is unhealthy.
+    Free slots then do take the step's garbage writes, which is safe by
+    the admission contract: ``write_slot`` overwrites a row's every leaf
+    (KV, recurrent state, pos) before the slot is used again — the same
+    contract that makes a quarantined row's NaN-laden cache re-admittable
+    — and row independence keeps garbage rows from perturbing active ones
+    (token/PRNG state is still mask-gated)."""
 
-    def step(master, cache, toks, m, keys, temps, topks, mask, commit_all):
+    def step(master, cache, toks, m, keys, temps, topks, mask, poison,
+             commit_all):
         logits, new_cache = serve_step(master, cache, toks, m)
-        if not commit_all:
-            new_cache = slots_lib.select_slots(mask, new_cache, cache)
+        logits = jnp.where(poison[:, None],
+                           jnp.asarray(jnp.nan, logits.dtype), logits)
+        ok = jnp.all(jnp.isfinite(logits), axis=-1)
+        eff = mask & ok
+        if commit_all:
+            new_cache = lax.cond(
+                jnp.any(mask & ~ok),
+                lambda nc: slots_lib.select_slots(eff, nc, cache),
+                lambda nc: nc, new_cache)
+        else:
+            new_cache = slots_lib.select_slots(eff, new_cache, cache)
         pair = jax.vmap(jax.random.split)(keys)        # [B, 2, 2]
         new_keys, subs = pair[:, 0], pair[:, 1]
-        new_keys = jnp.where(mask[:, None], new_keys, keys)
+        new_keys = jnp.where(eff[:, None], new_keys, keys)
         nxt = sample_token_vec(logits, subs, temps, topks)
-        nxt = jnp.where(mask, nxt, toks)
-        return nxt, new_cache, new_keys
+        nxt = jnp.where(eff, nxt, toks)
+        return nxt, new_cache, new_keys, ok
 
     return jax.jit(step, static_argnames=("commit_all",))
+
+
+# ---------------------------------------------------------------------------
+# admission verdicts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """``try_submit``'s verdict: either the request is queued (``rid``
+    set) or it was rejected with backpressure (``retry_after_steps`` is
+    the backoff hint in decode steps)."""
+    accepted: bool
+    rid: Optional[int]
+    queue_depth: int
+    retry_after_steps: int = 0
+    reason: str = "queued"
 
 
 # ---------------------------------------------------------------------------
@@ -201,12 +436,32 @@ class ContinuousScheduler:
     per-request ``stream(rid, token, done)`` callbacks and/or a
     scheduler-wide ``on_token``.  Time is counted in decode steps
     (``clock``); latency accounting lives on each FinishedRequest.
+
+    Resilience knobs (DESIGN.md §12; all off by default so a plain
+    scheduler behaves exactly as before):
+
+      * ``max_queue`` — bounded queue: ``submit`` past capacity raises
+        ``QueueFull`` (with ``retry_after_steps``); ``try_submit`` returns
+        an ``Admission`` verdict instead of raising.
+      * ``queue_ttl`` — queued requests older than this many steps are
+        evicted (status ``evicted``) instead of waiting forever.
+      * per-request ``deadline`` (submit kwarg) — total step budget from
+        submit to finish; missed in queue → ``evicted``, missed mid-decode
+        → ``deadline`` with partial tokens.
+      * ``repetition_limit`` — quarantine a slot that commits the same
+        non-EOS token this many times in a row (status ``poisoned``).
+      * ``faults`` — fault injectors (repro/serve/faults.py), also
+        addable later via ``inject()``.
     """
 
     def __init__(self, server, slots: int = 8, width_policy="max-width",
                  policy: Optional[PrecisionPolicy] = None,
                  eos_id: Optional[int] = None,
-                 on_token: Optional[Callable[[int, int, bool], None]] = None):
+                 on_token: Optional[Callable[[int, int, bool], None]] = None,
+                 max_queue: Optional[int] = None,
+                 queue_ttl: Optional[int] = None,
+                 repetition_limit: Optional[int] = None,
+                 faults: Optional[list] = None):
         self._srv = server
         self.cfg = server.cfg
         self.n_slots = int(slots)
@@ -218,12 +473,24 @@ class ContinuousScheduler:
         self._width_policy = make_width_policy(width_policy)
         self.default_eos_id = eos_id
         self.on_token = on_token
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if queue_ttl is not None and queue_ttl < 1:
+            raise ValueError(f"queue_ttl must be >= 1, got {queue_ttl}")
+        if repetition_limit is not None and repetition_limit < 2:
+            raise ValueError(f"repetition_limit must be >= 2, got "
+                             f"{repetition_limit}")
+        self.max_queue = max_queue
+        self.queue_ttl = queue_ttl
+        self.repetition_limit = repetition_limit
+        self._faults = list(faults or [])
 
         self._table = SlotTable(self.n_slots)
         self._queue: collections.deque = collections.deque()
         self._finished: Dict[int, FinishedRequest] = {}
         self._next_rid = 0
         self.clock = 0  # decode-step clock
+        self._last_step_seconds: Optional[float] = None
 
         # device-side per-slot state
         self._cache = slots_lib.init_slot_cache(
@@ -232,30 +499,48 @@ class ContinuousScheduler:
         self._keys = jnp.zeros((self.n_slots, 2), jnp.uint32)
         self._temps = np.zeros((self.n_slots,), np.float32)
         self._topks = np.zeros((self.n_slots,), np.int32)
+        self._no_poison = jnp.zeros((self.n_slots,), bool)
         # the jitted step/write executables are cached ON the server, so
         # constructing a fresh scheduler over the same server (new workload,
         # different width policy) reuses the compiled code — scheduler state
         # is host data, the executables are shape-keyed only.
-        if not hasattr(server, "_continuous_step_fn"):
+        if getattr(server, "_continuous_step_slots", None) != self.n_slots \
+                or not hasattr(server, "_continuous_step_fn"):
             server._continuous_step_fn = _make_continuous_step(server._serve)
             server._write_slot_fn = jax.jit(slots_lib.write_slot)
+            server._continuous_step_slots = self.n_slots
         self._step_fn = server._continuous_step_fn
         self._write_slot = server._write_slot_fn
 
         self._counts = {"steps": 0, "committed_tokens": 0,
                         "slot_steps_active": 0, "slot_steps_committed": 0,
-                        "admitted": 0, "finished": 0,
+                        "admitted": 0, "finished": 0, "rejected": 0,
+                        "evicted": 0, "deadline_missed": 0, "poisoned": 0,
                         "width_steps": collections.Counter()}
+
+    # -- fault injection ----------------------------------------------------
+    def inject(self, fault) -> "ContinuousScheduler":
+        """Install a fault injector (repro/serve/faults.py); returns self
+        so injections chain."""
+        self._faults.append(fault)
+        return self
 
     # -- queueing -----------------------------------------------------------
     def submit(self, prompt, max_new: int,
                request_class: Optional[str] = None,
                temperature: float = 0.0, top_k: int = 0,
                eos_id: Optional[int] = None, seed: int = 0,
-               stream: Optional[Callable[[int, int, bool], None]] = None
-               ) -> int:
-        """Enqueue a request; returns its rid.  Validates length and class
-        routing here (fail fast), admission happens inside ``step()``."""
+               stream: Optional[Callable[[int, int, bool], None]] = None,
+               deadline: Optional[int] = None,
+               min_width: Optional[int] = None) -> int:
+        """Enqueue a request; returns its rid.  Validates length, deadline
+        and class routing here (fail fast), admission happens inside
+        ``step()``.  With a bounded queue (``max_queue``) an over-capacity
+        submit raises ``QueueFull`` with a ``retry_after_steps`` hint —
+        use ``try_submit`` for a non-raising verdict.  ``deadline`` is the
+        total step budget from submit to finish; ``min_width`` is the
+        degradation floor (defaults to the request class's policy floor),
+        which the slo-degrade policy never crosses."""
         prompt = np.ascontiguousarray(np.asarray(prompt, np.int32).ravel())
         max_new = int(max_new)
         if max_new < 0:
@@ -266,8 +551,29 @@ class ContinuousScheduler:
             raise ValueError(
                 f"prompt_len {prompt.size} + max_new {max_new} exceeds the "
                 f"server max_len {self.max_len}")
-        # resolves class > plan > default; unknown classes raise KeyError
-        schedule = self._policy.request_schedule(max_new, request_class)
+        if deadline is not None:
+            deadline = int(deadline)
+            if deadline < 1:
+                raise BadDeadline(f"deadline must be >= 1 step, got "
+                                  f"{deadline}")
+        # resolves class > plan > default; unknown classes fail with the
+        # registered set named (errors.py taxonomy, not a bare KeyError)
+        try:
+            schedule = self._policy.request_schedule(max_new, request_class)
+        except KeyError:
+            raise UnknownRequestClass(request_class,
+                                      self._policy.classes) from None
+        if min_width is None:
+            min_width = self._policy.min_width_for(request_class)
+        else:
+            min_width = int(min_width)
+            if not 1 <= min_width <= MASTER_M:
+                raise ValueError(f"min_width must be in 1..{MASTER_M}, "
+                                 f"got {min_width}")
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self._counts["rejected"] += 1
+            raise QueueFull(len(self._queue), self.max_queue,
+                            self._retry_after())
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt, max_new=max_new,
@@ -276,9 +582,35 @@ class ContinuousScheduler:
                       eos_id=(self.default_eos_id if eos_id is None
                               else int(eos_id)),
                       seed=int(seed), stream=stream,
-                      submit_step=self.clock)
+                      submit_step=self.clock, deadline=deadline,
+                      min_width=min_width)
         self._queue.append((req, schedule))
         return rid
+
+    def try_submit(self, prompt, max_new: int, **kw) -> Admission:
+        """Backpressure-aware ``submit``: returns an ``Admission`` verdict
+        instead of raising ``QueueFull``.  Argument validation errors
+        (bad lengths, unknown classes, bad deadlines) still raise — those
+        are caller bugs, not load."""
+        try:
+            rid = self.submit(prompt, max_new, **kw)
+        except QueueFull as e:
+            return Admission(accepted=False, rid=None,
+                             queue_depth=e.depth,
+                             retry_after_steps=e.retry_after_steps,
+                             reason="queue-full")
+        return Admission(accepted=True, rid=rid,
+                         queue_depth=len(self._queue))
+
+    def _retry_after(self) -> int:
+        """Backoff hint in decode steps: the soonest any active slot can
+        free (its remaining max_new, ignoring early EOS) plus the queue
+        drain behind it.  A heuristic, not a promise — documented as such
+        on QueueFull."""
+        rem = [s.req.max_new - len(s.emitted)
+               for _, s in self._table.active()]
+        base = min(rem) if rem else 1
+        return max(1, base + len(self._queue) // max(self.n_slots, 1))
 
     @property
     def pending(self) -> int:
@@ -289,6 +621,38 @@ class ContinuousScheduler:
         return self._table.n_active
 
     # -- admission ----------------------------------------------------------
+    def _finish_unadmitted(self, req: Request, reason: str,
+                           status: str) -> None:
+        """Terminal record for a request that never reached a slot
+        (queue-TTL / deadline eviction): no tokens, ``admit_step == -1``."""
+        self._finished[req.rid] = FinishedRequest(
+            rid=req.rid, tokens=np.zeros((0,), np.int32),
+            prompt_len=req.prompt.size, finish_reason=reason,
+            prefill_precision=self._policy.request_schedule(
+                1, req.request_class)[0],
+            decode_widths=[], request_class=req.request_class,
+            submit_step=req.submit_step, admit_step=-1,
+            finish_step=self.clock, status=status)
+        self._counts["finished"] += 1
+        self._counts["evicted"] += 1
+
+    def _evict_expired(self) -> None:
+        """Shed queued requests that can no longer be served in time:
+        queue TTL and already-expired per-request deadlines."""
+        if self.queue_ttl is None and not any(
+                req.deadline is not None for req, _ in self._queue):
+            return
+        keep: collections.deque = collections.deque()
+        for req, schedule in self._queue:
+            waited = self.clock - req.submit_step
+            if req.deadline is not None and waited >= req.deadline:
+                self._finish_unadmitted(req, "evicted", "evicted")
+            elif self.queue_ttl is not None and waited >= self.queue_ttl:
+                self._finish_unadmitted(req, "evicted", "evicted")
+            else:
+                keep.append((req, schedule))
+        self._queue = keep
+
     def _admit_one(self, req: Request, schedule, idx: int) -> None:
         pm = schedule[0]
         logits, slot_cache = self._srv._prefill(
@@ -304,7 +668,7 @@ class ContinuousScheduler:
         self._topks[idx] = req.top_k
         state = SlotState(req=req, schedule=schedule, emitted=[tok0],
                           decode_widths=[], prefill_precision=pm,
-                          admit_step=self.clock)
+                          admit_step=self.clock, repeat_run=1)
         self._table.admit(idx, state)
         self._counts["admitted"] += 1
         done = (tok0 == req.eos_id if req.eos_id is not None
@@ -343,51 +707,107 @@ class ContinuousScheduler:
 
     # -- stepping -----------------------------------------------------------
     def step(self) -> bool:
-        """One scheduler step: admit from the queue, pick the step width
-        from the active slots' wanted widths, run one batched decode,
-        commit the scheduled rows, retire finished requests.  Returns
-        False when there is nothing left to do."""
+        """One scheduler step: run fault injectors, evict expired queue
+        entries, admit from the queue, pick the step width from the active
+        slots' wanted widths, run one batched decode, commit the
+        scheduled-and-healthy rows, retire finished / quarantined /
+        deadline-missed requests.  Returns False when there is nothing
+        left to do."""
+        t0 = time.perf_counter()
+        for f in self._faults:
+            f.before_step(self)
+        self._evict_expired()
         self._admit()
         wanted = {idx: s.wanted for idx, s in self._table.active()}
         if not wanted:
             return False
+        self._width_policy.observe({
+            "clock": self.clock,
+            "queue_depth": len(self._queue),
+            "active": len(wanted),
+            "slots": self.n_slots,
+            "step_seconds": self._last_step_seconds,
+            "floors": {idx: s.req.min_width
+                       for idx, s in self._table.active()},
+            "widths": self._policy.widths,
+        })
         m, commit = self._width_policy.select(wanted)
         mask = np.zeros((self.n_slots,), bool)
         mask[sorted(commit)] = True
-        nxt, cache, keys = self._step_fn(
+        poison = np.zeros((self.n_slots,), bool)
+        for f in self._faults:
+            f.poison_slots(self, poison)
+        nxt, cache, keys, ok = self._step_fn(
             self._srv.master, self._cache, self._tok, jnp.int32(m),
             self._keys, jnp.asarray(self._temps), jnp.asarray(self._topks),
-            jnp.asarray(mask), commit_all=len(commit) == len(wanted))
+            jnp.asarray(mask),
+            jnp.asarray(poison) if poison.any() else self._no_poison,
+            commit_all=len(commit) == len(wanted))
         self._cache, self._keys, self._tok = cache, keys, nxt
-        toks = np.asarray(nxt)  # ONE host sync per continuous step
+        # ONE host round-trip per continuous step (tokens + health)
+        toks, ok = jax.device_get((nxt, ok))
         self.clock += 1
         self._counts["steps"] += 1
         self._counts["slot_steps_active"] += len(wanted)
-        self._counts["slot_steps_committed"] += len(commit)
-        self._counts["committed_tokens"] += len(commit)
         self._counts["width_steps"][int(m)] += 1
         for idx in sorted(commit):
             slot = self._table.get(idx)
+            if not bool(ok[idx]):
+                # quarantine: the row did NOT commit (traced health gate),
+                # so its device state is still the last healthy step —
+                # retire just this slot, neighbours untouched (§12)
+                self._retire(idx, "poisoned", status="poisoned")
+                self._counts["poisoned"] += 1
+                continue
+            self._counts["slot_steps_committed"] += 1
+            self._counts["committed_tokens"] += 1
             t = int(toks[idx])
             slot.decode_widths.append(int(m))
+            prev = slot.emitted[-1]
             slot.emitted.append(t)
+            slot.repeat_run = slot.repeat_run + 1 if t == prev else 1
             eos = slot.req.eos_id
             hit_eos = eos is not None and t == eos
+            if (self.repetition_limit is not None and not hit_eos
+                    and slot.repeat_run >= self.repetition_limit):
+                self._emit(slot.req, t, True)
+                self._retire(idx, "repetition", status="poisoned")
+                self._counts["poisoned"] += 1
+                continue
             done = hit_eos or len(slot.emitted) >= slot.req.max_new
             self._emit(slot.req, t, done)
             if done:
                 self._retire(idx, "eos" if hit_eos else "length")
+        # deadline sweep over the slots still decoding: a request whose
+        # step budget is spent retires with its partial tokens
+        for idx, slot in self._table.active():
+            dl = slot.req.deadline
+            if dl is not None and self.clock - slot.req.submit_step >= dl:
+                self._retire(idx, "deadline", status="deadline")
+                self._counts["deadline_missed"] += 1
+        self._last_step_seconds = time.perf_counter() - t0
         return True
 
-    def drain(self) -> Dict[int, FinishedRequest]:
+    def drain(self, max_steps: Optional[int] = None
+              ) -> Dict[int, FinishedRequest]:
         """Step until queue and slots are empty; returns (and clears) every
-        request finished since the last drain, keyed by rid."""
+        request finished since the last drain, keyed by rid.  ``max_steps``
+        is a watchdog for fault-injection harnesses: exceeding it raises
+        RuntimeError instead of hanging (every injected fault must still
+        terminate — the bench's no-hang check)."""
+        n = 0
         while self.step():
-            pass
+            n += 1
+            if max_steps is not None and n > max_steps:
+                raise RuntimeError(
+                    f"drain exceeded {max_steps} steps with {self.active} "
+                    f"active / {self.pending} pending requests — "
+                    f"scheduler hang?")
         out, self._finished = self._finished, {}
         return out
 
-    def replay(self, requests) -> Dict[int, FinishedRequest]:
+    def replay(self, requests,
+               max_steps: Optional[int] = None) -> Dict[int, FinishedRequest]:
         """Drive the scheduler over an arrival-ordered workload and drain:
         each request is a dict of ``submit()`` kwargs plus an optional
         ``arrival`` (step-clock tick at which it becomes visible).  Idle
@@ -395,17 +815,26 @@ class ContinuousScheduler:
         count real waiting.  This is THE replay loop — the serve CLI's
         JSONL mode and benchmarks/bench_serving.py both run through it, so
         the clock/idle semantics (which define the latency metrics) cannot
-        diverge between them.  Returns ``drain()``'s {rid: FinishedRequest}."""
+        diverge between them.  With a bounded queue, arrivals that
+        overflow it are *rejected* (counted in ``stats['rejected']``) —
+        replay models an open-loop arrival process, not a client that
+        retries.  Returns ``drain()``'s {rid: FinishedRequest}."""
         reqs = sorted(requests, key=lambda r: int(r.get("arrival", 0)))
         i = 0
+        n = 0
         while i < len(reqs) or self.pending or self.active:
             while (i < len(reqs)
                    and int(reqs[i].get("arrival", 0)) <= self.clock):
                 kw = {k: v for k, v in reqs[i].items() if k != "arrival"}
-                self.submit(**kw)
+                self.try_submit(**kw)
                 i += 1
             if not self.step() and i < len(reqs):
                 self.clock += 1  # idle gap before the next arrival
+            n += 1
+            if max_steps is not None and n > max_steps:
+                raise RuntimeError(
+                    f"replay exceeded {max_steps} steps with {self.active} "
+                    f"active / {self.pending} pending — scheduler hang?")
         return self.drain()
 
     # -- internals ----------------------------------------------------------
@@ -415,7 +844,7 @@ class ContinuousScheduler:
         if self.on_token is not None:
             self.on_token(req.rid, token, done)
 
-    def _retire(self, idx: int, reason: str) -> None:
+    def _retire(self, idx: int, reason: str, status: str = "ok") -> None:
         slot = self._table.retire(idx)
         self._temps[idx] = 0.0
         self._topks[idx] = 0
@@ -430,7 +859,8 @@ class ContinuousScheduler:
             request_class=slot.req.request_class,
             submit_step=slot.req.submit_step,
             admit_step=slot.admit_step,
-            finish_step=self.clock)
+            finish_step=self.clock,
+            status=status)
 
     # -- accounting ---------------------------------------------------------
     @property
@@ -444,6 +874,10 @@ class ContinuousScheduler:
             "finished": c["finished"],
             "pending": self.pending,
             "active": self.active,
+            "rejected": c["rejected"],
+            "evicted": c["evicted"],
+            "deadline_missed": c["deadline_missed"],
+            "poisoned": c["poisoned"],
             # mean fraction of slots occupied / committed per step
             "occupancy": c["slot_steps_active"] / (steps * self.n_slots),
             "commit_rate": (c["slot_steps_committed"]
@@ -451,4 +885,5 @@ class ContinuousScheduler:
             "width_steps": dict(c["width_steps"]),
             "starvation": self._width_policy.starvation,
             "width_policy": self._width_policy.name,
+            "degradation": self._width_policy.degradation,
         }

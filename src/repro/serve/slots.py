@@ -51,7 +51,12 @@ class Request:
     scheduler's PrecisionPolicy (named class -> width plan); sampling
     params are per-request (the vectorized sampler serves any mix);
     ``stream`` is an optional ``stream(rid, token, done)`` callback fired
-    as each token is committed."""
+    as each token is committed.  Resilience fields (DESIGN.md §12):
+    ``deadline`` is the step-clock budget from submit to finish (None =
+    none; missing it retires the request with status ``deadline``, or
+    ``evicted`` if it expires while still queued) and ``min_width`` is the
+    degradation floor — the slo-degrade policy never serves this request
+    below it (resolved through the policy's per-class floors at submit)."""
     rid: int
     prompt: np.ndarray
     max_new: int
@@ -62,23 +67,49 @@ class Request:
     seed: int = 0
     stream: Optional[Callable[[int, int, bool], None]] = None
     submit_step: int = 0        # scheduler step clock at submit()
+    deadline: Optional[int] = None   # steps from submit to finish
+    min_width: int = 1               # degradation floor (resolved)
 
 
 @dataclasses.dataclass
 class FinishedRequest:
     """A completed request with its realized precision trace and step-clock
     latency accounting (submit -> admit is queue wait; admit -> finish is
-    service time, both in scheduler decode steps)."""
+    service time, both in scheduler decode steps).
+
+    ``status`` is the terminal outcome (DESIGN.md §12): ``ok`` (finished by
+    EOS or length), ``evicted`` (expired in the queue, never decoded),
+    ``deadline`` (missed its deadline mid-decode; partial tokens kept) or
+    ``poisoned`` (quarantined after non-finite logits / runaway
+    repetition; tokens up to the last healthy step kept).
+    ``finish_reason`` stays the finer-grained cause ("eos", "length",
+    "evicted", "deadline", "poisoned", "repetition")."""
     rid: int
     tokens: np.ndarray          # [n] int32, n <= max_new (incl. eos if hit)
     prompt_len: int
-    finish_reason: str          # "eos" | "length"
+    finish_reason: str          # "eos" | "length" | failure cause
     prefill_precision: int      # width the prompt ran at
     decode_widths: List[int]    # realized width of each committed step
     request_class: Optional[str]
     submit_step: int
     admit_step: int
     finish_step: int
+    status: str = "ok"          # ok | evicted | deadline | poisoned
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+    def raise_for_status(self) -> "FinishedRequest":
+        """Return self if the request succeeded, else raise the taxonomy
+        error matching the terminal status (serve/errors.py)."""
+        from repro.serve import errors as errors_lib
+        exc = errors_lib.TERMINAL_STATUSES.get(self.status)
+        if exc is None:
+            return self
+        raise exc(f"request {self.rid} finished with status "
+                  f"{self.status!r} ({self.finish_reason}) after "
+                  f"{len(self.tokens)} tokens")
 
     def oracle_schedule(self) -> tuple:
         """(precision_schedule, prefill_precision) that reproduces this
@@ -105,6 +136,7 @@ class SlotState:
     decode_widths: List[int]    # realized width per committed decode step
     prefill_precision: int
     admit_step: int
+    repeat_run: int = 0         # consecutive identical committed tokens
 
     @property
     def wanted(self) -> int:

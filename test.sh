@@ -8,4 +8,11 @@ cd "$(dirname "$0")"
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# hypothesis is a pinned test dep (requirements.txt) that some containers
+# miss; best-effort install so the property tests run under the real engine
+# (offline environments still run them via the deterministic fallback sweep
+# in tests/test_serving.py — this install failing is not an error)
+python -c 'import hypothesis' 2>/dev/null || \
+  pip install --quiet "$(grep '^hypothesis==' requirements.txt)" 2>/dev/null || true
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,540 @@
+"""Serving resilience layer tests (DESIGN.md §12): error taxonomy,
+admission control / backpressure / eviction, the slo-degrade width policy
+state machine, per-slot quarantine, and the fault-injection harness.
+
+The two load-bearing invariants, both pinned bitwise:
+
+  * a fault on one slot never perturbs its co-residents — every surviving
+    request's tokens equal the no-fault run exactly, and the poisoned
+    request's partial tokens are an exact prefix of its no-fault stream;
+  * degradation is still oracle-faithful — a degraded request's realized
+    schedule replays bitwise on the lockstep engine, and floored requests
+    are never served below their floor.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import model_zoo as Z
+from repro.models.config import ModelConfig
+from repro.policy import PrecisionPolicy
+from repro.serve import SwitchableServer
+from repro.serve.errors import (
+    BadDeadline,
+    DeadlineExceeded,
+    QueueFull,
+    ServeError,
+    SlotPoisoned,
+    TERMINAL_STATUSES,
+    UnknownRequestClass,
+)
+from repro.serve.faults import (
+    ArrivalFlood,
+    CacheCorruptionFault,
+    NaNLogitsFault,
+    StallFault,
+)
+from repro.serve.scheduler import (
+    Admission,
+    SLODegradePolicy,
+    WidthRoundRobinPolicy,
+    make_width_policy,
+)
+
+CFG = ModelConfig(name="resil-tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, q_block=16, kv_block=16, loss_chunk=16,
+                  remat="none", dtype="bfloat16")
+
+WIDTHS = (8, 7, 6, 5, 4, 3)
+
+
+@pytest.fixture(scope="module")
+def server():
+    params = Z.init_params(CFG, jax.random.PRNGKey(0))
+    srv = SwitchableServer(CFG, params, max_len=96)
+    srv.set_policy(PrecisionPolicy.all_widths()
+                   .with_class("pinned", 8, min_width=8)
+                   .with_class("bulk", 8)
+                   .with_class("cheap", 4))
+    return srv
+
+
+def P(s=12, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, CFG.vocab_size, (s,)).astype(np.int32)
+
+
+def check_oracle(server, fr, prompt):
+    sched, pm = fr.oracle_schedule()
+    solo = server.generate(prompt[None], max_new=len(fr.tokens),
+                           precision_schedule=sched, prefill_precision=pm)
+    np.testing.assert_array_equal(fr.tokens, solo.tokens[0])
+
+
+# ---------------------------------------------------------------------------
+# error taxonomy
+# ---------------------------------------------------------------------------
+
+class TestErrorTaxonomy:
+    def test_hierarchy(self):
+        for exc in (QueueFull, BadDeadline, DeadlineExceeded, SlotPoisoned,
+                    UnknownRequestClass):
+            assert issubclass(exc, ServeError)
+        # backward compatibility: pre-taxonomy callers caught KeyError
+        assert issubclass(UnknownRequestClass, KeyError)
+
+    def test_queue_full_carries_backoff(self):
+        e = QueueFull(depth=5, max_queue=5, retry_after_steps=0)
+        assert e.retry_after_steps == 1  # hint clamps to >= 1
+        assert "5/5" in str(e) and "retry" in str(e)
+
+    def test_unknown_class_names_registered(self):
+        e = UnknownRequestClass("nope", ["a", "b"])
+        assert "nope" in str(e) and "['a', 'b']" in str(e)
+        assert str(e) == e.args[0]  # no KeyError repr-quoting
+
+    def test_terminal_statuses_map(self):
+        assert TERMINAL_STATUSES["ok"] is None
+        assert TERMINAL_STATUSES["evicted"] is DeadlineExceeded
+        assert TERMINAL_STATUSES["deadline"] is DeadlineExceeded
+        assert TERMINAL_STATUSES["poisoned"] is SlotPoisoned
+
+    def test_submit_unknown_class_taxonomy(self, server):
+        sched = server.continuous(slots=1)
+        with pytest.raises(UnknownRequestClass,
+                           match=r"'bulk', 'cheap', 'pinned'"):
+            sched.submit(P(), 4, request_class="nope")
+
+    def test_policy_floors_roundtrip(self):
+        pol = (PrecisionPolicy.all_widths()
+               .with_class("a", 8, min_width=8).with_class("b", 4))
+        assert pol.min_width_for("a") == 8
+        assert pol.min_width_for("b") == min(pol.widths)
+        assert pol.min_width_for(None) == min(pol.widths)
+        pol2 = pol.with_floor("b", 4)
+        assert pol2.min_width_for("b") == 4
+        again = PrecisionPolicy.from_meta(pol2.describe())
+        assert again.floors == {"a": 8, "b": 4}
+        with pytest.raises(ValueError, match="unknown class"):
+            PrecisionPolicy.all_widths().with_floor("ghost", 4)
+
+
+# ---------------------------------------------------------------------------
+# admission control: bounded queue, backpressure, eviction
+# ---------------------------------------------------------------------------
+
+class TestAdmissionControl:
+    def test_queue_overflow_backpressure(self, server):
+        sched = server.continuous(slots=1, max_queue=2)
+        sched.submit(P(seed=1), 4)
+        sched.step()                       # occupies the only slot
+        sched.submit(P(seed=2), 4)
+        sched.submit(P(seed=3), 4)         # queue now at capacity
+        with pytest.raises(QueueFull) as ei:
+            sched.submit(P(seed=4), 4)
+        assert ei.value.retry_after_steps >= 1
+        adm = sched.try_submit(P(seed=5), 4)
+        assert isinstance(adm, Admission)
+        assert not adm.accepted and adm.rid is None
+        assert adm.reason == "queue-full"
+        assert adm.retry_after_steps >= 1
+        done = sched.drain(max_steps=100)
+        # the three admitted requests all finish ok; rejects counted
+        assert sorted(fr.status for fr in done.values()) == ["ok"] * 3
+        assert sched.stats["rejected"] == 2
+        # capacity freed: the same scheduler accepts again
+        assert sched.try_submit(P(seed=6), 2).accepted
+        sched.drain(max_steps=50)
+
+    def test_all_slots_busy_admission_stall(self, server):
+        """Queued requests wait for a slot (pending > 0 while all slots
+        busy), get admitted as slots free, and still match their lockstep
+        oracle."""
+        ps = [P(seed=20 + i) for i in range(3)]
+        sched = server.continuous(slots=1)
+        rids = [sched.submit(ps[i], 3, seed=i) for i in range(3)]
+        assert sched.step() and sched.pending == 2 and sched.active == 1
+        done = sched.drain(max_steps=100)
+        assert len(done) == 3 and sched.active == 0
+        for i, rid in enumerate(rids):
+            assert done[rid].status == "ok"
+            assert done[rid].admit_step >= done[rid].submit_step
+            check_oracle(server, done[rid], ps[i])
+
+    def test_queue_ttl_evicts_stale_requests(self, server):
+        sched = server.continuous(slots=1, queue_ttl=3)
+        head = sched.submit(P(seed=30), 8)   # hogs the slot for 8 steps
+        stale = sched.submit(P(seed=31), 4)  # waits > ttl -> evicted
+        done = sched.drain(max_steps=100)
+        assert done[head].status == "ok"
+        fr = done[stale]
+        assert fr.status == "evicted" and fr.finish_reason == "evicted"
+        assert len(fr.tokens) == 0 and fr.admit_step == -1
+        assert sched.stats["evicted"] == 1
+        with pytest.raises(DeadlineExceeded, match="evicted"):
+            fr.raise_for_status()
+
+    def test_deadline_missed_mid_decode(self, server):
+        p = P(seed=32)
+        sched = server.continuous(slots=1)
+        rid = sched.submit(p, 12, deadline=4)
+        done = sched.drain(max_steps=100)
+        fr = done[rid]
+        assert fr.status == "deadline" and fr.finish_reason == "deadline"
+        assert 0 < len(fr.tokens) < 12          # partial tokens kept
+        assert fr.finish_step - fr.submit_step <= 4
+        assert sched.stats["deadline_missed"] == 1
+        check_oracle(server, fr, p)             # partials stay oracle-true
+        with pytest.raises(DeadlineExceeded):
+            fr.raise_for_status()
+
+    def test_deadline_met_is_ok(self, server):
+        sched = server.continuous(slots=1)
+        rid = sched.submit(P(seed=33), 3, deadline=20)
+        done = sched.drain(max_steps=50)
+        assert done[rid].status == "ok" and len(done[rid].tokens) == 3
+        assert done[rid].raise_for_status() is done[rid]
+
+    def test_bad_deadline_rejected_at_submit(self, server):
+        sched = server.continuous(slots=1)
+        with pytest.raises(BadDeadline):
+            sched.submit(P(), 4, deadline=0)
+
+    def test_drain_after_mid_stream_eviction(self, server):
+        """A mid-stream deadline retirement frees the slot; drain()
+        continues and completes the remaining workload (the freed slot is
+        re-admitted, nothing leaks)."""
+        ps = [P(seed=34 + i) for i in range(3)]
+        sched = server.continuous(slots=1)
+        doomed = sched.submit(ps[0], 12, deadline=3)
+        tail = [sched.submit(ps[i], 3, seed=i) for i in (1, 2)]
+        done = sched.drain(max_steps=100)
+        assert done[doomed].status == "deadline"
+        for i, rid in enumerate(tail):
+            assert done[rid].status == "ok"
+            assert len(done[rid].tokens) == 3
+            check_oracle(server, done[rid], ps[i + 1])
+        assert sched.active == 0 and sched.pending == 0
+
+    def test_prefill_only_respects_queue_bound(self, server):
+        """max_new=0 requests occupy queue seats like any other (bounded
+        queue counts them) but finish at the next step without a slot."""
+        sched = server.continuous(slots=1, max_queue=1)
+        sched.submit(P(seed=36), 4)
+        sched.step()
+        rid = sched.submit(P(seed=37), 0, request_class="cheap")
+        with pytest.raises(QueueFull):
+            sched.submit(P(seed=38), 0)
+        done = sched.drain(max_steps=50)
+        assert done[rid].status == "ok" and len(done[rid].tokens) == 0
+        assert done[rid].prefill_precision == 4
+
+    def test_min_width_validation(self, server):
+        sched = server.continuous(slots=1)
+        with pytest.raises(ValueError, match="min_width"):
+            sched.submit(P(), 4, min_width=0)
+        with pytest.raises(ValueError, match="min_width"):
+            sched.submit(P(), 4, min_width=9)
+
+    def test_drain_watchdog_raises_instead_of_hanging(self, server):
+        sched = server.continuous(slots=1)
+        for i in range(3):
+            sched.submit(P(seed=40 + i), 6)
+        with pytest.raises(RuntimeError, match="exceeded 2 steps"):
+            sched.drain(max_steps=2)
+        sched.drain(max_steps=100)  # and the scheduler is still usable
+
+
+# ---------------------------------------------------------------------------
+# slo-degrade policy state machine (pure unit tests, no server)
+# ---------------------------------------------------------------------------
+
+class TestSLODegradeStateMachine:
+    @staticmethod
+    def sig(**kw):
+        base = {"clock": 0, "queue_depth": 0, "active": 1, "slots": 4,
+                "step_seconds": None, "floors": {}, "widths": WIDTHS}
+        base.update(kw)
+        return base
+
+    def test_registered(self):
+        assert isinstance(make_width_policy("slo-degrade"),
+                          SLODegradePolicy)
+
+    def test_healthy_is_width_rr(self):
+        p = SLODegradePolicy()
+        p.observe(self.sig())
+        rr = WidthRoundRobinPolicy()
+        wanted = {0: 8, 1: 4}
+        for _ in range(4):
+            assert p.select(dict(wanted)) == rr.select(dict(wanted))
+        assert p.shift == 0 and p.degradation["degraded_steps"] == 0
+
+    def test_queue_pressure_escalates_one_level_per_observe(self):
+        p = SLODegradePolicy(queue_high=4)
+        for expect in (1, 2, 3):
+            p.observe(self.sig(clock=expect, queue_depth=10))
+            assert p.shift == expect
+        m, commit = p.select({0: 8, 1: 8})
+        # shift 3 from wanted 8 on the (8,7,6,5,4,3) ladder -> 5
+        assert m == 5 and commit == {0, 1}
+        assert p.degradation["downshifted_slot_steps"] == 2
+
+    def test_full_slots_with_backlog_escalates(self):
+        p = SLODegradePolicy(queue_high=100)  # queue trigger disabled
+        p.observe(self.sig(active=4, slots=4, queue_depth=1))
+        assert p.shift == 1
+
+    def test_latency_ewma_escalates(self):
+        p = SLODegradePolicy(slo_step_seconds=0.010, queue_high=100,
+                             ewma_alpha=1.0)
+        p.observe(self.sig(step_seconds=0.5))
+        assert p.shift == 1
+        assert p.degradation["latency_ewma_seconds"] == 0.5
+
+    def test_upshift_is_hysteretic(self):
+        p = SLODegradePolicy(queue_high=2, queue_low=0, hold_steps=3)
+        p.observe(self.sig(queue_depth=5))
+        p.observe(self.sig(queue_depth=5))
+        assert p.shift == 2
+        # calm observations accumulate relief; only the hold_steps-th one
+        # actually downshifts — and a single breach resets the count
+        p.observe(self.sig(queue_depth=0))
+        p.observe(self.sig(queue_depth=0))
+        assert p.shift == 2
+        p.observe(self.sig(queue_depth=5))      # relief reset (+1 shift)
+        assert p.shift == 3
+        for _ in range(3):
+            p.observe(self.sig(queue_depth=0))
+        assert p.shift == 2
+        for _ in range(6):
+            p.observe(self.sig(queue_depth=0))
+        assert p.shift == 0
+        trace = p.degradation["trace"]
+        assert [s for _, s in trace] == [1, 2, 3, 2, 1, 0]
+
+    def test_floors_bound_degraded_width(self):
+        p = SLODegradePolicy(queue_high=1)
+        for _ in range(5):  # escalate to the cap
+            p.observe(self.sig(queue_depth=9,
+                               floors={0: 8, 1: 3}))
+        m, commit = p.select({0: 8, 1: 8})
+        assert m == 8 and commit == {0, 1}  # floor-8 slot pins the step
+        m2, _ = p.select({1: 8})            # floored slot retired
+        assert m2 == 3                      # full degradation resumes
+
+    def test_max_shift_cap(self):
+        p = SLODegradePolicy(queue_high=1, max_shift=2)
+        for _ in range(6):
+            p.observe(self.sig(queue_depth=9))
+        assert p.shift == 2
+        m, _ = p.select({0: 8})
+        assert m == 6  # 8 -> 7 -> 6
+
+    def test_bad_watermarks(self):
+        with pytest.raises(ValueError, match="queue_low"):
+            SLODegradePolicy(queue_high=2, queue_low=5)
+
+
+# ---------------------------------------------------------------------------
+# fault injection: quarantine, corruption, stalls, floods
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def nofault_run(server):
+    """Shared no-fault baseline: 3 uniform-class requests, one per slot."""
+    pol = PrecisionPolicy.all_widths(default=6)
+    sched = server.continuous(slots=3, policy=pol)
+    ps = [P(seed=10 + i) for i in range(3)]
+    rids = [sched.submit(ps[i], 8, seed=i) for i in range(3)]
+    done = sched.drain(max_steps=100)
+    return pol, ps, [done[r] for r in rids]
+
+
+class TestFaultInjection:
+    def test_nan_logits_quarantines_one_slot(self, server, nofault_run):
+        """NaN logits on slot 1: only that slot retires (status poisoned,
+        tokens an exact prefix of its no-fault stream — the poisoned step
+        never commits), co-residents are bitwise unchanged, the slot is
+        reusable, and nothing hangs."""
+        pol, ps, base = nofault_run
+        fault = NaNLogitsFault(slot=1, step=2)
+        sched = server.continuous(slots=3, policy=pol, faults=[fault])
+        rids = [sched.submit(ps[i], 8, seed=i) for i in range(3)]
+        done = sched.drain(max_steps=100)
+        assert fault.fired and fault.fired[0]["clock"] == 2
+        victim = done[rids[1]]
+        assert victim.status == "poisoned"
+        assert victim.finish_reason == "poisoned"
+        assert 0 < len(victim.tokens) < len(base[1].tokens)
+        np.testing.assert_array_equal(
+            victim.tokens, base[1].tokens[:len(victim.tokens)])
+        check_oracle(server, victim, ps[1])  # partial stream stays faithful
+        with pytest.raises(SlotPoisoned):
+            victim.raise_for_status()
+        for i in (0, 2):  # co-residents: bitwise identical to no-fault
+            assert done[rids[i]].status == "ok"
+            np.testing.assert_array_equal(done[rids[i]].tokens,
+                                          base[i].tokens)
+        assert sched.stats["poisoned"] == 1
+        assert sched.active == 0  # no leaked slot
+        rid = sched.submit(ps[1], 4, seed=9)  # the slot is reusable
+        assert sched.drain(max_steps=50)[rid].status == "ok"
+
+    def test_cache_corruption_detected_and_contained(self, server,
+                                                     nofault_run):
+        """NaN bits flipped into slot 2's cache row propagate through the
+        next step's attention into the logits health check; only slot 2
+        retires and co-residents stay bitwise clean."""
+        pol, ps, base = nofault_run
+        fault = CacheCorruptionFault(slot=2, step=3)
+        sched = server.continuous(slots=3, policy=pol, faults=[fault])
+        rids = [sched.submit(ps[i], 8, seed=i) for i in range(3)]
+        done = sched.drain(max_steps=100)
+        assert fault.fired[0]["leaves_corrupted"] > 0
+        victim = done[rids[2]]
+        assert victim.status == "poisoned"
+        np.testing.assert_array_equal(
+            victim.tokens, base[2].tokens[:len(victim.tokens)])
+        for i in (0, 1):
+            np.testing.assert_array_equal(done[rids[i]].tokens,
+                                          base[i].tokens)
+        assert sched.stats["poisoned"] == 1 and sched.active == 0
+
+    def test_no_fault_faulted_scheduler_is_bitwise_clean(self, server,
+                                                         nofault_run):
+        """A fault whose window never fires is a true no-op: the poison
+        mask stays all-False and every request equals the no-fault run
+        (the traced injection path costs nothing when clean)."""
+        pol, ps, base = nofault_run
+        fault = NaNLogitsFault(slot=0, step=10_000)
+        sched = server.continuous(slots=3, policy=pol, faults=[fault])
+        rids = [sched.submit(ps[i], 8, seed=i) for i in range(3)]
+        done = sched.drain(max_steps=100)
+        assert not fault.fired
+        for i in range(3):
+            np.testing.assert_array_equal(done[rids[i]].tokens,
+                                          base[i].tokens)
+
+    def test_repetition_guard(self, server):
+        """The host-side repetition guard retires a slot that commits the
+        same token ``repetition_limit`` times in a row (status poisoned,
+        reason repetition) — this tiny greedy model loops, which is
+        exactly the runaway the guard exists for."""
+        p = P(16, seed=61)  # greedy run with a long constant tail
+        base = server.generate(p[None], max_new=24,
+                               precision_schedule=[8] * 24)
+        t = base.tokens[0].tolist()
+        runs, cur = 1, 1
+        for i in range(1, len(t)):
+            cur = cur + 1 if t[i] == t[i - 1] else 1
+            runs = max(runs, cur)
+        assert runs >= 3  # the probe premise: this workload does loop
+        pol = PrecisionPolicy.all_widths(default=8)
+        sched = server.continuous(slots=1, policy=pol, repetition_limit=3)
+        rid = sched.submit(p, 24)
+        fr = sched.drain(max_steps=100)[rid]
+        assert fr.status == "poisoned" and fr.finish_reason == "repetition"
+        assert len(fr.tokens) < 24
+        # tokens up to and including the tripping repeat match greedy
+        np.testing.assert_array_equal(fr.tokens,
+                                      base.tokens[0][:len(fr.tokens)])
+        assert sched.stats["poisoned"] == 1
+
+    def test_stall_fault_trips_latency_ewma(self, server):
+        """Artificial step stalls drive the slo-degrade latency trigger —
+        the one queue depth cannot exercise — and the workload still
+        finishes cleanly."""
+        policy = SLODegradePolicy(slo_step_seconds=0.05, queue_high=10_000,
+                                  hold_steps=3)
+        stall = StallFault([1, 2], 0.5)
+        sched = server.continuous(slots=2, width_policy=policy,
+                                  faults=[stall])
+        rids = [sched.submit(P(seed=50 + i), 8, seed=i) for i in range(2)]
+        done = sched.drain(max_steps=100)
+        assert len(stall.fired) == 2
+        assert policy.degradation["escalations"] >= 1
+        assert all(done[r].status == "ok" for r in rids)
+
+    def test_flood_backpressure_rejections(self, server):
+        """An arrival flood against a bounded queue: the overflow is
+        rejected (counted on the injector and the scheduler), the accepted
+        subset completes, and the scheduler never hangs."""
+        flood = ArrivalFlood(at_step=1, n=8, prompt_len=6, max_new=3,
+                             request_class="cheap", seed=3)
+        sched = server.continuous(slots=2, max_queue=3, faults=[flood])
+        first = sched.submit(P(seed=70), 3)
+        done = sched.drain(max_steps=200)
+        assert flood.rejected > 0
+        assert len(flood.rids) + flood.rejected == 8
+        assert sched.stats["rejected"] == flood.rejected
+        assert done[first].status == "ok"
+        for rid in flood.rids:
+            assert done[rid].status == "ok"
+        assert sched.active == 0 and sched.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# the acceptance scenario: flood -> degrade -> hold SLO, floors intact
+# ---------------------------------------------------------------------------
+
+class TestDegradeUnderFlood:
+    def test_flood_degrades_but_respects_floors_and_oracle(self, server):
+        """The tentpole end-to-end: an arrival flood escalates slo-degrade
+        (queue trigger), widths downshift for the degradable class while
+        floor-8 requests are never served below 8, degraded mode commits
+        the whole batch every step (service rate holds), and EVERY
+        request — degraded or not — replays bitwise on the lockstep
+        oracle."""
+        policy = SLODegradePolicy(queue_high=3, hold_steps=2)
+        flood = ArrivalFlood(at_step=1, n=10, prompt_len=8, max_new=6,
+                             request_class="bulk", seed=7)
+        sched = server.continuous(slots=4, width_policy=policy,
+                                  faults=[flood])
+        ps = [P(seed=30 + i) for i in range(2)]
+        pinned = [sched.submit(ps[i], 4, request_class="pinned", seed=i)
+                  for i in range(2)]
+        done = sched.drain(max_steps=400)
+        deg = policy.degradation
+        assert deg["escalations"] >= 1
+        assert deg["degraded_steps"] > 0
+        assert deg["downshifted_slot_steps"] > 0
+        # min_width=8 floor: pinned requests never served below 8
+        for rid in pinned:
+            assert done[rid].status == "ok"
+            assert all(w >= 8 for w in done[rid].decode_widths)
+        # the degradable class actually got downshifted
+        bulk_widths = {w for rid in flood.rids
+                       for w in done[rid].decode_widths}
+        assert min(bulk_widths) < 8
+        # degraded steps commit the whole batch: total commit rate beats
+        # what pure width-rr rotation over distinct groups could give
+        assert sched.stats["commit_rate"] > 0.5
+        # bitwise oracle for every request, degraded ones included (the
+        # flood records prompt j alongside rid j for exactly this replay)
+        for rid, prompt in zip(flood.rids, flood.prompts):
+            check_oracle(server, done[rid], prompt)
+        for i, rid in enumerate(pinned):
+            check_oracle(server, done[rid], ps[i])
+
+    def test_pressure_relents_upshifts_back(self, server):
+        """After the backlog drains, a long-tail request sees the policy
+        walk shift back toward 0 (hysteretic upshift on the live
+        scheduler, not just the unit state machine)."""
+        policy = SLODegradePolicy(queue_high=2, hold_steps=2)
+        flood = ArrivalFlood(at_step=1, n=6, prompt_len=6, max_new=3,
+                             request_class="bulk", seed=11)
+        sched = server.continuous(slots=2, width_policy=policy,
+                                  faults=[flood])
+        tail = sched.submit(P(seed=80), 30, request_class="bulk")
+        done = sched.drain(max_steps=400)
+        trace = policy.degradation["trace"]
+        assert trace, "flood never escalated"
+        peak = max(s for _, s in trace)
+        assert peak >= 1
+        assert policy.shift < peak  # relief upshifted at least one level
+        # the long-tail request saw both degraded and recovered widths
+        assert done[tail].status == "ok"
+        assert len(set(done[tail].decode_widths)) > 1

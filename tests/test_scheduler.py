@@ -289,8 +289,14 @@ class TestLifecycle:
         assert len(got) == sum(len(fr.tokens) for fr in done.values())
 
     def test_submit_validation(self, server):
+        from repro.serve.errors import UnknownRequestClass
         sched = server.continuous(slots=2)
+        # the taxonomy error names the registered classes — and stays a
+        # KeyError for pre-taxonomy callers (it used to leak bare)
         with pytest.raises(KeyError, match="unknown request class"):
+            sched.submit(prompts(1)[0], 4, request_class="nope")
+        with pytest.raises(UnknownRequestClass,
+                           match=r"'cheap', 'gen', 'mid'"):
             sched.submit(prompts(1)[0], 4, request_class="nope")
         with pytest.raises(ValueError, match="max_len"):
             sched.submit(prompts(1, s=90)[0], 90)

@@ -334,28 +334,60 @@ try:  # optional dep: richer randomized coverage of the same invariants;
     # runs without hypothesis — decorators below need the real symbols.
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
-except ImportError:  # the deterministic TestVectorizedSampler still runs
+except ImportError:
+    # Fallback: the property tests still RUN without hypothesis, as a
+    # deterministic numpy-driven sweep — ``given`` draws max_examples
+    # fixed-seed samples from the same strategy shapes and calls the test
+    # once per sample.  No shrinking or adaptive search, but the invariant
+    # gets exercised over the same parameter space either way (these two
+    # tests used to be permanent skips in hypothesis-less environments).
     HAVE_HYPOTHESIS = False
 
-    def settings(**kw):
-        return lambda f: f
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
 
-    def given(**kw):
-        return lambda f: pytest.mark.skip(
-            reason="optional dep: property tests")(f)
-
-    class st:  # noqa: N801 — placeholder namespace, never sampled from
+    class st:  # noqa: N801 — mirrors the hypothesis strategies namespace
         @staticmethod
-        def integers(*a, **k):
-            return None
+        def integers(lo, hi):
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
 
         @staticmethod
-        def floats(*a, **k):
-            return None
+        def floats(lo, hi):
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
 
         @staticmethod
-        def lists(*a, **k):
-            return None
+        def lists(elem, min_size, max_size):
+            return _Strategy(lambda rng: [
+                elem.draw(rng) for _ in range(
+                    int(rng.integers(min_size, max_size + 1)))])
+
+    def settings(max_examples=20, **kw):
+        def deco(f):
+            f._fallback_examples = max_examples
+            return f
+        return deco
+
+    def given(**strategies):
+        def deco(f):
+            # NOT functools.wraps: copying __wrapped__/signature would make
+            # pytest treat the strategy kwargs as fixtures
+            def wrapper(self):
+                n = getattr(wrapper, "_fallback_examples", 20)
+                rng = np.random.default_rng(0xC0FFEE)
+                for _ in range(n):
+                    kw = {name: s.draw(rng)
+                          for name, s in strategies.items()}
+                    try:
+                        f(self, **kw)
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"fallback property sweep failed on {kw}"
+                        ) from e
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco
 
 
 class TestVectorizedSamplerProperties:
