@@ -39,12 +39,28 @@ set of hard checks — a hang, a crossed min_width floor, a perturbed
 co-resident, or a broken lockstep-oracle replay fails the bench (and the
 CI leg that runs it).
 
+``--long-context`` additionally runs the paged-KV capacity scenario
+(DESIGN.md §13) and records a ``long_context`` section: a mixed workload
+of long-document m=4 requests sharing one document prefix beside short
+m=8 chat requests, all under a FIXED page budget.  The headline is
+``concurrency_per_byte_vs_dense``: how many requests the paged scheduler
+holds concurrently vs how many dense ``max_len`` cache rows the same KV
+byte budget could back (``>= 2x`` is the acceptance bar).  The section
+also reports page occupancy, the prefix-cache hit rate (must be > 0 —
+the long documents share pages), chunked-prefill counts, and
+``decode_stall_steps`` (must be 0: a long prefill interleaves with the
+decode clock, it never stalls it).  ``--check`` hard-fails on zero reuse
+hits, any decode stall (in the long-context run AND the staggered
+continuous modes), or a concurrency ratio under 2x.
+
 Writes BENCH_serving.json at the repo root.  CI runs ``--smoke`` then
 ``--check`` and uploads the JSON, extending the serving perf trajectory;
-a second CI leg runs ``--faults --smoke --check``.
+further CI legs run ``--faults --smoke --check`` and
+``--long-context --smoke --check``.
 
     PYTHONPATH=src python benchmarks/bench_serving.py [--smoke] [--out PATH]
     PYTHONPATH=src python benchmarks/bench_serving.py --faults [--smoke]
+    PYTHONPATH=src python benchmarks/bench_serving.py --long-context [--smoke]
     PYTHONPATH=src python benchmarks/bench_serving.py --check PATH
 """
 
@@ -55,11 +71,13 @@ import json
 import sys
 import time
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 MODES = ("lockstep", "continuous", "continuous_rr")
 FAULT_SCENARIOS = ("flood", "nan_slot", "cache_corruption", "stall")
 # per-token service budget (scheduler steps) the flood scenario must hold
 SLO_STEPS_PER_TOKEN = 1.5
+# serving KV page size (must divide max_len; scheduler default)
+PAGE_SIZE = 16
 
 
 # ---------------------------------------------------------------------------
@@ -103,6 +121,13 @@ def check_schema(doc: dict) -> list:
                 need(entry, k, (int, float), f"$.modes.{mode}")
             need(entry, "width_steps", dict, f"$.modes.{mode}")
             need(entry, "starvation", dict, f"$.modes.{mode}")
+            # chunked prefill must never stall the decode clock — a
+            # regression here fails --check even outside --long-context
+            stalls = need(entry, "decode_stall_steps", int,
+                          f"$.modes.{mode}")
+            if stalls:
+                errs.append(f"$.modes.{mode}.decode_stall_steps: "
+                            f"{stalls} != 0")
     need(doc, "speedup_continuous_vs_lockstep", (int, float), "$")
     need(doc, "steps_saved_vs_lockstep", int, "$")
     # faults: always present; null when the run skipped --faults
@@ -128,6 +153,38 @@ def check_schema(doc: dict) -> list:
         for name, ok in checks.items():
             if ok is not True:
                 errs.append(f"$.faults.checks.{name}: failed ({ok!r})")
+    # long_context: always present; null when the run skipped it
+    if "long_context" not in doc:
+        errs.append("$: missing key 'long_context' (null when not run)")
+    elif doc["long_context"] is not None:
+        lc = doc["long_context"]
+        if not isinstance(lc, dict):
+            errs.append(f"$.long_context: expected dict, got "
+                        f"{type(lc).__name__}")
+            return errs
+        for k in ("page_size", "n_pages", "max_len", "bytes_per_page",
+                  "kv_budget_bytes", "peak_concurrent_requests",
+                  "dense_slots_same_budget", "prefix_hits",
+                  "reused_pages", "decode_stall_steps", "prefill_chunks",
+                  "page_high_water"):
+            need(lc, k, int, "$.long_context")
+        for k in ("concurrency_per_byte_vs_dense", "page_occupancy",
+                  "prefix_hit_rate", "tokens_per_sec"):
+            need(lc, k, (int, float), "$.long_context")
+        need(lc, "workload", dict, "$.long_context")
+        if lc.get("prefix_hits", 0) <= 0:
+            errs.append("$.long_context.prefix_hits: zero prefix reuse")
+        if lc.get("decode_stall_steps", 1) != 0:
+            errs.append("$.long_context.decode_stall_steps: "
+                        f"{lc.get('decode_stall_steps')} != 0")
+        if lc.get("concurrency_per_byte_vs_dense", 0) < 2.0:
+            errs.append("$.long_context.concurrency_per_byte_vs_dense: "
+                        f"{lc.get('concurrency_per_byte_vs_dense')} < 2.0")
+        checks = need(lc, "checks", dict, "$.long_context") or {}
+        for name, ok in checks.items():
+            if ok is not True:
+                errs.append(f"$.long_context.checks.{name}: "
+                            f"failed ({ok!r})")
     return errs
 
 
@@ -236,7 +293,129 @@ def run_continuous(server, reqs, slots: int, width_policy: str) -> dict:
         "commit_rate": stats["commit_rate"],
         "width_steps": {str(k): v for k, v in stats["width_steps"].items()},
         "starvation": {str(k): v for k, v in stats["starvation"].items()},
+        "decode_stall_steps": stats["decode_stall_steps"],
+        "prefill_chunks": stats["prefill_chunks"],
+        "pages_high_water": (stats["pages"] or {}).get("high_water"),
     }, useful
+
+
+# ---------------------------------------------------------------------------
+# long-context paged-KV scenario (--long-context; DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def run_long_context(artifact, policy, smoke: bool) -> dict:
+    """Mixed long-document / short-chat workload under a fixed KV page
+    budget.  The long documents share one document prefix (warmed into
+    the prefix cache by a retired priming request), decode at m=4 while
+    the short chat decodes at m=8, and every prompt prefills in chunks
+    interleaved with the decode clock.  The headline ratio compares the
+    peak number of concurrently-resident requests against the number of
+    dense max_len cache rows the SAME byte budget could back."""
+    import numpy as np
+
+    ps = PAGE_SIZE
+    if smoke:
+        max_len, doc_len, q_len = 128, 64, 16
+        n_long, long_new = 3, 8
+        n_short, short_plen, short_new = 6, 16, 8
+        n_pages, chunk = 25, 16      # 24 usable pages + the null page
+    else:
+        max_len, doc_len, q_len = 256, 160, 16
+        n_long, long_new = 4, 16
+        n_short, short_plen, short_new = 12, 16, 12
+        n_pages, chunk = 49, 32      # 48 usable pages + the null page
+    slots = n_long + n_short
+    server = artifact.server(policy, max_len=max_len)
+    vocab = server.cfg.vocab_size
+    rng = np.random.default_rng(42)
+    doc = rng.integers(0, vocab, (doc_len,)).astype(np.int32)
+    longs = [np.concatenate(
+        [doc, rng.integers(0, vocab, (q_len,)).astype(np.int32)])
+        for _ in range(n_long)]
+    shorts = [rng.integers(0, vocab, (short_plen,)).astype(np.int32)
+              for _ in range(n_short)]
+
+    sched = server.continuous(slots=slots, page_size=ps, n_pages=n_pages,
+                              prefill_chunk=chunk, width_policy="width-rr")
+    bytes_per_page = sched.memory_report()["kv_cache"]["bytes_per_page"]
+    budget_pages = n_pages - 1        # page 0 is the null page
+    budget_bytes = budget_pages * bytes_per_page
+    # the same byte budget as dense per-slot rows of max_len positions
+    dense_bound = budget_pages // (max_len // ps)
+
+    # prime: serve the bare document once so its full prompt pages sit in
+    # the prefix cache when the measured workload arrives (published pages
+    # outlive the request that produced them)
+    sched.submit(doc, max_new=1, request_class="understanding", seed=99)
+    sched.drain(max_steps=2_000)
+
+    # interleave the classes in FIFO submit order: long, short, short, ...
+    order = [(p, long_new, "understanding") for p in longs] \
+        + [(p, short_new, "generation") for p in shorts]
+    stride = 1 + n_short // max(n_long, 1)
+    order = [order[i] for g in range(stride)
+             for i in range(g, len(order), stride)]
+    rids = [sched.submit(p, max_new=mn, request_class=cls, seed=i)
+            for i, (p, mn, cls) in enumerate(order)]
+
+    peak = 0
+    n = 0
+    t0 = time.perf_counter()
+    while sched.pending or sched.active:
+        sched.step()
+        peak = max(peak, sched.active)
+        n += 1
+        if n > 2_000:
+            raise RuntimeError("long-context drain exceeded watchdog")
+    wall = time.perf_counter() - t0
+    done = sched.drain()
+    stats = sched.stats
+    pg = stats["pages"]
+    pc = pg["prefix_cache"]
+    useful = sum(len(done[r].tokens) for r in rids)
+    lat = [done[r].finish_step - done[r].submit_step for r in rids]
+    ratio = peak / max(dense_bound, 1)
+    hit_rate = pc["hits"] / max(pc["hits"] + pc["misses"], 1)
+    checks = {
+        "prefix_reuse": pc["hits"] > 0 and pg["reused_pages"] > 0,
+        "no_decode_stalls": stats["decode_stall_steps"] == 0,
+        "concurrency_2x_vs_dense": ratio >= 2.0,
+        "within_page_budget": pg["high_water"] <= budget_pages,
+        "chunked_prefill_ran": stats["prefill_chunks"] > 0,
+        "all_finished_ok": all(done[r].status == "ok" for r in rids),
+    }
+    return {
+        "page_size": ps,
+        "n_pages": n_pages,
+        "max_len": max_len,
+        "bytes_per_page": int(bytes_per_page),
+        "kv_budget_bytes": int(budget_bytes),
+        "workload": {
+            "n_long": n_long, "doc_len": doc_len,
+            "long_prompt_len": doc_len + q_len, "long_max_new": long_new,
+            "long_width": 4, "n_short": n_short,
+            "short_prompt_len": short_plen, "short_max_new": short_new,
+            "short_width": 8},
+        "peak_concurrent_requests": int(peak),
+        "dense_slots_same_budget": int(dense_bound),
+        "concurrency_per_byte_vs_dense": ratio,
+        "page_high_water": int(pg["high_water"]),
+        "page_occupancy": pg["high_water"] / budget_pages,
+        "prefix_hits": int(pc["hits"]),
+        "prefix_misses": int(pc["misses"]),
+        "prefix_hit_rate": hit_rate,
+        "reused_pages": int(pg["reused_pages"]),
+        "page_blocked_admissions": int(pg["page_blocked_admissions"]),
+        "prefill_chunks": int(stats["prefill_chunks"]),
+        "prefill_only_steps": int(stats["prefill_only_steps"]),
+        "decode_stall_steps": int(stats["decode_stall_steps"]),
+        "total_steps": int(stats["steps"]),
+        "tokens_per_sec": useful / max(wall, 1e-9),
+        "wall_seconds": wall,
+        "latency_steps_p50": _pctl(lat, 50),
+        "latency_steps_p95": _pctl(lat, 95),
+        "checks": checks,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -425,7 +604,8 @@ def run_faults(server, policy, smoke: bool) -> dict:
 # measurement
 # ---------------------------------------------------------------------------
 
-def run(smoke: bool = False, faults: bool = False) -> dict:
+def run(smoke: bool = False, faults: bool = False,
+        long_context: bool = False) -> dict:
     import jax
 
     from repro import api
@@ -456,7 +636,10 @@ def run(smoke: bool = False, faults: bool = False) -> dict:
             n_heads=4, n_kv_heads=2, head_dim=128, d_ff=1024,
             vocab_size=2048, q_block=16, kv_block=16, loss_chunk=32,
             remat="none", dtype="bfloat16")
+    # paged KV requires page_size | max_len (the decode view must be able
+    # to equal max_len for the bitwise lockstep oracle) — round up
     max_len = prompt_len + max_new_hi + 1
+    max_len += -max_len % PAGE_SIZE
 
     policy = api.PrecisionPolicy.all_widths()
     for name, w in classes.items():
@@ -509,6 +692,8 @@ def run(smoke: bool = False, faults: bool = False) -> dict:
         "steps_saved_vs_lockstep": (modes["lockstep"]["total_steps"]
                                     - modes["continuous"]["total_steps"]),
         "faults": run_faults(server, policy, smoke) if faults else None,
+        "long_context": (run_long_context(artifact, policy, smoke)
+                         if long_context else None),
     }
     return doc
 
@@ -521,6 +706,11 @@ def main():
                     help="also run the fault-injection scenarios and "
                     "record the 'faults' section (hard-fails on a hang, "
                     "crossed floor, or broken bitwise oracle)")
+    ap.add_argument("--long-context", action="store_true",
+                    help="also run the paged-KV long-context scenario "
+                    "and record the 'long_context' section (hard-fails "
+                    "on zero prefix reuse, a decode stall, or < 2x "
+                    "concurrency per KV byte vs dense)")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--check", default=None, metavar="PATH",
                     help="validate an existing JSON against the schema "
@@ -539,7 +729,8 @@ def main():
               f"{doc['speedup_continuous_vs_lockstep']:.2f}x)")
         return
 
-    doc = run(smoke=args.smoke, faults=args.faults)
+    doc = run(smoke=args.smoke, faults=args.faults,
+              long_context=args.long_context)
     errs = check_schema(doc)
     assert not errs, errs
     with open(args.out, "w") as f:
@@ -575,6 +766,23 @@ def main():
               f"from latency EWMA")
         bad = [k for k, v in fl["checks"].items() if v is not True]
         print(f"  faults/checks: "
+              f"{'ALL PASS' if not bad else 'FAILED: ' + ', '.join(bad)}")
+    lc = doc.get("long_context")
+    if lc:
+        print(f"  long-context: {lc['peak_concurrent_requests']} "
+              f"concurrent requests in a "
+              f"{lc['kv_budget_bytes'] / 1024:.0f} kB KV budget "
+              f"(dense rows of max_len={lc['max_len']}: "
+              f"{lc['dense_slots_same_budget']}) -> "
+              f"{lc['concurrency_per_byte_vs_dense']:.1f}x per byte")
+        print(f"  long-context: prefix hit rate "
+              f"{lc['prefix_hit_rate']:.2f} "
+              f"({lc['prefix_hits']} hits, {lc['reused_pages']} pages "
+              f"reused), page occupancy {lc['page_occupancy']:.2f}, "
+              f"{lc['prefill_chunks']} prefill chunks, "
+              f"{lc['decode_stall_steps']} decode stalls")
+        bad = [k for k, v in lc["checks"].items() if v is not True]
+        print(f"  long-context/checks: "
               f"{'ALL PASS' if not bad else 'FAILED: ' + ', '.join(bad)}")
 
 

@@ -114,7 +114,18 @@ def _replay(server, args, policy):
                               width_policy=width_policy,
                               eos_id=args.eos_id,
                               max_queue=args.max_queue,
-                              queue_ttl=args.queue_ttl)
+                              queue_ttl=args.queue_ttl,
+                              page_size=args.page_size,
+                              n_pages=args.n_pages,
+                              prefill_chunk=args.prefill_chunk,
+                              kv_dtype=args.kv_dtype,
+                              prefix_cache=not args.no_prefix_cache)
+    kv = sched.memory_report()["kv_cache"]
+    if kv.get("paged"):
+        print(f"paged KV: {kv['n_pages']} pages x {kv['page_size']} "
+              f"positions ({kv['kv_dtype']}, "
+              f"{kv['bytes_per_page']/1e3:.1f} kB/page, pool "
+              f"{kv['total_bytes']/1e6:.2f} MB)")
     t0 = time.perf_counter()
     done = sched.replay([{"prompt": r["prompt"], "max_new": r["max_new"],
                           "request_class": r["request_class"],
@@ -131,6 +142,15 @@ def _replay(server, args, policy):
           f"{wall:.2f}s ({total_toks / max(wall, 1e-9):.1f} tok/s) — "
           f"{stats['steps']} steps, occupancy {stats['occupancy']:.2f}, "
           f"commit rate {stats['commit_rate']:.2f}")
+    pg = stats["pages"]
+    if pg is not None:
+        pc = pg["prefix_cache"]
+        reuse = (f", prefix hits {pc['hits']}/{pc['hits'] + pc['misses']}"
+                 if pc is not None else "")
+        print(f"pages: high-water {pg['high_water']}/{pg['n_pages']}"
+              f", reused {pg['reused_pages']}{reuse}, "
+              f"prefill chunks {stats['prefill_chunks']}, "
+              f"decode stalls {stats['decode_stall_steps']}")
     print(f"width steps: {stats['width_steps']}  "
           f"starvation: {stats['starvation']}  "
           f"policy: {stats['width_policy']}")
@@ -207,6 +227,22 @@ def main():
     ap.add_argument("--slo-step-ms", type=float, default=None,
                     help="step-latency SLO budget for slo-degrade's EWMA "
                     "trigger (milliseconds)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=("bf16", "int8", "f8", "kv8"),
+                    help="paged KV page storage dtype (replay mode): "
+                    "'int8'/'f8'/'kv8' store pages as f8 E4M3 bytes — "
+                    "half the KV memory, a tolerance (not bitwise) regime")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="positions per KV page (must divide max-len)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="KV page pool size (default: every slot can hold "
+                    "a max-len request)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split prefills into chunks of this many tokens, "
+                    "one chunk per step interleaved with decode (default: "
+                    "whole prompt at admission)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable cross-request prompt-prefix KV reuse")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="default EOS token id for replayed requests")
     ap.add_argument("--max-len", type=int, default=None,
@@ -274,6 +310,11 @@ def main():
             policy = policy.with_floor(name.strip(), int(w))
 
     max_len = args.max_len or (args.prompt_len + args.new_tokens + 1)
+    if args.requests:
+        # the paged cache requires page_size | max_len (the decode view
+        # must equal max_len for the bitwise-oracle property)
+        ps = max(1, args.page_size)
+        max_len = -(-max_len // ps) * ps
     server = artifact.server(policy, max_len=max_len)
     startup_s = time.perf_counter() - t0
     rep = server.memory_report()

@@ -257,6 +257,41 @@ def attention_decode(params, x, cfg: ModelConfig, k_cache, v_cache, pos):
     return o @ params["wo"].astype(x.dtype), k_cache, v_cache
 
 
+def paged_attention_decode(params, x, cfg: ModelConfig, k_pages, v_pages,
+                           block_table, pos, page_size: int):
+    """Single-token attention against a PAGED KV cache (one layer's slice).
+
+    x: [B,1,d]; k_pages/v_pages: [n_pages, page_size, KV, hd]; block_table:
+    int32[B, max_pages] mapping each row's logical page (``position //
+    page_size``) to a physical page; pos: int32[B] per-slot positions.
+
+    Row b writes its k/v at ``(block_table[b, pos[b] // page_size],
+    pos[b] % page_size)`` — one scatter touching exactly one page slot per
+    row (active rows' write pages are exclusive by the allocator's sharing
+    rule, so rows never collide; free rows all land in null page 0, whose
+    contents are never read unmasked).  Attention then runs over the
+    gathered block-table view ``[B, max_pages * page_size, KV, hd]``: view
+    index IS logical position, so the per-slot causal mask (``kv_len =
+    pos + 1``) is unchanged from the dense path, and masked positions
+    (stale pages, the null page) contribute exact zeros — the view is
+    bitwise equivalent to the dense per-slot row it replaces.
+    Returns (out [B,1,d], new_k_pages, new_v_pages)."""
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None]
+    q, k, v = qkv_project(params, x, cfg, positions)
+    pg = jnp.take_along_axis(block_table, (pos // page_size)[:, None],
+                             axis=1)[:, 0]                      # [B]
+    off = pos % page_size
+    k_pages = k_pages.at[pg, off].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[pg, off].set(v[:, 0].astype(v_pages.dtype))
+    kc = k_pages[block_table].reshape(B, -1, *k_pages.shape[2:])
+    vc = v_pages[block_table].reshape(B, -1, *v_pages.shape[2:])
+    o = decode_attention(q, kc, vc, kv_len=pos + 1)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd)
+    return o @ params["wo"].astype(x.dtype), k_pages, v_pages
+
+
 def cross_attention_apply(params, x, cfg: ModelConfig, k, v):
     """Decoder cross-attention against precomputed encoder k/v
     [B,S_enc,KV,hd].  Non-causal; x may be [B,S,d] or [B,1,d]."""

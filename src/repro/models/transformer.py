@@ -126,6 +126,54 @@ def attn_layer_decode(p, x, cache, cfg: ModelConfig, pos):
     return x, {"k": kc, "v": vc}
 
 
+def attn_layer_decode_paged(p, x, k_pages, v_pages, block_table,
+                            cfg: ModelConfig, pos, page_size: int):
+    """``attn_layer_decode`` against one layer's KV pages (serve/pages.py):
+    the row's k/v is scattered into its block-table page and attention
+    reads the gathered view — bitwise the dense row path (layers.py)."""
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    o, kp, vp = L.paged_attention_decode(p["attn"], h, cfg, k_pages,
+                                         v_pages, block_table, pos,
+                                         page_size)
+    x = x + o
+    x = x + _ffn_apply(p, L.rmsnorm(x, p["ln2"], cfg.norm_eps), cfg)
+    return x, kp, vp
+
+
+def attn_layer_prefill_paged(p, x, k_pages, v_pages, block_table, start,
+                             cfg: ModelConfig, page_size: int,
+                             positions=None):
+    """One prefill CHUNK of one layer against the paged cache: x is
+    ``[1, C, d]`` at global positions ``start + [0, C)``.  Attention runs
+    over the block-table view with the chunk's fresh k/v spliced in at
+    ``start`` — earlier chunks (and reused prefix pages) are read from the
+    pages, so a chunk only ever computes O(C * view) work and the whole
+    chunked prefill is bitwise the un-chunked one (q rows are independent
+    in flash attention; positions beyond the causal horizon contribute
+    exact zeros).  Returns (x_out, k_chunk, v_chunk) — the caller scatters
+    the chunk k/v into the pages once, after the layer scan."""
+    B, C, _ = x.shape
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if positions is None:
+        positions = start + jnp.arange(C, dtype=jnp.int32)[None, :]
+    q, k, v = L.qkv_project(p["attn"], h, cfg, positions)
+    view = block_table.shape[0] * page_size
+    kview = k_pages[block_table].reshape(1, view, *k_pages.shape[2:])
+    vview = v_pages[block_table].reshape(1, view, *v_pages.shape[2:])
+    kview = lax.dynamic_update_slice_in_dim(
+        kview, k.astype(kview.dtype), start, axis=1)
+    vview = lax.dynamic_update_slice_in_dim(
+        vview, v.astype(vview.dtype), start, axis=1)
+    qb = _fit_block(cfg.q_block, C)
+    kb = _fit_block(cfg.kv_block, view)
+    o = L.flash_attention(q, kview, vview, causal=True, q_block=qb,
+                          kv_block=kb, q_offset=start)
+    o = o.reshape(B, C, cfg.n_heads * cfg.hd)
+    x = x + o @ p["attn"]["wo"].astype(x.dtype)
+    x = x + _ffn_apply(p, L.rmsnorm(x, p["ln2"], cfg.norm_eps), cfg)
+    return x, k, v
+
+
 def _fit_block(b, s):
     b = min(b, s)
     while s % b:
@@ -239,6 +287,22 @@ def hybrid_shared_block_decode(p, x, emb0, cache, cfg: ModelConfig, pos):
     h = h + o
     h = h + L.mlp_apply(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps))
     return x + h, {"k": kc, "v": vc}
+
+
+def hybrid_shared_block_decode_paged(p, x, emb0, k_pages, v_pages,
+                                     block_table, cfg: ModelConfig, pos,
+                                     page_size: int):
+    """``hybrid_shared_block_decode`` with the shared attention KV paged;
+    the Mamba2 recurrent state is position-free and stays dense per-slot."""
+    dt = x.dtype
+    h = jnp.concatenate([x, emb0], axis=-1) @ p["fuse_proj"].astype(dt)
+    hn = L.rmsnorm(h, p["ln1"], cfg.norm_eps)
+    o, kp, vp = L.paged_attention_decode(p["attn"], hn, cfg, k_pages,
+                                         v_pages, block_table, pos,
+                                         page_size)
+    h = h + o
+    h = h + L.mlp_apply(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps))
+    return x + h, kp, vp
 
 
 def n_attn_invocations(cfg: ModelConfig) -> int:
@@ -364,6 +428,40 @@ def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {"layers": layer_caches, "pos": pos0}
 
 
+def lm_init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
+                        page_size: int, dtype=jnp.bfloat16, kv_dtype=None):
+    """The continuous-batching cache with the attention KV PAGED
+    (serve/pages.py): instead of a dense ``[*, n_slots, max_len, KV, hd]``
+    row per slot, all slots share a pool of ``n_pages`` fixed-size pages
+    indexed through per-slot block tables (kept by the scheduler, passed
+    to the step as a traced argument).  ``kv_dtype`` applies to the KV
+    pages only — int8-family storage composes with any SEFP weight width
+    (tests/test_kv8_cache.py); recurrent state keeps ``dtype``.
+
+    dense/moe/vlm : {"pages": {"k","v" [L, n_pages, ps, KV, hd]}, "pos"}
+    hybrid        : Mamba2 state dense per-slot + shared-attention pages
+                    stacked over the ``n_attn_invocations``
+    rwkv          : no attention KV exists — the dense per-slot cache is
+                    returned unchanged (nothing to page)."""
+    kv_dtype = dtype if kv_dtype is None else kv_dtype
+    pos0 = jnp.zeros((n_slots,), jnp.int32)
+
+    def pages(stack: int):
+        shape = (stack, n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, kv_dtype),
+                "v": jnp.zeros(shape, kv_dtype)}
+
+    if cfg.family == "rwkv":
+        return lm_init_cache(cfg, n_slots, 0, dtype, per_slot=True)
+    if cfg.family == "hybrid":
+        def one_layer(_):
+            return M2.mamba2_init_cache(cfg, n_slots, dtype=dtype)
+        layer_caches = jax.vmap(one_layer)(jnp.arange(cfg.n_layers))
+        return {"layers": layer_caches,
+                "pages": pages(n_attn_invocations(cfg)), "pos": pos0}
+    return {"pages": pages(cfg.n_layers), "pos": pos0}
+
+
 # -- decode (one token) --------------------------------------------------------
 
 def lm_decode_hidden(params, x_emb, cache, cfg: ModelConfig, resolve=None,
@@ -446,6 +544,113 @@ def lm_decode_hidden(params, x_emb, cache, cfg: ModelConfig, resolve=None,
                                        unroll=layer_unroll)
     h = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
     return h, {**cache, "layers": new_layer_caches, "pos": pos + 1}
+
+
+def lm_decode_hidden_paged(params, x_emb, cache, block_table,
+                           cfg: ModelConfig, resolve=None,
+                           layer_unroll: int = 1, page_size: int = 16):
+    """``lm_decode_hidden`` over the paged continuous cache
+    (``lm_init_paged_cache``): per-slot positions route each row's KV
+    read/write through its block-table row.  rwkv has no attention KV, so
+    its dense path is reused with the block table ignored."""
+    if cfg.family == "rwkv":
+        return lm_decode_hidden(params, x_emb, cache, cfg, resolve=resolve,
+                                layer_unroll=layer_unroll)
+    pos = cache["pos"]
+    if cfg.family == "hybrid":
+        emb0 = x_emb
+        nshared = cfg.n_shared_attn_blocks
+        x = x_emb
+        new_layer_caches = []
+        new_kp, new_vp = [], []
+        seg_bounds = list(range(0, cfg.n_layers, cfg.attn_every))
+        for inv_idx, start in enumerate(seg_bounds):
+            end = min(start + cfg.attn_every, cfg.n_layers)
+            seg = jax.tree_util.tree_map(lambda a: a[start:end],
+                                         params["layers"])
+            seg_cache = jax.tree_util.tree_map(lambda a: a[start:end],
+                                               cache["layers"])
+
+            def seg_layer(x, inp):
+                lp, lcache = inp
+                lp = _resolve(resolve, lp)
+                h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+                o, new_lcache = M2.mamba2_decode(lp["mamba"], h, lcache, cfg)
+                return x + o, new_lcache
+
+            sp = _resolve(resolve, jax.tree_util.tree_map(
+                lambda a, i=inv_idx % nshared: a[i], params["shared"]))
+            x, kp, vp = hybrid_shared_block_decode_paged(
+                sp, x, emb0, cache["pages"]["k"][inv_idx],
+                cache["pages"]["v"][inv_idx], block_table, cfg, pos,
+                page_size)
+            new_kp.append(kp)
+            new_vp.append(vp)
+            x, new_seg_cache = lax.scan(seg_layer, x, (seg, seg_cache),
+                                        unroll=layer_unroll)
+            new_layer_caches.append(new_seg_cache)
+        new_cache = {
+            "layers": jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *new_layer_caches),
+            "pages": {"k": jnp.stack(new_kp, 0), "v": jnp.stack(new_vp, 0)},
+            "pos": pos + 1,
+        }
+        return L.rmsnorm(x, params["ln_f"], cfg.norm_eps), new_cache
+
+    def body(x, inp):
+        lp, (kp, vp) = inp
+        x, kp, vp = attn_layer_decode_paged(_resolve(resolve, lp), x, kp,
+                                            vp, block_table, cfg, pos,
+                                            page_size)
+        return x, (kp, vp)
+
+    x, (new_kp, new_vp) = lax.scan(
+        body, x_emb,
+        (params["layers"], (cache["pages"]["k"], cache["pages"]["v"])),
+        unroll=layer_unroll)
+    h = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return h, {**cache, "pages": {"k": new_kp, "v": new_vp},
+               "pos": pos + 1}
+
+
+def lm_prefill_paged_hidden(params, x_emb, pages, block_table, start,
+                            cfg: ModelConfig, resolve=None,
+                            page_size: int = 16):
+    """One CHUNK of a paged prefill for the pure-attention families
+    (dense/moe/vlm): x_emb ``[1, C, d]`` at global positions ``start +
+    [0, C)``, attending earlier positions through the block-table view
+    (reused prefix pages and previously-written chunks alike), then ONE
+    scatter commits the chunk's k/v into the pages.  Returns
+    (hidden [1, C, d], new_pages).  Recurrent families cannot skip or
+    chunk their sequential state and go through the whole-prefill +
+    scatter path instead (serve/slots.py)."""
+    if cfg.family in ("rwkv", "hybrid"):
+        raise NotImplementedError(
+            "chunked paged prefill requires a position-indexed cache; "
+            f"family {cfg.family!r} carries recurrent state — use "
+            "lm_prefill_hidden + install_prefill_pages")
+    B, C, _ = x_emb.shape
+    positions = start + jnp.arange(C, dtype=jnp.int32)[None, :]
+
+    def body(x, inp):
+        lp, (kp, vp) = inp
+        x, k, v = attn_layer_prefill_paged(
+            _resolve(resolve, lp), x, kp, vp, block_table, start, cfg,
+            page_size, positions)
+        return x, (k, v)
+
+    x, (k_all, v_all) = lax.scan(
+        body, x_emb, (params["layers"], (pages["k"], pages["v"])))
+    pos_arr = start + jnp.arange(C, dtype=jnp.int32)
+    pg = block_table[pos_arr // page_size]
+    off = pos_arr % page_size
+    new_pages = {
+        "k": pages["k"].at[:, pg, off].set(
+            k_all[:, 0].astype(pages["k"].dtype)),
+        "v": pages["v"].at[:, pg, off].set(
+            v_all[:, 0].astype(pages["v"].dtype)),
+    }
+    return L.rmsnorm(x, params["ln_f"], cfg.norm_eps), new_pages
 
 
 # -- prefill (sequence -> cache) ----------------------------------------------

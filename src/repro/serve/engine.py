@@ -92,6 +92,7 @@ class SwitchableServer:
         self.max_len = max_len
         self.cache_dtype = cache_dtype
         self.kernel_backend = kernel_backend
+        self.layer_unroll = layer_unroll
         # the single multi-precision master: packed once here from fp32, or
         # adopted pre-packed (the artifact path — no O(params) pack pass)
         self.master = master if master is not None else \
@@ -312,8 +313,14 @@ class SwitchableServer:
         (DESIGN.md §12) pass through as keywords: ``max_queue`` (bounded
         queue + QueueFull backpressure), ``queue_ttl``, per-request
         deadlines via ``submit``, ``repetition_limit``, and ``faults``
-        (repro/serve/faults.py injectors).  Shares this server's compiled
-        prefill/decode executables and packed master."""
+        (repro/serve/faults.py injectors).  The attention KV cache is
+        PAGED (repro/serve/pages.py): ``page_size`` / ``n_pages`` size the
+        page pool, ``prefill_chunk`` splits long prefills into chunks
+        interleaved with decode steps, ``prefix_cache=False`` disables
+        cross-request prompt-prefix KV reuse, and ``kv_dtype`` selects the
+        page storage dtype (e.g. ``jnp.float8_e4m3fn`` for the int8-class
+        KV cache — a tolerance regime, not bitwise).  Shares this server's
+        compiled prefill/decode executables and packed master."""
         from repro.serve.scheduler import ContinuousScheduler
         return ContinuousScheduler(self, slots=slots,
                                    width_policy=width_policy,

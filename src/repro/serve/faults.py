@@ -47,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.serve.slots import _is_pos
+from repro.serve.slots import _is_pages, _is_pos
 
 
 class FaultInjector:
@@ -88,18 +88,21 @@ class NaNLogitsFault(FaultInjector):
                                "kind": "nan-logits"})
 
 
-def _corrupt_row(cache, idx: int) -> tuple:
-    """OR a quiet-NaN bit pattern into row ``idx`` of every floating cache
-    leaf, at sequence position 0 (always written by prefill, so the NaN
-    sits where attention *will* read it — corrupting unwritten tail
-    positions would be masked out and never detected).  Returns
+def _corrupt_row(cache, idx: int, page: Optional[int] = None) -> tuple:
+    """OR a quiet-NaN bit pattern into slot ``idx``'s cache state.  Dense
+    per-slot leaves (recurrent Mamba2/RWKV6 state) are hit at row ``idx``;
+    with ``page`` set, the PAGED attention KV is corrupted *through the
+    block table* — at offset 0 of physical page ``page`` in every stacked
+    pages leaf (page offsets are written by prefill, so the NaN sits where
+    attention *will* read it — corrupting unwritten tail positions would
+    be masked out and never detected).  Returns
     (new_cache, n_leaves_corrupted).  Bit-level corruption (not value
     assignment) is the point: this models a radiation/DRAM-style flip that
     lands in cache bytes, and the quiet-NaN pattern guarantees the
     corruption *propagates* to the logits instead of denormalizing away.
-    Non-float leaves (int8 KV) are left alone — their corruption stays
-    finite and is a silent-accuracy fault outside the quarantine's
-    detection model."""
+    Non-float leaves (f8 pages under kv_dtype="int8") are left alone —
+    their corruption stays finite and is a silent-accuracy fault outside
+    the quarantine's detection model."""
     nan_bits = {"bfloat16": (jnp.uint16, 0x7FC0),
                 "float32": (jnp.uint32, 0x7FC00000),
                 "float16": (jnp.uint16, 0x7E00)}
@@ -108,12 +111,19 @@ def _corrupt_row(cache, idx: int) -> tuple:
 
     def cor(path, leaf):
         nonlocal n_hit
+        paged = _is_pages(path)
         if _is_pos(path) or leaf.dtype.name not in nan_bits:
             return leaf
+        if paged:
+            if page is None:
+                return leaf
+            # pages leaves are [L, n_pages, page_size, KV, hd]
+            ix = (slice(None), page, 0)
+        else:
+            ix = ((slice(None), idx, 0) if leaf.ndim >= 3
+                  else (slice(None), idx))
         utype, pattern = nan_bits[leaf.dtype.name]
         u = lax.bitcast_convert_type(leaf, utype)
-        ix = ((slice(None), idx, 0) if leaf.ndim >= 3
-              else (slice(None), idx))
         u = u.at[ix].set(u[ix] | jnp.asarray(pattern, utype))
         n_hit += 1
         return lax.bitcast_convert_type(u, leaf.dtype)
@@ -123,22 +133,47 @@ def _corrupt_row(cache, idx: int) -> tuple:
 
 
 class CacheCorruptionFault(FaultInjector):
-    """Flip NaN bits into slot ``slot``'s cache row at step-clock ``step``
-    — unlike ``NaNLogitsFault`` this corrupts *state*, so detection relies
-    on the corruption actually propagating through the next decode step's
-    attention reads into the logits health check."""
+    """Flip NaN bits into slot ``slot``'s cache state at step-clock
+    ``step`` — unlike ``NaNLogitsFault`` this corrupts *state*, so
+    detection relies on the corruption actually propagating through the
+    next decode step's attention reads into the logits health check.
+
+    Under the paged KV cache the attention corruption goes through the
+    victim's BLOCK TABLE: the first page the victim holds *exclusively*
+    (refcount 1) is hit, never a page shared with other requests through
+    the prefix cache — a radiation flip lands in one request's bytes, and
+    targeting a shared page would (correctly) poison every reader, which
+    is a different scenario than the per-slot quarantine containment this
+    injector exists to test.  Recurrent (dense per-slot) state is hit at
+    the victim's row as before; rwkv has no paged state at all."""
 
     def __init__(self, slot: int, step: int):
         super().__init__()
         self.slot = int(slot)
         self.step = int(step)
 
+    def _victim_page(self, sched) -> Optional[int]:
+        if not getattr(sched, "_paged", False):
+            return None
+        try:
+            slot = sched._table.get(self.slot)
+        except Exception:
+            return None
+        if slot is None:
+            return None
+        for pid in slot.pages:
+            if sched._allocator.ref(pid) == 1:
+                return int(pid)
+        return None
+
     def before_step(self, sched) -> None:
         if sched.clock == self.step:
-            sched._cache, n = _corrupt_row(sched._cache, self.slot)
+            page = self._victim_page(sched)
+            sched._cache, n = _corrupt_row(sched._cache, self.slot,
+                                           page=page)
             self.fired.append({"clock": sched.clock, "slot": self.slot,
                                "kind": "cache-corruption",
-                               "leaves_corrupted": n})
+                               "leaves_corrupted": n, "page": page})
 
 
 class StallFault(FaultInjector):

@@ -174,6 +174,66 @@ def make_master_prefill(cfg: ModelConfig,
     return prefill
 
 
+def make_master_serve_step_paged(cfg: ModelConfig,
+                                 kernel_backend: str | None = None,
+                                 layer_unroll: int | None = None,
+                                 page_size: int = 16):
+    """serve(master, cache, token[B] int32, m int32, block_table
+    int32[B, max_pages]) -> (logits, cache): one continuous decode step
+    against the PAGED KV cache (serve/pages.py) — each row reads/writes
+    its attention KV through its block-table row; the traced-m dequant is
+    identical to the dense step.  rwkv has no attention KV, so its step
+    ignores the block table (one uniform signature for the scheduler)."""
+    if cfg.is_encdec:
+        raise NotImplementedError(
+            "packed-master serving covers the LM families")
+    dt = jnp.bfloat16
+    unroll = _auto_layer_unroll(cfg, layer_unroll)
+
+    def serve(master, cache, token, m, block_table):
+        def resolve(layer_slice):
+            return dequant_master_tree(layer_slice, m, dt)
+
+        x = L.embed(master["embed"], token[:, None], dt)
+        h, cache = T.lm_decode_hidden_paged(
+            master, x, cache, block_table, cfg, resolve=resolve,
+            layer_unroll=unroll, page_size=page_size)
+        logits = master_logits(h, master["unembed"], m, kernel_backend)
+        return logits, cache
+
+    return serve
+
+
+def make_master_prefill_paged(cfg: ModelConfig,
+                              kernel_backend: str | None = None,
+                              page_size: int = 16):
+    """prefill_chunk(master, tokens [1,C], m, pages, block_table
+    int32[max_pages], start) -> (logits, new_pages): one chunk of a paged
+    prefill, writing K/V straight into the shared pages through one slot's
+    block-table row.  ``start`` is traced, so every chunk of every slot at
+    a given chunk length shares one executable; the LAST chunk's logits
+    are the ones the scheduler samples the first token from.  Attention
+    families only (see lm_prefill_paged_hidden)."""
+    if cfg.is_encdec:
+        raise NotImplementedError(
+            "packed-master serving covers the LM families")
+    dt = jnp.bfloat16
+
+    def prefill_chunk(master, tokens, m, pages, block_table, start):
+        def resolve(layer_slice):
+            return dequant_master_tree(layer_slice, m, dt)
+
+        x = L.embed(master["embed"], tokens, dt)
+        h, new_pages = T.lm_prefill_paged_hidden(
+            master, x, pages, block_table, start, cfg, resolve=resolve,
+            page_size=page_size)
+        logits = master_logits(h[:, -1:], master["unembed"], m,
+                               kernel_backend)
+        return logits, new_pages
+
+    return prefill_chunk
+
+
 def master_param_shapes(cfg: ModelConfig, min_size: int = 1 << 16) -> Any:
     """ShapeDtypeStruct tree of the packed serving params (dry-run)."""
     from repro.models import model_zoo as Z

@@ -1,0 +1,224 @@
+"""Paged KV cache: page allocator, block tables and the prompt-prefix
+cache (DESIGN.md §13).
+
+The continuous batcher used to back every slot with a dense cache row of
+``max_len`` positions, so a short chat request reserved as much KV memory
+as a long-document one and capacity was ``n_slots`` regardless of request
+shape.  This module replaces that with block-table paging:
+
+  * the attention KV cache becomes a pool of fixed-size **pages**
+    ``[L, n_pages, page_size, KV, hd]`` shared by every slot;
+  * each slot owns a **block table** row ``int32[max_pages]`` mapping its
+    logical page index (``position // page_size``) to a physical page;
+  * physical page 0 is the **null page**: never allocated, it is where
+    free slots' garbage decode writes land and what unallocated block
+    table entries point at — its contents are never read unmasked;
+  * pages are **ref-counted** so full prompt pages can be shared across
+    requests (prefix reuse): a shared page is read-only by construction —
+    only FULL, immutable pages are ever shared, the partial tail page and
+    every decode page are freshly allocated and exclusive, which is
+    copy-on-write without ever copying.
+
+Only attention KV is paged.  Mamba2/RWKV6 recurrent state is O(1) per
+slot and position-free — it stays dense per-slot (repro/serve/slots.py).
+
+The ``PrefixCache`` maps a chain hash of page-aligned prompt chunks to a
+page id.  The hash is keyed on the **prefill width** as well as the
+tokens: SEFP serves every width from one master, so the same prompt
+prefilled at m=8 and m=4 produces different K/V bytes — reusing across
+widths would silently break the lockstep-oracle bitwise property the
+scheduler guarantees.  The cache holds one reference per cached page;
+eviction is LRU over entries whose pages are otherwise unreferenced, run
+on demand when an admission falls short of pages.
+"""
+
+from __future__ import annotations
+
+import collections
+import hashlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class PageBudgetExceeded(RuntimeError):
+    """An allocation asked for more free pages than the pool has."""
+
+
+class PageAllocator:
+    """Host-side free list + per-page reference counts over ``n_pages``
+    physical pages.  Page 0 is reserved as the null page (never handed
+    out); ``high_water`` tracks the peak pages in use — the number a
+    static provisioning of this workload would have needed."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError(f"need >= 2 pages (one is the null page), "
+                             f"got {n_pages}")
+        self.n_pages = int(n_pages)
+        # LIFO free list: recently freed (already-scrubbed) pages are
+        # reused first, keeping the touched working set small.
+        self._free: List[int] = list(range(self.n_pages - 1, 0, -1))
+        self._ref = np.zeros((self.n_pages,), np.int32)
+        self.high_water = 0
+
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - 1 - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        """Take ``n`` pages off the free list with refcount 1 each."""
+        if n > len(self._free):
+            raise PageBudgetExceeded(
+                f"asked for {n} pages, {len(self._free)} free "
+                f"(pool {self.n_pages - 1})")
+        out = [self._free.pop() for _ in range(n)]
+        for p in out:
+            self._ref[p] = 1
+        self.high_water = max(self.high_water, self.pages_in_use)
+        return out
+
+    def ref(self, pid: int) -> int:
+        return int(self._ref[pid])
+
+    def incref(self, pid: int) -> None:
+        if pid == 0 or self._ref[pid] <= 0:
+            raise ValueError(f"incref on unallocated page {pid}")
+        self._ref[pid] += 1
+
+    def decref(self, pid: int) -> bool:
+        """Drop one reference; returns True when the page was freed (the
+        caller is responsible for scrubbing freed pages on device)."""
+        if pid == 0 or self._ref[pid] <= 0:
+            raise ValueError(f"decref on unallocated page {pid}")
+        self._ref[pid] -= 1
+        if self._ref[pid] == 0:
+            self._free.append(pid)
+            return True
+        return False
+
+
+def prefix_keys(tokens: np.ndarray, page_size: int, m: int) -> List[str]:
+    """Chain hash of the prompt's page-aligned chunks at prefill width
+    ``m``: key ``i`` commits tokens ``[0, (i+1)*page_size)`` — a page is
+    only reusable when its entire causal history matches, which the chain
+    structure encodes for free.  Returns one key per FULL page."""
+    n_full = len(tokens) // page_size
+    keys = []
+    h = hashlib.blake2b(f"m={int(m)}|ps={int(page_size)}".encode(),
+                        digest_size=16)
+    for i in range(n_full):
+        chunk = np.asarray(tokens[i * page_size:(i + 1) * page_size],
+                           np.int64)
+        h = hashlib.blake2b(h.digest() + chunk.tobytes(), digest_size=16)
+        keys.append(h.hexdigest())
+    return keys
+
+
+class PrefixCache:
+    """LRU map from a prefix chain-hash key to a physical page id.  Each
+    entry holds ONE reference on its page (taken at ``insert``, dropped at
+    eviction/purge), so cached pages survive their producer's retirement
+    and co-exist with any number of active readers."""
+
+    def __init__(self, allocator: PageAllocator):
+        self._alloc = allocator
+        self._entries: "collections.OrderedDict[str, int]" = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.inserted = 0
+        self.evicted = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, keys: List[str]) -> List[int]:
+        """Longest consecutive run of cached pages for ``keys`` (a chain —
+        a miss at i invalidates every later key).  Returns the hit pages
+        WITHOUT taking references; the caller increfs the ones it adopts."""
+        run: List[int] = []
+        for k in keys:
+            pid = self._entries.get(k)
+            if pid is None:
+                self.misses += 1
+                break
+            self._entries.move_to_end(k)
+            self.hits += 1
+            run.append(pid)
+        return run
+
+    def insert(self, key: str, pid: int) -> bool:
+        """Cache ``pid`` under ``key`` (incref'd); no-op if the key is
+        already cached (first producer wins — both copies are bitwise
+        identical by the key construction).  Returns True when the entry
+        was newly published (the producer tracks these for poisoned-retire
+        purging)."""
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return False
+        self._alloc.incref(pid)
+        self._entries[key] = pid
+        self.inserted += 1
+        return True
+
+    def purge_pages(self, pids) -> List[int]:
+        """Drop every entry whose page is in ``pids`` (poisoned-producer
+        hygiene: a quarantined slot's own pages must never serve future
+        requests).  Returns the pages actually freed (for scrubbing)."""
+        pids = set(int(p) for p in pids)
+        doomed = [k for k, p in self._entries.items() if p in pids]
+        freed: List[int] = []
+        for k in doomed:
+            pid = self._entries.pop(k)
+            if self._alloc.decref(pid):
+                freed.append(pid)
+        self.evicted += len(doomed)
+        return freed
+
+    def evict_for(self, n_needed: int) -> List[int]:
+        """Evict LRU entries whose pages have no other reference until
+        ``n_needed`` pages are free (or the cache runs out of evictable
+        entries).  Returns the page ids actually freed (for scrubbing)."""
+        freed: List[int] = []
+        if self._alloc.can_alloc(n_needed):
+            return freed
+        for k in list(self._entries):
+            pid = self._entries[k]
+            if self._alloc.ref(pid) > 1:
+                continue  # an active slot still reads this page
+            del self._entries[k]
+            self.evicted += 1
+            if self._alloc.decref(pid):
+                freed.append(pid)
+            if self._alloc.can_alloc(n_needed):
+                break
+        return freed
+
+    @property
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses, "inserted": self.inserted,
+                "evicted": self.evicted}
+
+
+def pages_for(n_positions: int, page_size: int) -> int:
+    """Pages needed to hold ``n_positions`` KV positions."""
+    return -(-int(n_positions) // int(page_size))
+
+
+def request_pages(prompt_len: int, max_new: int, page_size: int) -> int:
+    """Total logical pages a request can touch: prefill writes positions
+    ``[0, prompt_len)`` and decode steps write up to position
+    ``prompt_len + max_new - 2`` (the last sampled token is never fed
+    back), so the page budget covers ``prompt_len + max_new - 1``
+    positions.  ``max_new == 0`` never reaches a slot (scheduler fast
+    path)."""
+    return pages_for(prompt_len + max(int(max_new), 1) - 1, page_size)

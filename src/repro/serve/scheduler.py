@@ -3,12 +3,45 @@ an overload/failure resilience layer (DESIGN.md §11–§12).
 
 The lockstep engine (repro/serve/engine.py) serves equal-length batches in
 lockstep: one scalar position, no EOS exit, and a new request waits for the
-whole batch.  This module turns the same compiled executables into a
-continuous batcher: requests enter a FIFO queue, are admitted into free
-slots of a shared per-slot cache (repro/serve/slots.py) via batch-1
-prefill, decode together in ONE jitted step with per-slot positions,
-sampling params and PRNG streams, and leave on EOS or ``max_new`` — their
-slot is re-admitted on the very next step.
+whole batch.  This module turns the same packed master into a continuous
+batcher: requests enter a FIFO queue, are admitted into free slots, decode
+together in ONE jitted step with per-slot positions, sampling params and
+PRNG streams, and leave on EOS or ``max_new`` — their slot is re-admitted
+on the very next step.
+
+The attention KV cache is PAGED (repro/serve/pages.py, DESIGN.md §13):
+slots share a pool of fixed-size pages addressed through per-slot block
+tables, so admission is gated on the *page* budget a request actually
+needs (prompt + max_new positions), not on a dense ``max_len`` row.
+Three scheduler behaviours ride on the paging:
+
+  * **chunked prefill** — with ``prefill_chunk`` set, a long prompt is
+    prefilled ``prefill_chunk`` tokens at a time, one chunk per scheduler
+    step, *in the same step as* the batched decode — the decode clock
+    never stalls behind a long document (``decode_stall_steps`` stays 0
+    by construction).  A prefilling slot's block-table row is installed
+    into the decode step's table only when its first token is sampled,
+    so its pages are invisible to (and untouchable by) the decode step
+    until the prefill commits.
+  * **prefix reuse** — prompt prefixes are hashed page-aligned (chained,
+    keyed on the prefill width: K/V bytes differ per SEFP width) and full
+    prompt pages are published to a ref-counted PrefixCache; a later
+    request whose prompt shares the prefix adopts the hit pages and skips
+    their prefill compute entirely.  Shared pages are read-only by
+    construction — only FULL immutable pages are published, the partial
+    tail and all decode pages are freshly allocated per slot (copy-on-
+    write without copying); the last prompt token is always prefilled in
+    an exclusive page so first-token logits never depend on the cache.
+  * **page-granular commit** — the decode step's masked commit restores
+    only the one (page, offset) cell each non-committed row wrote
+    (``select_paged``), keeping the quarantine/stall discipline of the
+    dense batcher at page granularity.
+
+Mamba2/RWKV6 recurrent state is O(1) per slot and position-free — it
+stays dense per-slot; paging applies to attention KV only (the rwkv
+family runs the uniform paged step signature with an ignored block
+table; hybrid's attention KV is paged via a whole-prompt prefill
+installed into pages, without chunking/reuse).
 
 Precision is where this batcher differs from a vanilla one.  Each request
 carries a class/width plan (PrecisionPolicy), and because SEFP precision
@@ -89,10 +122,32 @@ from jax import lax
 from repro.core.packed import MASTER_M
 from repro.policy import PrecisionPolicy
 from repro.serve import errors as errors_lib
+from repro.serve import packed_step as packed_step_lib
+from repro.serve import pages as pages_lib
 from repro.serve import slots as slots_lib
 from repro.serve.errors import BadDeadline, QueueFull, UnknownRequestClass
+from repro.serve.pages import PageAllocator, PrefixCache
 from repro.serve.sampler import sample_token, sample_token_vec
 from repro.serve.slots import FinishedRequest, Request, SlotState, SlotTable
+
+KV_DTYPES = {"bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
+             "int8": jnp.float8_e4m3fn, "f8": jnp.float8_e4m3fn,
+             "kv8": jnp.float8_e4m3fn, "float8_e4m3fn": jnp.float8_e4m3fn}
+
+
+def resolve_kv_dtype(kv_dtype, default):
+    """Page storage dtype: None -> the server's cache dtype; strings name
+    the supported storage formats ("int8"/"f8"/"kv8" all select the f8
+    E4M3 byte format — the int8-class KV cache, DESIGN.md §10)."""
+    if kv_dtype is None:
+        return default
+    if isinstance(kv_dtype, str):
+        try:
+            return KV_DTYPES[kv_dtype.lower()]
+        except KeyError:
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r}; named "
+                             f"formats: {sorted(KV_DTYPES)}") from None
+    return jnp.dtype(kv_dtype).type
 
 
 # ---------------------------------------------------------------------------
@@ -353,12 +408,14 @@ def make_width_policy(spec) -> WidthPolicy:
 # the jitted continuous decode step
 # ---------------------------------------------------------------------------
 
-def _make_continuous_step(serve_step):
-    """One continuous decode step: batched serve at traced width m, per-slot
-    sampling, masked commit, traced per-slot health.  Non-committed rows
-    (stalled width groups, free slots, quarantined slots) keep
-    token/cache/PRNG state unchanged, so their streams are exactly as if
-    the step never ran for them.
+def _make_continuous_step(serve_step, page_size: int):
+    """One continuous decode step against the paged cache: batched serve at
+    traced width m through per-slot block tables, per-slot sampling,
+    page-granular masked commit, traced per-slot health.  Non-committed
+    rows (stalled width groups, free slots, quarantined slots) keep
+    token/cache/PRNG state unchanged — ``select_paged`` restores exactly
+    the one (page, offset) cell each such row wrote — so their streams are
+    exactly as if the step never ran for them.
 
     Health (§12): ``ok[b] = isfinite(logits[b]).all()`` is computed
     in-graph — logits never visit the host, so NaN/Inf detection must live
@@ -374,16 +431,20 @@ def _make_continuous_step(serve_step):
     degraded slo-degrade, and under width-rr whenever a single width group
     is active — the cache select is skipped via a ``lax.cond`` that only
     falls back to the masked select when a committed row is unhealthy.
-    Free slots then do take the step's garbage writes, which is safe by
-    the admission contract: ``write_slot`` overwrites a row's every leaf
-    (KV, recurrent state, pos) before the slot is used again — the same
-    contract that makes a quarantined row's NaN-laden cache re-admittable
-    — and row independence keeps garbage rows from perturbing active ones
-    (token/PRNG state is still mask-gated)."""
+    Free slots then do take the step's garbage writes, which is safe
+    under paging because a free row's block-table row is all-zero: its
+    write lands on the NULL page (never read unmasked, scrubbed-to-finite
+    contents) and row independence keeps garbage rows from perturbing
+    active ones (token/PRNG state is still mask-gated).  The scheduler
+    forces ``commit_all=False`` while ANY slot is mid-chunked-prefill —
+    a prefilling row's garbage write must be restored even though the row
+    points at the null page, because its stale ``pos`` is meaningless
+    (the restore is what keeps the invariant local instead of a cross-
+    layer proof obligation)."""
 
-    def step(master, cache, toks, m, keys, temps, topks, mask, poison,
-             commit_all):
-        logits, new_cache = serve_step(master, cache, toks, m)
+    def step(master, cache, block_table, toks, m, keys, temps, topks,
+             mask, poison, commit_all):
+        logits, new_cache = serve_step(master, cache, toks, m, block_table)
         logits = jnp.where(poison[:, None],
                            jnp.asarray(jnp.nan, logits.dtype), logits)
         ok = jnp.all(jnp.isfinite(logits), axis=-1)
@@ -391,10 +452,12 @@ def _make_continuous_step(serve_step):
         if commit_all:
             new_cache = lax.cond(
                 jnp.any(mask & ~ok),
-                lambda nc: slots_lib.select_slots(eff, nc, cache),
+                lambda nc: slots_lib.select_paged(eff, nc, cache,
+                                                  block_table, page_size),
                 lambda nc: nc, new_cache)
         else:
-            new_cache = slots_lib.select_slots(eff, new_cache, cache)
+            new_cache = slots_lib.select_paged(eff, new_cache, cache,
+                                               block_table, page_size)
         pair = jax.vmap(jax.random.split)(keys)        # [B, 2, 2]
         new_keys, subs = pair[:, 0], pair[:, 1]
         new_keys = jnp.where(eff[:, None], new_keys, keys)
@@ -452,6 +515,15 @@ class ContinuousScheduler:
         non-EOS token this many times in a row (status ``poisoned``).
       * ``faults`` — fault injectors (repro/serve/faults.py), also
         addable later via ``inject()``.
+
+    Paged-KV knobs (DESIGN.md §13): ``page_size`` (must divide the server
+    max_len), ``n_pages`` (pool size incl. the null page; default sizes
+    every slot for a max_len request), ``prefill_chunk`` (None = whole
+    prompt in one chunk at admission; an int splits long prefills into
+    chunks interleaved with decode), ``kv_dtype`` ("bf16" or
+    "int8"/"f8"/"kv8" for byte-wide pages — a tolerance regime: the
+    bitwise oracle property holds for bf16 pages), and
+    ``prefix_cache=False`` to disable cross-request prefix KV reuse.
     """
 
     def __init__(self, server, slots: int = 8, width_policy="max-width",
@@ -461,7 +533,12 @@ class ContinuousScheduler:
                  max_queue: Optional[int] = None,
                  queue_ttl: Optional[int] = None,
                  repetition_limit: Optional[int] = None,
-                 faults: Optional[list] = None):
+                 faults: Optional[list] = None,
+                 page_size: int = 16,
+                 n_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 kv_dtype=None,
+                 prefix_cache: bool = True):
         self._srv = server
         self.cfg = server.cfg
         self.n_slots = int(slots)
@@ -485,6 +562,47 @@ class ContinuousScheduler:
         self.repetition_limit = repetition_limit
         self._faults = list(faults or [])
 
+        # -- paged KV geometry (DESIGN.md §13) -----------------------------
+        # rwkv has no attention KV at all; hybrid pages its attention KV
+        # but prefills whole (no chunking/reuse: its recurrent state cannot
+        # be checkpointed mid-prompt at page granularity).
+        self._paged = self.cfg.family != "rwkv"
+        self._chunkable = self.cfg.family in ("dense", "moe", "vlm")
+        self.page_size = int(page_size)
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if self._paged and self.max_len % self.page_size != 0:
+            # the decode gather reads a [max_pages * page_size] view per
+            # row; page_size | max_len keeps that view == max_len, which
+            # is what makes the paged step bitwise-equal to the dense
+            # lockstep oracle (no extra padded kv columns)
+            raise ValueError(
+                f"page_size {self.page_size} must divide the server "
+                f"max_len {self.max_len}")
+        self.max_pages_per_slot = (self.max_len // self.page_size
+                                   if self._paged else 1)
+        if n_pages is None:
+            # every slot can hold a full max_len request, plus the null page
+            n_pages = self.n_slots * self.max_pages_per_slot + 1
+        self.n_pages = int(n_pages)
+        if prefill_chunk is not None:
+            prefill_chunk = int(prefill_chunk)
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got "
+                                 f"{prefill_chunk}")
+        self.prefill_chunk = prefill_chunk
+        self.kv_dtype = resolve_kv_dtype(kv_dtype, server.cache_dtype)
+        self._allocator = (PageAllocator(self.n_pages) if self._paged
+                           else None)
+        self._prefix = (PrefixCache(self._allocator)
+                        if self._paged and self._chunkable and prefix_cache
+                        else None)
+        # host-side block tables; the device copy is rebuilt lazily after
+        # any row mutation (admission install / retire)
+        self._block_table = np.zeros(
+            (self.n_slots, self.max_pages_per_slot), np.int32)
+        self._bt_dev = None
+
         self._table = SlotTable(self.n_slots)
         self._queue: collections.deque = collections.deque()
         self._finished: Dict[int, FinishedRequest] = {}
@@ -493,29 +611,52 @@ class ContinuousScheduler:
         self._last_step_seconds: Optional[float] = None
 
         # device-side per-slot state
-        self._cache = slots_lib.init_slot_cache(
-            self.cfg, self.n_slots, self.max_len, server.cache_dtype)
+        self._cache = slots_lib.init_paged_slot_cache(
+            self.cfg, self.n_slots, self.n_pages, self.page_size,
+            server.cache_dtype, kv_dtype=self.kv_dtype)
         self._tok = jnp.zeros((self.n_slots,), jnp.int32)
         self._keys = jnp.zeros((self.n_slots, 2), jnp.uint32)
         self._temps = np.zeros((self.n_slots,), np.float32)
         self._topks = np.zeros((self.n_slots,), np.int32)
         self._no_poison = jnp.zeros((self.n_slots,), bool)
-        # the jitted step/write executables are cached ON the server, so
-        # constructing a fresh scheduler over the same server (new workload,
-        # different width policy) reuses the compiled code — scheduler state
-        # is host data, the executables are shape-keyed only.
-        if getattr(server, "_continuous_step_slots", None) != self.n_slots \
-                or not hasattr(server, "_continuous_step_fn"):
-            server._continuous_step_fn = _make_continuous_step(server._serve)
+        # the jitted step/prefill/write executables are cached ON the
+        # server, so constructing a fresh scheduler over the same server
+        # (new workload, different width policy) reuses the compiled code —
+        # scheduler state is host data, the executables are shape-keyed
+        # (and here page_size-keyed: it is baked into the paged closures).
+        if getattr(server, "_paged_exec_key", None) != self.page_size:
+            serve_paged = packed_step_lib.make_master_serve_step_paged(
+                self.cfg, server.kernel_backend, server.layer_unroll,
+                page_size=self.page_size)
+            server._continuous_step_fn = _make_continuous_step(
+                serve_paged, self.page_size)
+            server._paged_prefill_fn = jax.jit(
+                packed_step_lib.make_master_prefill_paged(
+                    self.cfg, server.kernel_backend,
+                    page_size=self.page_size))
+            server._install_pages_fn = jax.jit(
+                slots_lib.install_prefill_pages,
+                static_argnames=("plen", "page_size"))
             server._write_slot_fn = jax.jit(slots_lib.write_slot)
-            server._continuous_step_slots = self.n_slots
+            server._scrub_pages_fn = jax.jit(slots_lib.scrub_pages)
+            server._set_pos_fn = jax.jit(
+                lambda cache, idx, value:
+                {**cache, "pos": cache["pos"].at[idx].set(value)})
+            server._paged_exec_key = self.page_size
         self._step_fn = server._continuous_step_fn
+        self._prefill_chunk_fn = server._paged_prefill_fn
+        self._install_pages = server._install_pages_fn
         self._write_slot = server._write_slot_fn
+        self._scrub_pages_fn = server._scrub_pages_fn
+        self._set_pos = server._set_pos_fn
 
         self._counts = {"steps": 0, "committed_tokens": 0,
                         "slot_steps_active": 0, "slot_steps_committed": 0,
                         "admitted": 0, "finished": 0, "rejected": 0,
                         "evicted": 0, "deadline_missed": 0, "poisoned": 0,
+                        "prefill_chunks": 0, "prefill_only_steps": 0,
+                        "decode_stall_steps": 0, "reused_pages": 0,
+                        "page_blocked_admissions": 0,
                         "width_steps": collections.Counter()}
 
     # -- fault injection ----------------------------------------------------
@@ -551,6 +692,16 @@ class ContinuousScheduler:
             raise ValueError(
                 f"prompt_len {prompt.size} + max_new {max_new} exceeds the "
                 f"server max_len {self.max_len}")
+        if self._paged and max_new > 0:
+            need = pages_lib.request_pages(prompt.size, max_new,
+                                           self.page_size)
+            if need > self.n_pages - 1:
+                # would never fit even with every page free: rejecting at
+                # submit prevents a permanent head-of-line deadlock
+                raise ValueError(
+                    f"request needs {need} KV pages but the pool has "
+                    f"{self.n_pages - 1} (page_size {self.page_size}) — "
+                    f"raise n_pages or shrink the request")
         if deadline is not None:
             deadline = int(deadline)
             if deadline < 1:
@@ -653,7 +804,110 @@ class ContinuousScheduler:
                 keep.append((req, schedule))
         self._queue = keep
 
-    def _admit_one(self, req: Request, schedule, idx: int) -> None:
+    def _bt(self):
+        """Device copy of the block tables, rebuilt lazily after host-side
+        row mutations (admission install / retire)."""
+        if self._bt_dev is None:
+            self._bt_dev = jnp.asarray(self._block_table)
+        return self._bt_dev
+
+    def _scrub(self, freed: List[int]) -> None:
+        """Zero freed pages on device so a recycled page's garbage can
+        never alias into a later reader's masked positions as NaN (masked
+        columns are bitwise-neutral only for FINITE garbage).  The index
+        vector is padded with 0 — scrubbing the null page is harmless and
+        keeps one executable per pad width."""
+        if not freed:
+            return
+        width = self.max_pages_per_slot
+        for i in range(0, len(freed), width):
+            batch = freed[i:i + width]
+            idxs = np.zeros((width,), np.int32)
+            idxs[:len(batch)] = batch
+            self._cache = self._scrub_pages_fn(self._cache,
+                                               jnp.asarray(idxs))
+
+    def _finalize_prefill(self, idx: int, logits) -> None:
+        """Prefill finished for slot ``idx``: sample the first token from
+        the last chunk's logits (identical PRNG discipline to the dense
+        admission), commit the slot's position, install its block-table
+        row into the decode step's table, publish its full prompt pages to
+        the prefix cache, and flip the slot to decode phase."""
+        slot = self._table.get(idx)
+        req = slot.req
+        plen = req.prompt.size
+        k0 = jax.random.PRNGKey(req.seed)
+        tok0 = int(sample_token(logits, k0, req.temperature, req.top_k)[0])
+        self._cache = self._set_pos(self._cache, jnp.int32(idx),
+                                    jnp.int32(plen))
+        self._block_table[idx, :] = 0
+        self._block_table[idx, :len(slot.pages)] = slot.pages
+        self._bt_dev = None
+        self._tok = self._tok.at[idx].set(tok0)
+        self._keys = self._keys.at[idx].set(k0)
+        self._temps[idx] = req.temperature
+        self._topks[idx] = req.top_k
+        slot.phase = "decode"
+        slot.prefill_pos = plen
+        slot.emitted.append(tok0)
+        slot.repeat_run = 1
+        if self._prefix is not None:
+            keys = pages_lib.prefix_keys(req.prompt, self.page_size,
+                                         slot.prefill_precision)
+            for i in range(slot.n_reused, len(keys)):
+                if self._prefix.insert(keys[i], slot.pages[i]):
+                    slot.inserted_pages.append(slot.pages[i])
+        done = (tok0 == req.eos_id if req.eos_id is not None
+                else False) or req.max_new <= 1
+        self._emit(req, tok0, done)
+        if done:
+            self._retire(idx, "eos" if (req.eos_id is not None
+                                        and tok0 == req.eos_id)
+                         else "length")
+
+    def _run_prefill_chunk(self, idx: int, chunk: Optional[int]) -> None:
+        """One prefill chunk for slot ``idx`` (``chunk=None`` = the whole
+        remaining prompt); finalizes the slot when the prompt is done.
+        The chunk writes K/V through the slot's OWN block-table row
+        (passed directly — the row is not yet visible to the decode
+        step), attending over the reused prefix pages + everything the
+        slot prefilled so far."""
+        slot = self._table.get(idx)
+        req = slot.req
+        plen = req.prompt.size
+        start = slot.prefill_pos
+        n = plen - start if chunk is None else min(chunk, plen - start)
+        tokens = jnp.asarray(req.prompt[None, start:start + n])
+        row = np.zeros((self.max_pages_per_slot,), np.int32)
+        row[:len(slot.pages)] = slot.pages
+        logits, new_pages = self._prefill_chunk_fn(
+            self._srv.master, tokens, jnp.int32(slot.prefill_precision),
+            self._cache["pages"], jnp.asarray(row), jnp.int32(start))
+        self._cache = {**self._cache, "pages": new_pages}
+        slot.prefill_pos = start + n
+        self._counts["prefill_chunks"] += 1
+        if slot.prefill_pos >= plen:
+            self._finalize_prefill(idx, logits)
+
+    def _advance_prefill(self) -> bool:
+        """Advance the OLDEST-admitted prefilling slot by one chunk (FIFO
+        over chunks keeps first-token order deterministic).  At most one
+        chunk per scheduler step: the decode batch in the same step is
+        what bounds a long document's impact on decode latency."""
+        cands = [(s.admit_step, idx)
+                 for idx, s in self._table.active() if s.phase == "prefill"]
+        if not cands:
+            return False
+        _, idx = min(cands)
+        self._run_prefill_chunk(idx, self.prefill_chunk)
+        return True
+
+    def _any_prefilling(self) -> bool:
+        return any(s.phase == "prefill" for _, s in self._table.active())
+
+    def _admit_dense(self, req: Request, schedule, idx: int) -> None:
+        """rwkv admission: no attention KV to page — the dense whole-prompt
+        prefill + write_slot path, unchanged."""
         pm = schedule[0]
         logits, slot_cache = self._srv._prefill(
             self._srv.master, jnp.asarray(req.prompt[None, :]),
@@ -670,7 +924,6 @@ class ContinuousScheduler:
                           decode_widths=[], prefill_precision=pm,
                           admit_step=self.clock, repeat_run=1)
         self._table.admit(idx, state)
-        self._counts["admitted"] += 1
         done = (tok0 == req.eos_id if req.eos_id is not None
                 else False) or req.max_new <= 1
         self._emit(req, tok0, done)
@@ -678,6 +931,80 @@ class ContinuousScheduler:
             self._retire(idx, "eos" if (req.eos_id is not None
                                         and tok0 == req.eos_id)
                          else "length")
+
+    def _claim_pages(self, req: Request, pm: int):
+        """Reserve the full page budget for ``req`` upfront (prefill +
+        decode — reservation at admission is what makes PageBudgetExceeded
+        impossible mid-request): prefix-cache hits are adopted (incref'd)
+        first, the shortfall is allocated fresh, evicting LRU unreferenced
+        cache entries if needed.  Returns (pages, n_reused) or None when
+        the budget cannot be met — the FIFO head then blocks admission."""
+        plen = req.prompt.size
+        need = pages_lib.request_pages(plen, req.max_new, self.page_size)
+        hits: List[int] = []
+        if self._prefix is not None:
+            # cap: the LAST prompt token always prefills into an exclusive
+            # page, so its logits (-> first token) come from live compute
+            # and a fully-cached prompt still produces them
+            cap = (plen - 1) // self.page_size
+            keys = pages_lib.prefix_keys(req.prompt, self.page_size, pm)
+            hits = self._prefix.lookup(keys[:cap])
+            for p in hits:     # adopt BEFORE evict_for: a hit whose only
+                self._allocator.incref(p)  # ref is the cache must not be
+                                           # evicted out from under us
+        n_fresh = need - len(hits)
+        if not self._allocator.can_alloc(n_fresh):
+            if self._prefix is not None:
+                self._scrub(self._prefix.evict_for(n_fresh))
+            if not self._allocator.can_alloc(n_fresh):
+                freed = [p for p in hits if self._allocator.decref(p)]
+                self._scrub(freed)  # cache entry still holds a ref, so
+                                    # nothing frees in practice
+                self._counts["page_blocked_admissions"] += 1
+                return None
+        pages = hits + self._allocator.alloc(n_fresh)
+        return pages, len(hits)
+
+    def _admit_one(self, req: Request, schedule, idx: int) -> bool:
+        """Admit ``req`` into slot ``idx``; False when the page budget
+        blocks it (the request stays at the queue head)."""
+        if not self._paged:
+            self._admit_dense(req, schedule, idx)
+            self._counts["admitted"] += 1
+            return True
+        pm = schedule[0]
+        claim = self._claim_pages(req, pm)
+        if claim is None:
+            return False
+        pages, n_reused = claim
+        state = SlotState(req=req, schedule=schedule, emitted=[],
+                          decode_widths=[], prefill_precision=pm,
+                          admit_step=self.clock, phase="prefill",
+                          prefill_pos=n_reused * self.page_size,
+                          pages=pages, n_reused=n_reused)
+        self._table.admit(idx, state)
+        self._counts["admitted"] += 1
+        self._counts["reused_pages"] += n_reused
+        if not self._chunkable:
+            # hybrid: whole dense prefill, attention KV scattered into the
+            # slot's pages, recurrent state written dense — then the slot
+            # finalizes immediately (no chunking for recurrent families)
+            plen = req.prompt.size
+            logits, slot_cache = self._srv._prefill(
+                self._srv.master, jnp.asarray(req.prompt[None, :]),
+                jnp.int32(pm), max_len=self.max_len)
+            row = np.zeros((self.max_pages_per_slot,), np.int32)
+            row[:len(pages)] = pages
+            self._cache = self._install_pages(
+                self._cache, slot_cache, jnp.int32(idx), jnp.asarray(row),
+                plen=plen, page_size=self.page_size)
+            self._finalize_prefill(idx, logits)
+        elif self.prefill_chunk is None:
+            # unchunked: the whole remaining prompt (minus reused prefix
+            # pages) is one chunk, run at admission — first token lands
+            # the same step, matching the dense batcher's latency shape
+            self._run_prefill_chunk(idx, None)
+        return True
 
     def _admit(self) -> None:
         while self._queue:
@@ -702,8 +1029,9 @@ class ContinuousScheduler:
             idx = self._table.free_idx()
             if idx is None:
                 return
+            if not self._admit_one(req, schedule, idx):
+                return  # page budget blocks the FIFO head
             self._queue.popleft()
-            self._admit_one(req, schedule, idx)
 
     # -- stepping -----------------------------------------------------------
     def step(self) -> bool:
@@ -718,8 +1046,23 @@ class ContinuousScheduler:
             f.before_step(self)
         self._evict_expired()
         self._admit()
-        wanted = {idx: s.wanted for idx, s in self._table.active()}
+        # one prefill chunk per step, IN THE SAME step as the batched
+        # decode below — a long document's prefill interleaves with the
+        # decode clock instead of stalling it
+        prefilled = self._advance_prefill()
+        wanted = {idx: s.wanted for idx, s in self._table.active()
+                  if s.phase == "decode"}
         if not wanted:
+            if prefilled or self._any_prefilling():
+                # prefill made progress but nobody is decoding yet — the
+                # clock still ticks (deadlines and latency stats count
+                # prefill time)
+                self.clock += 1
+                self._counts["steps"] += 1
+                self._counts["prefill_only_steps"] += 1
+                self._deadline_sweep()
+                self._last_step_seconds = time.perf_counter() - t0
+                return True
             return False
         self._width_policy.observe({
             "clock": self.clock,
@@ -728,7 +1071,8 @@ class ContinuousScheduler:
             "slots": self.n_slots,
             "step_seconds": self._last_step_seconds,
             "floors": {idx: s.req.min_width
-                       for idx, s in self._table.active()},
+                       for idx, s in self._table.active()
+                       if s.phase == "decode"},
             "widths": self._policy.widths,
         })
         m, commit = self._width_policy.select(wanted)
@@ -738,11 +1082,16 @@ class ContinuousScheduler:
         for f in self._faults:
             f.poison_slots(self, poison)
         nxt, cache, keys, ok = self._step_fn(
-            self._srv.master, self._cache, self._tok, jnp.int32(m),
+            self._srv.master, self._cache, self._bt(), self._tok,
+            jnp.int32(m),
             self._keys, jnp.asarray(self._temps), jnp.asarray(self._topks),
             jnp.asarray(mask),
             jnp.asarray(poison) if poison.any() else self._no_poison,
-            commit_all=len(commit) == len(wanted))
+            # the fast path must stay off while any slot prefills: its
+            # garbage decode write needs the masked restore (see
+            # _make_continuous_step)
+            commit_all=(len(commit) == len(wanted)
+                        and not self._any_prefilling()))
         self._cache, self._keys, self._tok = cache, keys, nxt
         # ONE host round-trip per continuous step (tokens + health)
         toks, ok = jax.device_get((nxt, ok))
@@ -778,15 +1127,18 @@ class ContinuousScheduler:
             self._emit(slot.req, t, done)
             if done:
                 self._retire(idx, "eos" if hit_eos else "length")
-        # deadline sweep over the slots still decoding: a request whose
-        # step budget is spent retires with its partial tokens
+        self._deadline_sweep()
+        self._last_step_seconds = time.perf_counter() - t0
+        return True
+
+    def _deadline_sweep(self) -> None:
+        """Retire slots (decoding OR still prefilling) whose step budget is
+        spent — partial tokens are kept."""
         for idx, slot in self._table.active():
             dl = slot.req.deadline
             if dl is not None and self.clock - slot.req.submit_step >= dl:
                 self._retire(idx, "deadline", status="deadline")
                 self._counts["deadline_missed"] += 1
-        self._last_step_seconds = time.perf_counter() - t0
-        return True
 
     def drain(self, max_steps: Optional[int] = None
               ) -> Dict[int, FinishedRequest]:
@@ -848,6 +1200,20 @@ class ContinuousScheduler:
         slot = self._table.retire(idx)
         self._temps[idx] = 0.0
         self._topks[idx] = 0
+        if self._paged and slot.pages:
+            freed: List[int] = []
+            if status == "poisoned" and self._prefix is not None \
+                    and slot.inserted_pages:
+                # a quarantined producer's published pages may carry the
+                # corruption — purge them from the prefix cache before
+                # dropping the slot's own references
+                freed.extend(self._prefix.purge_pages(slot.inserted_pages))
+            for pid in slot.pages:
+                if self._allocator.decref(pid):
+                    freed.append(pid)
+            self._block_table[idx, :] = 0
+            self._bt_dev = None
+            self._scrub(freed)
         self._counts["finished"] += 1
         self._finished[slot.req.rid] = FinishedRequest(
             rid=slot.req.rid,
@@ -886,4 +1252,51 @@ class ContinuousScheduler:
             "starvation": self._width_policy.starvation,
             "width_policy": self._width_policy.name,
             "degradation": self._width_policy.degradation,
+            "prefill_chunks": c["prefill_chunks"],
+            "prefill_only_steps": c["prefill_only_steps"],
+            "decode_stall_steps": c["decode_stall_steps"],
+            "pages": self._page_stats(),
         }
+
+    def _page_stats(self) -> Optional[dict]:
+        if not self._paged:
+            return None
+        return {
+            "page_size": self.page_size,
+            "n_pages": self.n_pages,
+            "pages_in_use": self._allocator.pages_in_use,
+            "high_water": self._allocator.high_water,
+            "reused_pages": self._counts["reused_pages"],
+            "page_blocked_admissions":
+                self._counts["page_blocked_admissions"],
+            "prefix_cache": (self._prefix.stats
+                             if self._prefix is not None else None),
+        }
+
+    def memory_report(self) -> dict:
+        """The server's weight-memory report plus the paged KV cache's:
+        bytes per page (across every stacked layer's K and V leaves),
+        pages allocated now / at the high-water mark, and the bytes each
+        implies — the figure the ≥2x concurrency-per-byte claim of the
+        long-context bench is measured against."""
+        rep = dict(self._srv.memory_report())
+        if not self._paged:
+            rep["kv_cache"] = {"paged": False,
+                               "family": self.cfg.family}
+            return rep
+        per_page = sum(int(leaf.nbytes) // self.n_pages
+                       for leaf in jax.tree_util.tree_leaves(
+                           self._cache["pages"]))
+        rep["kv_cache"] = {
+            "paged": True,
+            "page_size": self.page_size,
+            "n_pages": self.n_pages,
+            "kv_dtype": jnp.dtype(self.kv_dtype).name,
+            "bytes_per_page": per_page,
+            "pages_in_use": self._allocator.pages_in_use,
+            "high_water": self._allocator.high_water,
+            "total_bytes": per_page * self.n_pages,
+            "in_use_bytes": per_page * self._allocator.pages_in_use,
+            "high_water_bytes": per_page * self._allocator.high_water,
+        }
+        return rep

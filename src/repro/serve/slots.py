@@ -129,7 +129,14 @@ class FinishedRequest:
 
 @dataclasses.dataclass
 class SlotState:
-    """Host view of one occupied slot."""
+    """Host view of one occupied slot.  Under the paged cache a slot also
+    carries its page accounting: ``pages`` is the slot's block-table row
+    (physical pages in logical order, reused prefix pages first),
+    ``n_reused`` of which are ref-counted prefix-cache hits the slot reads
+    but never writes; ``inserted_pages`` are the pages this slot published
+    to the prefix cache after its own prefill.  ``phase`` is "prefill"
+    while chunked prefill is still running (``prefill_pos`` = next prompt
+    position to compute) and "decode" once the first token is sampled."""
     req: Request
     schedule: List[int]         # wanted per-step widths (len == max_new)
     emitted: List[int]          # committed tokens (first from prefill)
@@ -137,6 +144,11 @@ class SlotState:
     prefill_precision: int
     admit_step: int
     repeat_run: int = 0         # consecutive identical committed tokens
+    phase: str = "decode"       # "prefill" | "decode"
+    prefill_pos: int = 0        # next prompt position to prefill
+    pages: List[int] = dataclasses.field(default_factory=list)
+    n_reused: int = 0           # leading shared (read-only) pages
+    inserted_pages: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def wanted(self) -> int:
@@ -227,3 +239,98 @@ def select_slots(mask, new_cache: Any, old_cache: Any) -> Any:
         shape[ax] = mask.shape[0]
         return jnp.where(mask.reshape(shape), n, o)
     return jax.tree_util.tree_map_with_path(sel, new_cache, old_cache)
+
+
+# ---------------------------------------------------------------------------
+# paged cache operations (serve/pages.py owns the host-side accounting)
+# ---------------------------------------------------------------------------
+
+def _is_pages(path) -> bool:
+    return any(getattr(k, "key", None) == "pages" for k in path)
+
+
+def init_paged_slot_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
+                          page_size: int, dtype=jnp.bfloat16,
+                          kv_dtype=None) -> Any:
+    """The shared continuous-batching cache with attention KV paged; see
+    transformer.lm_init_paged_cache for the per-family layout."""
+    from repro.models import transformer as T
+    return T.lm_init_paged_cache(cfg, n_slots, n_pages, page_size, dtype,
+                                 kv_dtype=kv_dtype)
+
+
+def select_paged(eff, new_cache: Any, old_cache: Any, block_table,
+                 page_size: int) -> Any:
+    """Page-granular commit of one decode step: a decode step writes
+    exactly ONE (page, offset) cell per row — the cell addressed by the
+    row's pre-step position through its block table — so restoring a
+    non-committed row means restoring that single cell, not ``where``-ing
+    the entire cache tree (the dense ``select_slots`` cost this replaces).
+    Rows never collide: an active row's write page is exclusive by the
+    sharing rule (only full, immutable pages are shared) and free rows all
+    target null page 0, where every restore carries the identical old
+    value.  Recurrent state and positions stay row-masked (they are dense
+    per-slot and every row's step rewrites its whole row)."""
+    pos = old_cache["pos"]
+    pg = jnp.take_along_axis(block_table, (pos // page_size)[:, None],
+                             axis=1)[:, 0]
+    off = pos % page_size
+
+    def sel(path, n, o):
+        if _is_pages(path):
+            keep = jnp.where(eff[None, :, None, None],
+                             n[:, pg, off], o[:, pg, off])
+            return n.at[:, pg, off].set(keep)
+        ax = 0 if _is_pos(path) else 1
+        shape = [1] * n.ndim
+        shape[ax] = eff.shape[0]
+        return jnp.where(eff.reshape(shape), n, o)
+
+    return jax.tree_util.tree_map_with_path(sel, new_cache, old_cache)
+
+
+def install_prefill_pages(cache: Any, slot_cache: Any, idx, block_row,
+                          plen: int, page_size: int) -> Any:
+    """Install a batch-1 WHOLE prefill into the paged cache: dense leaves
+    (recurrent state, pos) row-write exactly like ``write_slot``; the
+    attention KV (``slot_cache["attn"]``, hybrid's dense ``[n_inv, 1,
+    max_len, KV, hd]``) is scattered through ``block_row`` into the
+    slot's pages.  This is the recurrent families' admission path —
+    Mamba2/RWKV6 state cannot be chunked or prefix-skipped, so they
+    prefill whole and only their attention KV is paged.  ``plen`` is
+    static (one executable per prompt length, as with any prefill)."""
+    pos_arr = jnp.arange(plen, dtype=jnp.int32)
+    pg = block_row[pos_arr // page_size]
+    off = pos_arr % page_size
+
+    def wr(path, c, s):
+        if _is_pos(path):
+            return c.at[idx].set(jnp.asarray(s, c.dtype))
+        return lax.dynamic_update_slice_in_dim(c, s.astype(c.dtype), idx,
+                                               axis=1)
+
+    dense_new = {k: v for k, v in slot_cache.items() if k != "attn"}
+    dense_old = {k: v for k, v in cache.items() if k != "pages"}
+    new = jax.tree_util.tree_map_with_path(wr, dense_old, dense_new)
+    new["pages"] = {
+        "k": cache["pages"]["k"].at[:, pg, off].set(
+            slot_cache["attn"]["k"][:, 0, :plen].astype(
+                cache["pages"]["k"].dtype)),
+        "v": cache["pages"]["v"].at[:, pg, off].set(
+            slot_cache["attn"]["v"][:, 0, :plen].astype(
+                cache["pages"]["v"].dtype)),
+    }
+    return new
+
+
+def scrub_pages(cache: Any, page_idxs) -> Any:
+    """Zero the given physical pages in every paged leaf — run on freed
+    pages at retirement so recycled pages never leak a prior request's
+    bytes (and, after a quarantine, never leak its NaNs) into a future
+    resident's masked-but-gathered view.  ``page_idxs`` is padded with 0:
+    scrubbing the null page is always harmless."""
+    def sc(path, c):
+        if not _is_pages(path):
+            return c
+        return c.at[:, page_idxs].set(jnp.zeros((), c.dtype))
+    return jax.tree_util.tree_map_with_path(sc, cache)

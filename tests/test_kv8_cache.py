@@ -46,3 +46,41 @@ def test_f8_cache_is_half_bytes():
                    for x in jax.tree_util.tree_leaves(c["layers"]))
 
     assert kv_bytes(c8) * 2 == kv_bytes(c16)
+
+
+def test_f8_paged_continuous_serving_close_to_bf16():
+    """The int8-class KV cache wired into continuous serving
+    (``continuous(kv_dtype="int8")``): byte-wide pages halve the KV pool,
+    SEFP width switching still works per-request, and the streams track
+    the bf16-page scheduler closely (a tolerance regime — the bitwise
+    lockstep-oracle property is claimed for bf16 pages only)."""
+    from repro.policy import PrecisionPolicy
+    from repro.serve import SwitchableServer
+
+    params = Z.init_params(CFG, jax.random.PRNGKey(1))
+    srv = SwitchableServer(CFG, params, max_len=64)
+    srv.set_policy(PrecisionPolicy.all_widths()
+                   .with_class("m8", 8).with_class("m4", 4))
+    rng = np.random.default_rng(7)
+    work = [(rng.integers(0, CFG.vocab_size, (n,)).astype(np.int32), cls)
+            for n, cls in ((12, "m8"), (20, "m4"), (9, "m8"))]
+
+    def drain(kv_dtype):
+        sched = srv.continuous(slots=2, page_size=8, kv_dtype=kv_dtype)
+        rids = [sched.submit(p, max_new=8, request_class=c, seed=i)
+                for i, (p, c) in enumerate(work)]
+        fin = sched.drain()
+        return [fin[r].tokens for r in rids], sched
+
+    toks16, s16 = drain("bf16")
+    toks8, s8 = drain("int8")
+    # half the KV bytes per page
+    assert (s8.memory_report()["kv_cache"]["bytes_per_page"] * 2
+            == s16.memory_report()["kv_cache"]["bytes_per_page"])
+    # greedy streams agree on most steps (same bar as the lockstep f8 test)
+    agree = total = 0
+    for a, b in zip(toks16, toks8):
+        n = min(len(a), len(b))
+        agree += int((np.asarray(a[:n]) == np.asarray(b[:n])).sum())
+        total += n
+    assert total and agree / total >= 0.75, (agree, total)

@@ -1,0 +1,428 @@
+"""Paged KV cache tests (DESIGN.md §13): allocator/prefix-cache units, and
+the load-bearing serving invariants — a request served through the paged
+continuous batcher (block tables, chunked prefill, prefix reuse) replays
+BITWISE on the dense lockstep oracle at every SEFP width; shared pages are
+read-only; corruption of one slot's exclusive page never perturbs a
+co-resident sharing its prefix."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import model_zoo as Z
+from repro.models.config import ModelConfig
+from repro.policy import PrecisionPolicy
+from repro.serve import SwitchableServer
+from repro.serve import pages as pages_lib
+from repro.serve.faults import CacheCorruptionFault
+from repro.serve.pages import PageAllocator, PageBudgetExceeded, PrefixCache
+
+CFG = ModelConfig(name="paged-tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, q_block=16, kv_block=16, loss_chunk=16,
+                  remat="none", dtype="bfloat16")
+
+HYBRID_CFG = ModelConfig(name="paged-hybrid", family="hybrid", n_layers=4,
+                         d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                         vocab_size=256, head_dim=16, attn_every=2,
+                         ssm_state=16, ssm_head_dim=16, q_block=16,
+                         kv_block=16, loss_chunk=16, remat="none",
+                         dtype="bfloat16")
+
+RWKV_CFG = ModelConfig(name="paged-rwkv", family="rwkv", n_layers=2,
+                       d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+                       d_ff=256, vocab_size=256, rwkv_head_dim=32,
+                       q_block=32, kv_block=32, loss_chunk=32, remat="none",
+                       dtype="bfloat16")
+
+PS = 8  # page size for every scheduler in this file
+
+
+@pytest.fixture(scope="module")
+def server():
+    params = Z.init_params(CFG, jax.random.PRNGKey(0))
+    srv = SwitchableServer(CFG, params, max_len=96)
+    srv.set_policy(PrecisionPolicy.all_widths()
+                   .with_class("m8", 8).with_class("m6", 6)
+                   .with_class("m4", 4).with_class("m3", 3))
+    return srv
+
+
+def prompt(n, seed=0, vocab=256):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, (n,)).astype(np.int32)
+
+
+def check_oracle(server, fr, p):
+    sched, pm = fr.oracle_schedule()
+    solo = server.generate(p[None], max_new=len(fr.tokens),
+                           precision_schedule=sched, prefill_precision=pm)
+    np.testing.assert_array_equal(fr.tokens, solo.tokens[0])
+
+
+# ---------------------------------------------------------------------------
+# host-side units: allocator, prefix keys, prefix cache
+# ---------------------------------------------------------------------------
+
+class TestPageAllocator:
+    def test_alloc_free_refcount(self):
+        a = PageAllocator(6)
+        assert a.pages_free == 5 and a.pages_in_use == 0
+        pg = a.alloc(3)
+        assert len(set(pg)) == 3 and 0 not in pg
+        assert a.pages_in_use == 3 and a.high_water == 3
+        a.incref(pg[0])
+        assert not a.decref(pg[0])  # one ref left -> not freed
+        assert a.decref(pg[0])      # now freed
+        assert a.pages_in_use == 2
+        assert a.high_water == 3    # high-water sticks
+
+    def test_budget_exceeded(self):
+        a = PageAllocator(3)
+        a.alloc(2)
+        assert not a.can_alloc(1)
+        with pytest.raises(PageBudgetExceeded):
+            a.alloc(1)
+
+    def test_null_page_never_handed_out(self):
+        a = PageAllocator(4)
+        assert 0 not in a.alloc(3)
+        with pytest.raises(ValueError):
+            a.incref(0)
+
+    def test_request_pages_math(self):
+        # prefill writes plen positions; decode writes up to
+        # plen + max_new - 2 (the last token is never fed back)
+        assert pages_lib.request_pages(8, 1, 8) == 1
+        assert pages_lib.request_pages(8, 2, 8) == 2
+        assert pages_lib.request_pages(9, 8, 8) == 2
+        assert pages_lib.request_pages(16, 10, 8) == 4
+
+
+class TestPrefixCache:
+    def test_chain_keys_depend_on_history_and_width(self):
+        p = prompt(24, seed=1)
+        k_a = pages_lib.prefix_keys(p, 8, 4)
+        assert len(k_a) == 3
+        # same page-2 tokens, different page-0 history -> different key
+        q = p.copy()
+        q[0] ^= 1
+        assert pages_lib.prefix_keys(q, 8, 4)[2] != k_a[2]
+        # K/V bytes differ per prefill width: keys must too
+        assert pages_lib.prefix_keys(p, 8, 8)[0] != k_a[0]
+
+    def test_lookup_longest_run_and_insert(self):
+        a = PageAllocator(8)
+        c = PrefixCache(a)
+        pg = a.alloc(3)
+        assert c.insert("k0", pg[0]) and c.insert("k1", pg[1])
+        assert not c.insert("k0", pg[2])  # first producer wins
+        assert c.lookup(["k0", "k1", "k2"]) == [pg[0], pg[1]]
+        assert c.lookup(["kX", "k0"]) == []  # a chain: miss stops the run
+
+    def test_evict_skips_referenced_pages(self):
+        a = PageAllocator(4)
+        c = PrefixCache(a)
+        pg = a.alloc(3)
+        for i, p in enumerate(pg):
+            c.insert(f"k{i}", p)
+            assert a.decref(p) is False  # cache ref keeps the page alive
+        a.incref(pg[0])  # an "active reader" of page 0
+        freed = c.evict_for(2)
+        assert pg[0] not in freed and len(freed) == 2
+        assert a.ref(pg[0]) == 2  # untouched
+
+    def test_purge_pages(self):
+        a = PageAllocator(4)
+        c = PrefixCache(a)
+        pg = a.alloc(2)
+        c.insert("k0", pg[0])
+        c.insert("k1", pg[1])
+        a.decref(pg[0]), a.decref(pg[1])
+        freed = c.purge_pages([pg[0]])
+        assert freed == [pg[0]] and len(c) == 1
+
+
+# ---------------------------------------------------------------------------
+# the serving invariants
+# ---------------------------------------------------------------------------
+
+class TestPagedOracle:
+    def test_bitwise_oracle_every_width(self, server):
+        """Paged continuous serving replays bitwise on the dense lockstep
+        engine at m in {8, 6, 4, 3} — the acceptance criterion."""
+        sched = server.continuous(slots=4, page_size=PS)
+        ps = {}
+        for i, cls in enumerate(("m8", "m6", "m4", "m3")):
+            p = prompt(11 + 7 * i, seed=i)
+            ps[sched.submit(p, max_new=8, request_class=cls, seed=i)] = p
+        fin = sched.drain()
+        assert len(fin) == 4
+        for rid, fr in fin.items():
+            assert fr.status == "ok"
+            check_oracle(server, fr, ps[rid])
+
+    def test_mixed_sampling_oracle(self, server):
+        """Stochastic sampling + width-rr stalls, still bitwise."""
+        sched = server.continuous(slots=3, page_size=PS,
+                                  width_policy="width-rr")
+        ps, seeds = {}, {}
+        for i, cls in enumerate(("m8", "m4", "m4")):
+            p = prompt(9 + 5 * i, seed=20 + i)
+            rid = sched.submit(p, max_new=6, request_class=cls,
+                               temperature=0.8, top_k=7, seed=31 + i)
+            ps[rid], seeds[rid] = p, 31 + i
+        fin = sched.drain()
+        for rid, fr in fin.items():
+            sc, pm = fr.oracle_schedule()
+            solo = server.generate(ps[rid][None], max_new=len(fr.tokens),
+                                   precision_schedule=sc,
+                                   prefill_precision=pm,
+                                   temperature=0.8, top_k=7,
+                                   seed=seeds[rid])
+            np.testing.assert_array_equal(fr.tokens, solo.tokens[0])
+
+
+class TestChunkedPrefill:
+    def test_chunked_equals_whole_prefill(self, server):
+        """Splitting a prefill into chunks is bitwise-neutral: the same
+        workload with prefill_chunk=5 produces identical token streams to
+        the whole-prompt prefill."""
+        work = [(prompt(23, seed=40 + i), 7, i) for i in range(3)]
+        streams = []
+        for chunk in (None, 5):
+            sched = server.continuous(slots=2, page_size=PS,
+                                      prefill_chunk=chunk,
+                                      prefix_cache=False)
+            rids = [sched.submit(p, max_new=mn, request_class="m6", seed=s)
+                    for p, mn, s in work]
+            fin = sched.drain()
+            streams.append([fin[r].tokens for r in rids])
+            if chunk is not None:
+                assert sched.stats["prefill_chunks"] >= 3 * 5  # 23/5 -> 5
+        for a, b in zip(*streams):
+            np.testing.assert_array_equal(a, b)
+
+    def test_decode_never_stalls_behind_long_prefill(self, server):
+        """A long document arriving mid-decode must not stall the decode
+        clock: chunks interleave, decode_stall_steps stays 0 and the short
+        request's stream is bitwise the oracle's."""
+        sched = server.continuous(slots=2, page_size=PS, prefill_chunk=4,
+                                  prefix_cache=False)
+        p_short = prompt(6, seed=50)
+        rid_s = sched.submit(p_short, max_new=12, request_class="m8",
+                             seed=50)
+        for _ in range(2):
+            sched.step()
+        p_long = prompt(48, seed=51)
+        rid_l = sched.submit(p_long, max_new=4, request_class="m4", seed=51)
+        fin = sched.drain()
+        assert sched.stats["decode_stall_steps"] == 0
+        check_oracle(server, fin[rid_s], p_short)
+        check_oracle(server, fin[rid_l], p_long)
+
+
+class TestPrefixReuse:
+    def test_reuse_hits_and_stays_bitwise(self, server):
+        """A second request sharing the first's prompt prefix adopts its
+        pages (hit count > 0, prefill compute skipped) and still replays
+        bitwise on the oracle."""
+        sched = server.continuous(slots=2, page_size=PS)
+        p = prompt(26, seed=60)
+        r0 = sched.submit(p, max_new=6, request_class="m4", seed=60)
+        fin0 = sched.drain()
+        check_oracle(server, fin0[r0], p)
+        r1 = sched.submit(p, max_new=9, request_class="m4", seed=61)
+        fin1 = sched.drain()
+        st = sched.stats["pages"]
+        assert st["prefix_cache"]["hits"] >= 3  # 26 tokens -> 3 full pages
+        assert st["reused_pages"] >= 3
+        check_oracle(server, fin1[r1], p)
+
+    def test_no_reuse_across_widths(self, server):
+        """K/V bytes depend on the prefill width, so a prefix prefilled at
+        m=8 must never serve an m=4 request."""
+        sched = server.continuous(slots=2, page_size=PS)
+        p = prompt(26, seed=62)
+        sched.submit(p, max_new=4, request_class="m8", seed=62)
+        sched.drain()
+        hits0 = sched.stats["pages"]["prefix_cache"]["hits"]
+        r1 = sched.submit(p, max_new=4, request_class="m4", seed=63)
+        fin = sched.drain()
+        assert sched.stats["pages"]["prefix_cache"]["hits"] == hits0
+        check_oracle(server, fin[r1], p)
+
+    def test_shared_pages_cow_divergent_suffixes(self, server):
+        """Two concurrent requests sharing a prompt prefix but with
+        divergent suffixes: shared pages are read-only (ref > 1 while both
+        are active), the divergent tails live in exclusive pages, and both
+        streams replay bitwise."""
+        sched = server.continuous(slots=2, page_size=PS)
+        head = prompt(16, seed=64)  # two full shared pages
+        pa = np.concatenate([head, prompt(7, seed=65)])
+        pb = np.concatenate([head, prompt(9, seed=66)])
+        ra = sched.submit(pa, max_new=5, request_class="m6", seed=65)
+        fina = sched.drain()
+        rb = sched.submit(pb, max_new=5, request_class="m6", seed=66)
+        ra2 = sched.submit(pa, max_new=5, request_class="m6", seed=67)
+        sched.step()  # admit both sharers
+        # the shared prefix pages are referenced by the cache AND both
+        # active slots while decoding: read-only by refcount
+        shared_refs = [sched._allocator.ref(pg)
+                       for _, s in sched._table.active()
+                       for pg in s.pages[:s.n_reused]]
+        assert shared_refs and all(r >= 3 for r in shared_refs)
+        finb = sched.drain()
+        assert sched.stats["pages"]["prefix_cache"]["hits"] >= 4
+        check_oracle(server, fina[ra], pa)
+        check_oracle(server, finb[rb], pb)
+        check_oracle(server, finb[ra2], pa)
+
+    def test_whole_prompt_cached_still_computes_first_token(self, server):
+        """Even a fully page-aligned, fully-cached prompt prefills its last
+        token live (the reuse cap): first-token logits come from compute,
+        never from the cache."""
+        sched = server.continuous(slots=2, page_size=PS)
+        p = prompt(24, seed=68)  # exactly 3 pages
+        sched.submit(p, max_new=4, request_class="m6", seed=68)
+        sched.drain()
+        r1 = sched.submit(p, max_new=4, request_class="m6", seed=69)
+        fin = sched.drain()
+        # only 2 of the 3 full pages may be adopted
+        assert sched.stats["pages"]["reused_pages"] == 2
+        check_oracle(server, fin[r1], p)
+
+
+class TestPageBudget:
+    def test_admission_gates_on_pages(self, server):
+        """With a page pool too small for two long requests, the second
+        blocks at the queue head until the first retires — and everything
+        still finishes, bitwise."""
+        sched = server.continuous(slots=4, page_size=PS, n_pages=11,
+                                  prefix_cache=False)
+        ps = {}
+        for i in range(3):
+            p = prompt(40, seed=70 + i)  # 40+8-1 -> 6 pages each
+            ps[sched.submit(p, max_new=8, request_class="m8",
+                            seed=70 + i)] = p
+        fin = sched.drain()
+        assert len(fin) == 3
+        assert sched.stats["pages"]["page_blocked_admissions"] > 0
+        assert sched.stats["pages"]["high_water"] <= 10
+        for rid, fr in fin.items():
+            assert fr.status == "ok"
+            check_oracle(server, fr, ps[rid])
+
+    def test_infeasible_request_rejected_at_submit(self, server):
+        sched = server.continuous(slots=2, page_size=PS, n_pages=4)
+        with pytest.raises(ValueError, match="pages"):
+            sched.submit(prompt(40, seed=75), max_new=8)
+
+    def test_memory_report_kv_section(self, server):
+        sched = server.continuous(slots=2, page_size=PS)
+        rep = sched.memory_report()
+        kv = rep["kv_cache"]
+        assert kv["paged"] and kv["page_size"] == PS
+        # [L, n_pages, ps, KV, hd] x {k,v} bf16
+        expect = 2 * CFG.n_layers * PS * CFG.n_kv_heads * 16 * 2
+        assert kv["bytes_per_page"] == expect
+        assert kv["total_bytes"] == expect * kv["n_pages"]
+        p = prompt(20, seed=76)
+        sched.submit(p, max_new=4, seed=76)
+        sched.drain()
+        assert sched.memory_report()["kv_cache"]["high_water"] >= 3
+        assert "master_bytes" in rep  # server report still included
+
+
+class TestRecurrentFamilies:
+    def test_rwkv_unaffected(self):
+        """rwkv has no attention KV: the scheduler runs it dense (pages
+        stats None) and the oracle property is untouched."""
+        params = Z.init_params(RWKV_CFG, jax.random.PRNGKey(3))
+        srv = SwitchableServer(RWKV_CFG, params, max_len=64)
+        sched = srv.continuous(slots=2)
+        p = prompt(12, seed=80)
+        rid = sched.submit(p, max_new=6, seed=80)
+        fin = sched.drain()
+        assert sched.stats["pages"] is None
+        assert sched.memory_report()["kv_cache"] == {
+            "paged": False, "family": "rwkv"}
+        check_oracle(srv, fin[rid], p)
+
+    def test_hybrid_paged_attention_dense_ssm(self):
+        """hybrid pages its attention KV (whole-prompt install, no
+        chunking/reuse) while Mamba2 state stays dense — bitwise on the
+        lockstep oracle."""
+        params = Z.init_params(HYBRID_CFG, jax.random.PRNGKey(4))
+        srv = SwitchableServer(HYBRID_CFG, params, max_len=64)
+        sched = srv.continuous(slots=2, page_size=PS)
+        ps = {}
+        for i in range(3):
+            p = prompt(9 + 6 * i, seed=90 + i)
+            ps[sched.submit(p, max_new=6, seed=90 + i)] = p
+        fin = sched.drain()
+        assert sched.stats["pages"] is not None
+        assert sched.stats["pages"]["prefix_cache"] is None
+        for rid, fr in fin.items():
+            check_oracle(srv, fr, ps[rid])
+
+
+class TestSharedPageContainment:
+    def test_corruption_contained_under_shared_pages(self, server):
+        """CacheCorruptionFault under prefix sharing: the fault lands in
+        the victim's first EXCLUSIVE page (never a shared one), the victim
+        quarantines, and a co-resident actively sharing its prefix pages
+        streams bitwise what the no-fault run streams."""
+        head = prompt(16, seed=100)
+        pa = np.concatenate([head, prompt(5, seed=101)])
+        pb = np.concatenate([head, prompt(3, seed=102)])
+
+        def run(with_fault):
+            sched = server.continuous(slots=2, page_size=PS)
+            # seed the prefix cache, then run both sharers concurrently
+            sched.submit(head, max_new=2, request_class="m6", seed=99)
+            sched.drain()
+            fault = None
+            if with_fault:
+                # both sharers decode from the next step on; fire two
+                # steps in (the clock is deterministic, so the clean and
+                # faulted runs line up exactly)
+                fault = CacheCorruptionFault(slot=0, step=sched.clock + 2)
+                sched.inject(fault)
+            ra = sched.submit(pa, max_new=10, request_class="m6", seed=101)
+            rb = sched.submit(pb, max_new=10, request_class="m6", seed=102)
+            fin = sched.drain(max_steps=100)
+            return fin[ra], fin[rb], fault
+
+        clean_a, clean_b, _ = run(False)
+        fa, fb, fault = run(True)
+        assert fault.fired and fault.fired[0]["leaves_corrupted"] > 0
+        assert fault.fired[0]["page"] is not None
+        # slot 0 was the victim: it held request A
+        assert fa.status == "poisoned"
+        # the survivor, which READS the same shared prefix pages, is
+        # bitwise identical to the no-fault run
+        assert fb.status == "ok"
+        np.testing.assert_array_equal(fb.tokens, clean_b.tokens)
+        # and the victim's committed prefix is clean too
+        np.testing.assert_array_equal(
+            fa.tokens, clean_a.tokens[:len(fa.tokens)])
+        # poisoned retire purged the victim's published pages
+        check_oracle(server, fb, pb)
+
+    def test_corrupted_pages_never_resold(self, server):
+        """After a poisoned retire, the victim's pages are scrubbed and
+        its published prefix entries purged — a re-submission of the same
+        prompt re-prefills and replays bitwise."""
+        p = prompt(20, seed=110)
+        sched = server.continuous(slots=1, page_size=PS)
+        fault = CacheCorruptionFault(slot=0, step=3)
+        sched.inject(fault)
+        r0 = sched.submit(p, max_new=10, request_class="m4", seed=110)
+        fin0 = sched.drain(max_steps=60)
+        assert fin0[r0].status == "poisoned"
+        r1 = sched.submit(p, max_new=6, request_class="m4", seed=110)
+        fin1 = sched.drain(max_steps=60)
+        assert fin1[r1].status == "ok"
+        check_oracle(server, fin1[r1], p)
