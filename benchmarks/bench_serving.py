@@ -5,7 +5,7 @@ The lockstep engine serves equal batches to the longest member's max_new
 and admits nothing until the whole batch finishes; the continuous scheduler
 (repro/serve/scheduler.py) admits each request into a free slot the step it
 arrives and retires it the step it finishes, so no step is spent padding a
-finished or not-yet-arrived request.  Three serving modes over the SAME
+finished or not-yet-arrived request.  Four serving modes over the SAME
 workload and weights:
 
   lockstep       sequential fixed-size batches via engine.generate; a batch
@@ -18,12 +18,36 @@ workload and weights:
                  semantics as the lockstep batch).
   continuous_rr  ContinuousScheduler, width-rr policy (width groups served
                  round-robin AT their wanted width with aging/fairness).
+  heterogeneous  ContinuousScheduler, heterogeneous policy (DESIGN.md §14):
+                 every active slot commits EVERY step at its own wanted
+                 width through the fused per-row-width decode step — exact
+                 per-class fidelity (like width-rr) at commit rate 1.0
+                 (like max-width), each request bitwise its lockstep run.
+
+The workload cycles over FOUR precision classes (widths 8/6/4/3), so the
+rotation tax the heterogeneous step removes is structural: width-rr serves
+one width group per step and pays ~4x the steps.
 
 Metrics per mode: useful tokens/sec (wall), total decode steps, p50/p95
 request latency in *scheduler steps* (deterministic, hardware-independent:
 submit -> finish on a shared step clock where idle gaps tick once); plus
-occupancy / commit rate / per-width step counts / starvation for the
-continuous modes.  ``speedup_continuous_vs_lockstep`` is the headline:
+occupancy / commit rate / per-width step counts / per-width COMMITTED token
+counts (``tokens_by_width``) / starvation for the continuous modes.  The
+heterogeneous entry also replays a deterministic sample of its finished
+requests on a single-width oracle (``oracle_bitwise`` must be True — a
+numerics drift in the fused per-row step fails the bench and ``--check``,
+as does heterogeneous tokens/s falling under width-rr's, commit rate under
+1.0, or any starvation).  The oracle engine is recorded per entry
+(``oracle_engine``): smoke replays on the lockstep ``generate`` path;
+full mode replays the request SOLO through the scalar (single-width)
+continuous step at the same slot count, because XLA CPU matmul numerics
+are batch-shape-dependent — at d512 a decode row computed in a B=8 batch
+is not bitwise the same row computed at B=1 (measured; at the smoke and
+tier-1 config sizes they coincide).  The bitwise contract is therefore
+stated at MATCHED batch shapes: per-row hetero == the scalar step at
+that row's width, same B — which the solo scalar replay checks exactly,
+prefill chunking and paged decode included.  ``speedup_continuous_vs_lockstep`` is the
+headline:
 continuous wins exactly by backfilling the arrival gaps and the ragged
 tail.  Absolute numbers are CPU-relative (DESIGN.md §9) — the *structure*
 (steps saved, occupancy) is what transfers.
@@ -71,8 +95,8 @@ import json
 import sys
 import time
 
-SCHEMA_VERSION = 3
-MODES = ("lockstep", "continuous", "continuous_rr")
+SCHEMA_VERSION = 4
+MODES = ("lockstep", "continuous", "continuous_rr", "heterogeneous")
 FAULT_SCENARIOS = ("flood", "nan_slot", "cache_corruption", "stall")
 # per-token service budget (scheduler steps) the flood scenario must hold
 SLO_STEPS_PER_TOKEN = 1.5
@@ -116,10 +140,11 @@ def check_schema(doc: dict) -> list:
                   "latency_steps_p95"):
             need(entry, k, (int, float), f"$.modes.{mode}")
         need(entry, "total_steps", int, f"$.modes.{mode}")
-        if mode.startswith("continuous"):
+        if mode != "lockstep":
             for k in ("occupancy", "commit_rate"):
                 need(entry, k, (int, float), f"$.modes.{mode}")
             need(entry, "width_steps", dict, f"$.modes.{mode}")
+            need(entry, "tokens_by_width", dict, f"$.modes.{mode}")
             need(entry, "starvation", dict, f"$.modes.{mode}")
             # chunked prefill must never stall the decode clock — a
             # regression here fails --check even outside --long-context
@@ -128,6 +153,32 @@ def check_schema(doc: dict) -> list:
             if stalls:
                 errs.append(f"$.modes.{mode}.decode_stall_steps: "
                             f"{stalls} != 0")
+    # the heterogeneous mode's structural claims are hard --check bars:
+    # everyone commits every step, nobody starves, the fused per-row step
+    # is bitwise the single-width oracle (lockstep generate in smoke, the
+    # shape-matched solo scalar-step replay in full — module docstring),
+    # and removing the width-rr rotation must not cost throughput
+    het = modes.get("heterogeneous") or {}
+    if het:
+        if het.get("commit_rate") != 1.0:
+            errs.append(f"$.modes.heterogeneous.commit_rate: "
+                        f"{het.get('commit_rate')} != 1.0")
+        if het.get("starvation"):
+            errs.append(f"$.modes.heterogeneous.starvation: "
+                        f"{het.get('starvation')} != {{}}")
+        if het.get("oracle_bitwise") is not True:
+            errs.append("$.modes.heterogeneous.oracle_bitwise: "
+                        f"{het.get('oracle_bitwise')!r} is not True")
+        if het.get("oracle_engine") not in ("lockstep", "scalar-step"):
+            errs.append("$.modes.heterogeneous.oracle_engine: "
+                        f"{het.get('oracle_engine')!r} not in "
+                        "('lockstep', 'scalar-step')")
+        rr = modes.get("continuous_rr") or {}
+        if rr and het.get("tokens_per_sec", 0) < rr.get("tokens_per_sec", 0):
+            errs.append(
+                f"$.modes.heterogeneous.tokens_per_sec: "
+                f"{het.get('tokens_per_sec')} < continuous_rr's "
+                f"{rr.get('tokens_per_sec')}")
     need(doc, "speedup_continuous_vs_lockstep", (int, float), "$")
     need(doc, "steps_saved_vs_lockstep", int, "$")
     # faults: always present; null when the run skipped --faults
@@ -275,7 +326,8 @@ def run_lockstep(server, reqs, batch: int, policy) -> dict:
 # continuous driver
 # ---------------------------------------------------------------------------
 
-def run_continuous(server, reqs, slots: int, width_policy: str) -> dict:
+def run_continuous(server, reqs, slots: int, width_policy: str,
+                   oracle: str | None = None, oracle_cap: int = 6) -> dict:
     sched = server.continuous(slots=slots, width_policy=width_policy)
     t0 = time.perf_counter()
     done = sched.replay(reqs)  # the same arrival-clock loop the CLI uses
@@ -283,7 +335,7 @@ def run_continuous(server, reqs, slots: int, width_policy: str) -> dict:
     stats = sched.stats
     useful = sum(len(fr.tokens) for fr in done.values())
     lat = [fr.finish_step - fr.submit_step for fr in done.values()]
-    return {
+    entry = {
         "tokens_per_sec": useful / max(wall, 1e-9),
         "wall_seconds": wall,
         "total_steps": stats["steps"],
@@ -292,11 +344,35 @@ def run_continuous(server, reqs, slots: int, width_policy: str) -> dict:
         "occupancy": stats["occupancy"],
         "commit_rate": stats["commit_rate"],
         "width_steps": {str(k): v for k, v in stats["width_steps"].items()},
+        "tokens_by_width": {str(k): v
+                            for k, v in stats["tokens_by_width"].items()},
         "starvation": {str(k): v for k, v in stats["starvation"].items()},
         "decode_stall_steps": stats["decode_stall_steps"],
         "prefill_chunks": stats["prefill_chunks"],
         "pages_high_water": (stats["pages"] or {}).get("high_water"),
-    }, useful
+    }
+    if oracle:
+        # replay a deterministic sample on the single-width oracle (replay()
+        # submits in arrival order, so sorted rids line up with the
+        # arrival-sorted workload); capped because each distinct max_new
+        # compiles a new lockstep scan length.  "lockstep" replays on the
+        # fused generate scan (bitwise at smoke/tier-1 sizes);
+        # "scalar-step" replays SOLO through the scalar continuous step at
+        # the same slot count — the batch-shape-matched oracle (module
+        # docstring: XLA CPU matmuls are not batch-shape-invariant).
+        ordered = sorted(reqs, key=lambda r: int(r.get("arrival", 0)))
+        pairs = list(zip(sorted(done), ordered))[:oracle_cap]
+        entry["oracle_checked"] = len(pairs)
+        entry["oracle_engine"] = oracle
+        if oracle == "lockstep":
+            entry["oracle_bitwise"] = all(
+                _oracle_ok(server, done[rid], r["prompt"])
+                for rid, r in pairs)
+        else:
+            entry["oracle_bitwise"] = all(
+                _oracle_ok_scalar_step(server, done[rid], r, slots)
+                for rid, r in pairs)
+    return entry, useful
 
 
 # ---------------------------------------------------------------------------
@@ -430,6 +506,25 @@ def _oracle_ok(server, fr, prompt) -> bool:
     solo = server.generate(np.asarray(prompt)[None], max_new=len(fr.tokens),
                            precision_schedule=sched, prefill_precision=pm)
     return bool(np.array_equal(fr.tokens, solo.tokens[0]))
+
+
+def _oracle_ok_scalar_step(server, fr, req, slots: int) -> bool:
+    """Bitwise SHAPE-MATCHED single-width replay of one finished request:
+    the request runs alone through a fresh scalar-step (max-width)
+    continuous scheduler at the same slot count, so every matmul sees the
+    same batch shape as the heterogeneous run and only the per-row width
+    machinery differs.  Requires a constant realized width (true for the
+    bench workload — no SLO clamp in this mode)."""
+    import numpy as np
+
+    widths = set(fr.decode_widths)
+    assert len(widths) == 1, f"non-constant realized widths: {widths}"
+    solo = server.continuous(slots=slots, width_policy="max-width")
+    rid = solo.submit(req["prompt"], max_new=req["max_new"],
+                      request_class=req["request_class"],
+                      seed=req.get("seed"))
+    done = solo.drain()
+    return bool(np.array_equal(fr.tokens, done[rid].tokens))
 
 
 def _service_steps_per_token(fr) -> float:
@@ -623,7 +718,11 @@ def run(smoke: bool = False, faults: bool = False,
     n_requests = 8 if smoke else 24
     max_new_lo, max_new_hi = (3, 10) if smoke else (4, 48)
     arrival_gap = 2 if smoke else 1
-    classes = {"generation": 8, "understanding": 4}
+    # four precision classes spanning the serving ladder: the width-rr
+    # rotation tax (and the heterogeneous mode's removal of it) is measured
+    # on a genuinely mixed batch, not a two-way split
+    classes = {"generation": 8, "balanced": 6, "understanding": 4,
+               "draft": 3}
     if smoke:
         cfg = ModelConfig(
             name="bench-serving", family="dense", n_layers=2, d_model=128,
@@ -657,6 +756,9 @@ def run(smoke: bool = False, faults: bool = False,
                                              "max-width"),
         "continuous_rr": lambda: run_continuous(server, reqs, slots,
                                                 "width-rr"),
+        "heterogeneous": lambda: run_continuous(
+            server, reqs, slots, "heterogeneous",
+            oracle="lockstep" if smoke else "scalar-step"),
     }
     repeats = 2
     modes = {}
@@ -748,6 +850,19 @@ def main():
     print(f"  continuous vs lockstep: "
           f"{doc['speedup_continuous_vs_lockstep']:.2f}x tokens/s, "
           f"{doc['steps_saved_vs_lockstep']} decode steps saved")
+    het = doc["modes"].get("heterogeneous")
+    if het:
+        rr = doc["modes"]["continuous_rr"]
+        tbw = ", ".join(f"m{k}: {v}"
+                        for k, v in sorted(het["tokens_by_width"].items(),
+                                           reverse=True))
+        print(f"  heterogeneous vs width-rr: "
+              f"{het['tokens_per_sec'] / max(rr['tokens_per_sec'], 1e-9):.2f}"
+              f"x tokens/s at exact per-class fidelity "
+              f"(commit rate {het['commit_rate']:.2f}, "
+              f"starvation {het['starvation'] or '{}'}, oracle bitwise: "
+              f"{het.get('oracle_bitwise')})")
+        print(f"  heterogeneous tokens by width: {tbw}")
     fl = doc.get("faults")
     if fl:
         f = fl["flood"]

@@ -1,7 +1,8 @@
 """Kernel dispatch registry: one name per op, many backend implementations.
 
-Every SEFP hot-path op (``sefp_quant``, ``sefp_pack``, ``sefp_matmul``) is
-registered here under named backends:
+Every SEFP hot-path op (``sefp_quant``, ``sefp_pack``, ``sefp_matmul``,
+``sefp_matmul_gemv``, ``sefp_matmul_gemv_hetero``) is registered here under
+named backends:
 
   * ``PALLAS_TPU``        — compiled Mosaic kernel (real TPU);
   * ``PALLAS_INTERPRET``  — the same Pallas kernel body executed by the

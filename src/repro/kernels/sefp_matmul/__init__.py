@@ -1,4 +1,6 @@
 from repro.kernels.sefp_matmul.ops import (  # noqa: F401
+    normalize_widths,
     sefp_matmul,
     sefp_matmul_gemv,
+    sefp_matmul_gemv_hetero,
 )

@@ -7,12 +7,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.packed import PackedSEFP
+from repro.core.packed import MASTER_M, PackedSEFP
 from repro.kernels import dispatch
 from repro.kernels.common import pick_block
-from repro.kernels.sefp_matmul.ref import (sefp_matmul_gemv_ref,
+from repro.kernels.sefp_matmul.ref import (sefp_matmul_gemv_hetero_ref,
+                                           sefp_matmul_gemv_ref,
                                            sefp_matmul_ref)
-from repro.kernels.sefp_matmul.sefp_matmul import (sefp_gemv_raw,
+from repro.kernels.sefp_matmul.sefp_matmul import (sefp_gemv_hetero_raw,
+                                                   sefp_gemv_raw,
                                                    sefp_matmul_raw)
 
 # fp32 sublane multiple: decode row blocks are padded up to this so the
@@ -149,6 +151,74 @@ def sefp_matmul(x: jax.Array, packed: PackedSEFP, m, *,
     return out.reshape(*lead, n_dim)
 
 
+# ---------------------------------------------------------------------------
+# width-heterogeneous gemv: per-output-row mantissa widths, one fused step
+# ---------------------------------------------------------------------------
+
+
+def normalize_widths(widths) -> tuple:
+    """Validate and canonicalize a static candidate-width ladder: unique,
+    sorted descending, every entry in 1..MASTER_M.  None means the full
+    master ladder (MASTER_M down to 1)."""
+    if widths is None:
+        return tuple(range(MASTER_M, 0, -1))
+    out = tuple(sorted({int(w) for w in widths}, reverse=True))
+    if not out:
+        raise ValueError("widths ladder must be non-empty")
+    for w in out:
+        if not 1 <= w <= MASTER_M:
+            raise ValueError(f"width {w} outside 1..{MASTER_M}")
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("widths", "block_n", "block_k",
+                                             "interpret"))
+def _gemv_hetero_pallas_call(x, mag, sign_bits, exp, m_rows, widths, block_n,
+                             block_k, interpret):
+    return sefp_gemv_hetero_raw(x, mag, sign_bits, exp, m_rows,
+                                widths=widths, block_n=block_n,
+                                block_k=block_k, interpret=interpret)
+
+
+def _gemv_hetero_pallas(x, mag, sign_bits, exp, m_rows, widths, block_n,
+                        block_k, *, interpret):
+    k_dim, n_dim = mag.shape
+    bn, bk = _gemv_blocks(k_dim, n_dim, block_n, block_k)
+    m_arr = jnp.asarray(m_rows, jnp.int32)
+    return _gemv_hetero_pallas_call(x, mag, sign_bits, exp, m_arr, widths,
+                                    bn, bk, interpret)
+
+
+@dispatch.register("sefp_matmul_gemv_hetero", dispatch.PALLAS_TPU)
+def _gemv_hetero_tpu(x, mag, sign_bits, exp, m_rows, *, widths, block_n=256,
+                     block_k=512):
+    return _gemv_hetero_pallas(x, mag, sign_bits, exp, m_rows, widths,
+                               block_n, block_k, interpret=False)
+
+
+@dispatch.register("sefp_matmul_gemv_hetero", dispatch.PALLAS_INTERPRET)
+def _gemv_hetero_interpret(x, mag, sign_bits, exp, m_rows, *, widths,
+                           block_n=256, block_k=512):
+    return _gemv_hetero_pallas(x, mag, sign_bits, exp, m_rows, widths,
+                               block_n, block_k, interpret=True)
+
+
+_gemv_hetero_ref_jit = jax.jit(
+    sefp_matmul_gemv_hetero_ref,
+    static_argnames=("widths", "block_n", "block_k"))
+
+
+@dispatch.register("sefp_matmul_gemv_hetero", dispatch.JAX_REF)
+def _gemv_hetero_jax_ref(x, mag, sign_bits, exp, m_rows, *, widths,
+                         block_n=256, block_k=512):
+    # identical pick_block resolution and tile walk as the Pallas kernel,
+    # with the same static width ladder swept per k-tile (bitwise).
+    return _gemv_hetero_ref_jit(x, mag, sign_bits, exp,
+                                jnp.asarray(m_rows, jnp.int32),
+                                widths=widths, block_n=block_n,
+                                block_k=block_k)
+
+
 def sefp_matmul_gemv(x: jax.Array, packed: PackedSEFP, m, *,
                      block_n: int = 256, block_k: int = 512,
                      backend: str | None = None) -> jax.Array:
@@ -176,6 +246,54 @@ def sefp_matmul_gemv(x: jax.Array, packed: PackedSEFP, m, *,
     out = dispatch.dispatch(
         "sefp_matmul_gemv", x2, packed.mag, packed.sign_bits, packed.exp, m,
         block_n=block_n, block_k=block_k, backend=backend)
+    if pad:
+        out = out[:rows]
+    return out.reshape(*lead, n_dim)
+
+
+def sefp_matmul_gemv_hetero(x: jax.Array, packed: PackedSEFP, m, *,
+                            widths=None, block_n: int = 256,
+                            block_k: int = 512,
+                            backend: str | None = None) -> jax.Array:
+    """Width-heterogeneous decode gemv: output row ``i`` of
+    ``x @ dequantize(packed, .)`` is truncated at its OWN mantissa width
+    ``m[i]`` (int32 [rows], traced or concrete), in one fused pass over
+    the shared packed bytes.
+
+    ``widths`` is the static candidate ladder the kernel is specialized
+    for (default: the full MASTER_M..1 ladder); every ``m[i]`` must be a
+    member or that row comes back zero — serve callers validate on the
+    host.  Row count is padded to the fp32 sublane multiple (8) like the
+    scalar gemv; padded rows reuse ``m[0]``'s width so padding never adds
+    a ladder branch.  Row ``i`` is bitwise equal to row ``i`` of the
+    scalar ``sefp_matmul_gemv`` run on the same padded batch at
+    ``m = m[i]``.  Returns f32 [..., N]."""
+    if packed.group_axis != 0 or len(packed.shape) != 2:
+        raise ValueError("sefp_matmul_gemv_hetero expects a 2-D weight "
+                         "packed along axis 0 (k-major)")
+    k_dim, n_dim = packed.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if x2.shape[1] != k_dim:
+        raise ValueError(f"x K={x2.shape[1]} vs packed K={k_dim}")
+    rows = x2.shape[0]
+    if rows == 0:
+        raise ValueError("sefp_matmul_gemv_hetero needs at least one row")
+    m_arr = jnp.asarray(m, jnp.int32)
+    if m_arr.shape != (rows,):
+        raise ValueError(f"m must be int32 [{rows}] (one width per row), "
+                         f"got shape {m_arr.shape}")
+    widths = normalize_widths(widths)
+    pad = -rows % SUBLANE
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+        m_arr = jnp.concatenate(
+            [m_arr, jnp.broadcast_to(m_arr[:1], (pad,))])
+
+    out = dispatch.dispatch(
+        "sefp_matmul_gemv_hetero", x2, packed.mag, packed.sign_bits,
+        packed.exp, m_arr, widths=widths, block_n=block_n, block_k=block_k,
+        backend=backend)
     if pad:
         out = out[:rows]
     return out.reshape(*lead, n_dim)

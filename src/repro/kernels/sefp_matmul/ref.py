@@ -58,3 +58,45 @@ def sefp_matmul_gemv_ref(x, mag, sign_bits, exp, m, *, block_n: int = 256,
                                 preferred_element_type=jnp.float32)
         cols.append(acc)
     return jnp.concatenate(cols, axis=1)
+
+
+def sefp_matmul_gemv_hetero_ref(x, mag, sign_bits, exp, m_rows, *, widths,
+                                block_n: int = 256, block_k: int = 512):
+    """Per-row-width tiled oracle: output row ``i`` is dequantized at its
+    own mantissa width ``m_rows[i]``.
+
+    Walks the exact same (n, k) tile sequence as sefp_matmul_gemv_ref, but
+    inside each k-tile sweeps the *static* candidate ``widths`` ladder:
+    dequantize the shared packed tile once per width, take the full-batch
+    bf16 dot, and merge via ``where(row wants w, acc + part, acc)``.  Each
+    row matches exactly one ladder width per k-tile, so its fp32 adds are
+    the same sequence — at the same dot shape — as running the whole batch
+    through sefp_matmul_gemv_ref at scalar ``m = m_rows[i]`` and reading
+    row ``i``: agreement is BITWISE, not to tolerance.
+
+    Rows whose width is absent from ``widths`` are never accumulated and
+    return zeros; callers validate ladder membership.  The merge uses
+    ``where(mask, acc + part, acc)`` (never ``acc + where(...)``) so
+    untouched rows keep their bit pattern (-0.0 is preserved)."""
+    k_dim, n_dim = mag.shape
+    bn = pick_block(n_dim, block_n)
+    bk = pick_block(k_dim, block_k, multiple=GROUP)
+    xb = x.astype(jnp.bfloat16)
+    m_rows = jnp.asarray(m_rows, jnp.int32)
+    rmasks = [(m_rows == w)[:, None] for w in widths]
+    cols = []
+    for j in range(n_dim // bn):
+        ns = slice(j * bn, (j + 1) * bn)
+        acc = jnp.zeros((x.shape[0], bn), jnp.float32)
+        for k in range(k_dim // bk):
+            xk = xb[:, k * bk:(k + 1) * bk]
+            for w, rm in zip(widths, rmasks):
+                wq = dequant_ref(
+                    mag[k * bk:(k + 1) * bk, ns],
+                    sign_bits[k * bk // 8:(k + 1) * bk // 8, ns],
+                    exp[k * bk // GROUP:(k + 1) * bk // GROUP, ns],
+                    w).astype(jnp.bfloat16)
+                part = jnp.dot(xk, wq, preferred_element_type=jnp.float32)
+                acc = jnp.where(rm, acc + part, acc)
+        cols.append(acc)
+    return jnp.concatenate(cols, axis=1)

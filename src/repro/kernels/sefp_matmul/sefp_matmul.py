@@ -24,6 +24,8 @@ TPU mapping:
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -151,3 +153,78 @@ def sefp_gemv_raw(x, mag, sign_bits, exp, m, *, block_n: int, block_k: int,
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(m, x, mag, sign_bits, exp)
+
+
+def _gemv_hetero_kernel(m_ref, x_ref, mag_ref, sgn_ref, exp_ref, o_ref, *,
+                        widths):
+    """Width-heterogeneous gemv step: output row i is accumulated at its
+    own mantissa width m_ref[i].
+
+    The per-row width vector rides in SMEM (scalar prefetch) and is read
+    with python-unrolled scalar loads — M is a static handful of decode
+    rows, and scalar SMEM reads are the only access pattern guaranteed to
+    lower on real TPU.  For each candidate width in the *static* ladder we
+    dequantize the shared packed tile once (VPU work; the HBM bytes were
+    already streamed for this k-step regardless of how many widths are
+    live), take the full-row-block MXU dot, and merge only the rows that
+    want that width.  pl.when skips absent widths entirely, so a batch
+    that happens to agree on one width costs exactly the scalar kernel.
+
+    The merge is ``where(mask, o + part, o)`` — never ``o + where(...)``
+    — so untouched rows keep their accumulated bit pattern exactly."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    m_dim, bn = o_ref.shape
+    x = x_ref[...].astype(jnp.bfloat16)
+    row = lax.broadcasted_iota(jnp.int32, (m_dim, bn), 0)
+    for w in widths:
+        hits = [m_ref[i] == w for i in range(m_dim)]
+        present = functools.reduce(jnp.logical_or, hits)
+
+        @pl.when(present)
+        def _(w=w, hits=hits):
+            wq = _dequant_tile(jnp.int32(w), mag_ref, sgn_ref, exp_ref)
+            part = jnp.dot(x, wq, preferred_element_type=jnp.float32)
+            mask = functools.reduce(
+                jnp.logical_or,
+                [jnp.logical_and(row == i, h) for i, h in enumerate(hits)])
+            o_ref[...] = jnp.where(mask, o_ref[...] + part, o_ref[...])
+
+
+def sefp_gemv_hetero_raw(x, mag, sign_bits, exp, m_rows, *, widths,
+                         block_n: int, block_k: int, interpret: bool):
+    """Per-row-width decode gemv: x [M, K] x packed W [K, N] -> f32 [M, N]
+    where row i is dequantized at width ``m_rows[i]`` (int32 [M], SMEM
+    scalar prefetch).  ``widths`` is the static candidate ladder; rows
+    whose width is absent from it come back zero.  Same 2-D (N/bn, K/bk)
+    grid and fp32 revisit-accumulation as sefp_gemv_raw, so a row served
+    here is bitwise equal to the same row batch served by the scalar
+    kernel at its width."""
+    m_dim, k_dim = x.shape
+    _, n_dim = mag.shape
+    grid = (n_dim // block_n, k_dim // block_k)
+
+    grid_spec = compat.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_dim, block_k), lambda j, k, s: (0, k)),
+            pl.BlockSpec((block_k, block_n), lambda j, k, s: (k, j)),
+            pl.BlockSpec((block_k // 8, block_n), lambda j, k, s: (k, j)),
+            pl.BlockSpec((block_k // GROUP, block_n),
+                         lambda j, k, s: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((m_dim, block_n), lambda j, k, s: (0, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gemv_hetero_kernel, widths=widths),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        interpret=interpret,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(m_rows, x, mag, sign_bits, exp)

@@ -33,6 +33,11 @@ may be a registered class name or a bare int width (auto-registered as a
 fixed-width class).  Requests are admitted into free slots as they arrive
 and leave on EOS/max_new — no lockstep barrier.
 
+``--width-policy heterogeneous`` (DESIGN.md §14) serves every slot at its
+own class width in one fused per-row-width step — exact per-class fidelity
+with no width-rr rotation tax; the summary's ``tokens by width`` line
+reports the committed-token mix.
+
 Resilience knobs (DESIGN.md §12) apply in replay mode:
 ``--width-policy slo-degrade`` downshifts widths under pressure (tune with
 ``--slo-step-ms``), ``--max-queue`` bounds the queue (overflowing arrivals
@@ -154,6 +159,12 @@ def _replay(server, args, policy):
     print(f"width steps: {stats['width_steps']}  "
           f"starvation: {stats['starvation']}  "
           f"policy: {stats['width_policy']}")
+    tbw = stats["tokens_by_width"]
+    if tbw:
+        print("tokens by width: "
+              + ", ".join(f"E5M{w}: {tbw[w]}" for w in sorted(tbw,
+                                                              reverse=True))
+              + f"  (committed {stats['committed_tokens']})")
     if (stats["rejected"] or stats["evicted"] or stats["deadline_missed"]
             or stats["poisoned"]):
         print(f"resilience: rejected={stats['rejected']} "
@@ -208,9 +219,12 @@ def main():
     ap.add_argument("--slots", type=int, default=8,
                     help="continuous batch slots (replay mode)")
     ap.add_argument("--width-policy", default="max-width",
-                    choices=("max-width", "width-rr", "slo-degrade"),
+                    choices=("max-width", "width-rr", "slo-degrade",
+                             "heterogeneous"),
                     help="per-step weight-width selection policy "
-                    "(slo-degrade downshifts widths under overload)")
+                    "(slo-degrade downshifts widths under overload; "
+                    "heterogeneous serves every slot at its own width in "
+                    "one fused per-row-width step)")
     ap.add_argument("--classes", default=None,
                     help="register request classes, e.g. "
                     "'generation=8,understanding=4' (name=width)")

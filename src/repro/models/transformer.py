@@ -47,6 +47,82 @@ def _resolve(resolve, layer_params):
     return layer_params if resolve is None else resolve(layer_params)
 
 
+# ---------------------------------------------------------------------------
+# width-heterogeneous decode: per-row precision inside one fused step
+# ---------------------------------------------------------------------------
+#
+# The decode step is row-independent in the batch dimension (attention
+# masks per-row positions, the MLP/matmuls act per row), so a batch whose
+# slots want DIFFERENT SEFP widths can be served in one step by sweeping a
+# static candidate ladder: run the layer at each width that is present
+# (lax.cond skips absent ones) and merge outputs row-wise.  Row i of the
+# merged result is bitwise identical to running the whole batch at scalar
+# width m_rows[i] and reading row i — the same dot shapes, the same fp32
+# reduction order — which is what the heterogeneous-vs-lockstep oracle
+# tests pin down (tests/test_hetero.py).
+
+
+def _hetero_bcast(mask, ndim: int):
+    """Broadcast a [B] row mask against a batch-major leaf of rank ndim."""
+    return mask.reshape(mask.shape + (1,) * (ndim - 1))
+
+
+def _hetero_sweep(run, m_rows, widths):
+    """Run ``run(w)`` (a layer at static python width ``w``) once per
+    candidate width, skipping widths no row wants, and merge the outputs
+    row-wise: row i keeps the results of the run at ``m_rows[i]``.  Every
+    output leaf must be batch-major (dense caches, hidden states); rows
+    whose width is absent from the ladder come back zero — serve callers
+    validate ladder membership on the host."""
+    proto = jax.eval_shape(run, widths[0])
+
+    def zeros():
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), proto)
+
+    acc = zeros()
+    for w in widths:
+        rmask = m_rows == w
+        out = lax.cond(jnp.any(rmask), functools.partial(run, w), zeros)
+        acc = jax.tree_util.tree_map(
+            lambda n, o, rm=rmask: jnp.where(_hetero_bcast(rm, n.ndim), n, o),
+            out, acc)
+    return acc
+
+
+def _hetero_sweep_paged(run, m_rows, widths, kp, vp, block_table, pos,
+                        page_size: int):
+    """``_hetero_sweep`` for a paged attention layer: ``run(w)`` returns
+    ``(x, k_pages, v_pages)`` where the pages are pool-shaped (shared
+    across rows), not batch-major.  One decode step writes exactly one
+    (page, offset) cell per row (see layers.paged_attention_decode), so
+    per-row merging of the pages is a surgical per-cell select seeded from
+    the INPUT pages — the same pattern slots.select_paged uses to unwind
+    rejected rows — while the hidden state merges row-wise as usual."""
+    pg = jnp.take_along_axis(block_table, (pos // page_size)[:, None],
+                             axis=1)[:, 0]
+    off = pos % page_size
+    proto = jax.eval_shape(run, widths[0])
+
+    def zeros():
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), proto)
+
+    acc_x = jnp.zeros(proto[0].shape, proto[0].dtype)
+    acc_kp, acc_vp = kp, vp
+    for w in widths:
+        rmask = m_rows == w
+        x_w, kp_w, vp_w = lax.cond(jnp.any(rmask),
+                                   functools.partial(run, w), zeros)
+        acc_x = jnp.where(_hetero_bcast(rmask, x_w.ndim), x_w, acc_x)
+        keep = _hetero_bcast(rmask, acc_kp[pg, off].ndim)
+        acc_kp = acc_kp.at[pg, off].set(
+            jnp.where(keep, kp_w[pg, off], acc_kp[pg, off]))
+        acc_vp = acc_vp.at[pg, off].set(
+            jnp.where(keep, vp_w[pg, off], acc_vp[pg, off]))
+    return acc_x, acc_kp, acc_vp
+
+
 def _remat(fn, cfg: ModelConfig):
     if cfg.remat == "none":
         return fn
@@ -465,7 +541,7 @@ def lm_init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
 # -- decode (one token) --------------------------------------------------------
 
 def lm_decode_hidden(params, x_emb, cache, cfg: ModelConfig, resolve=None,
-                     layer_unroll: int = 1):
+                     layer_unroll: int = 1, hetero=None):
     """x_emb: [B,1,d]; returns (hidden [B,1,d], new_cache).  ``cache["pos"]``
     may be a scalar (lockstep decode) or ``int32[B]`` (continuous batching:
     per-slot positions threaded through ``attention_decode`` for row-wise
@@ -478,8 +554,17 @@ def lm_decode_hidden(params, x_emb, cache, cfg: ModelConfig, resolve=None,
     decode, so on backends with per-iteration loop overhead (CPU) an
     unrolled body lets XLA fuse across layers (~3x step latency on the CPU
     serving bench); keep 1 (pure scan) where HLO compactness matters
-    (deep-model dry-run lowerings)."""
+    (deep-model dry-run lowerings).
+
+    ``hetero`` (optional) is ``(m_rows, widths)``: an int32 [B] per-row
+    SEFP width vector plus the static candidate ladder.  When set,
+    ``resolve`` must be the TWO-argument form ``resolve(layer_slice, w)``
+    (w a static python int) and every layer runs the width-heterogeneous
+    sweep (see ``_hetero_sweep``): row i is decoded at ``m_rows[i]``,
+    bitwise identical to a lockstep batch at that scalar width."""
     pos = cache["pos"]
+    if hetero is not None:
+        m_rows, h_widths = hetero[0], tuple(hetero[1])
     if cfg.family == "hybrid":
         emb0 = x_emb
         nshared = cfg.n_shared_attn_blocks
@@ -498,17 +583,31 @@ def lm_decode_hidden(params, x_emb, cache, cfg: ModelConfig, resolve=None,
 
             def seg_layer(x, inp):
                 lp, lcache = inp
-                lp = _resolve(resolve, lp)
-                h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
-                o, new_lcache = M2.mamba2_decode(lp["mamba"], h, lcache, cfg)
-                return x + o, new_lcache
+
+                def one(lp, x):
+                    h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+                    o, new_lcache = M2.mamba2_decode(lp["mamba"], h, lcache,
+                                                     cfg)
+                    return x + o, new_lcache
+
+                if hetero is None:
+                    return one(_resolve(resolve, lp), x)
+                return _hetero_sweep(lambda w: one(resolve(lp, w), x),
+                                     m_rows, h_widths)
 
             # shared attention first (cadence: at layer index start)
-            sp = _resolve(resolve, jax.tree_util.tree_map(
-                lambda a, i=inv_idx % nshared: a[i], params["shared"]))
+            sp_raw = jax.tree_util.tree_map(
+                lambda a, i=inv_idx % nshared: a[i], params["shared"])
             ac = jax.tree_util.tree_map(lambda a, i=inv_idx: a[i],
                                         cache["attn"])
-            x, new_ac = hybrid_shared_block_decode(sp, x, emb0, ac, cfg, pos)
+            if hetero is None:
+                x, new_ac = hybrid_shared_block_decode(
+                    _resolve(resolve, sp_raw), x, emb0, ac, cfg, pos)
+            else:
+                x, new_ac = _hetero_sweep(
+                    lambda w, x=x: hybrid_shared_block_decode(
+                        resolve(sp_raw, w), x, emb0, ac, cfg, pos),
+                    m_rows, h_widths)
             new_attn_caches.append(new_ac)
             x, new_seg_cache = lax.scan(seg_layer, x, (seg, seg_cache),
                                         unroll=layer_unroll)
@@ -527,18 +626,25 @@ def lm_decode_hidden(params, x_emb, cache, cfg: ModelConfig, resolve=None,
     if cfg.family == "rwkv":
         def body(x, inp):
             lp, lcache = inp
-            x, new_lcache = rwkv_layer_decode(_resolve(resolve, lp), x,
-                                              lcache, cfg)
-            return x, new_lcache
+            if hetero is None:
+                return rwkv_layer_decode(_resolve(resolve, lp), x, lcache,
+                                         cfg)
+            return _hetero_sweep(
+                lambda w: rwkv_layer_decode(resolve(lp, w), x, lcache, cfg),
+                m_rows, h_widths)
         x, new_layer_caches = lax.scan(body, x_emb,
                                        (params["layers"], cache["layers"]),
                                        unroll=layer_unroll)
     else:
         def body(x, inp):
             lp, lcache = inp
-            x, new_lcache = attn_layer_decode(_resolve(resolve, lp), x,
-                                              lcache, cfg, pos)
-            return x, new_lcache
+            if hetero is None:
+                return attn_layer_decode(_resolve(resolve, lp), x, lcache,
+                                         cfg, pos)
+            return _hetero_sweep(
+                lambda w: attn_layer_decode(resolve(lp, w), x, lcache, cfg,
+                                            pos),
+                m_rows, h_widths)
         x, new_layer_caches = lax.scan(body, x_emb,
                                        (params["layers"], cache["layers"]),
                                        unroll=layer_unroll)
@@ -548,15 +654,23 @@ def lm_decode_hidden(params, x_emb, cache, cfg: ModelConfig, resolve=None,
 
 def lm_decode_hidden_paged(params, x_emb, cache, block_table,
                            cfg: ModelConfig, resolve=None,
-                           layer_unroll: int = 1, page_size: int = 16):
+                           layer_unroll: int = 1, page_size: int = 16,
+                           hetero=None):
     """``lm_decode_hidden`` over the paged continuous cache
     (``lm_init_paged_cache``): per-slot positions route each row's KV
     read/write through its block-table row.  rwkv has no attention KV, so
-    its dense path is reused with the block table ignored."""
+    its dense path is reused with the block table ignored.
+
+    ``hetero=(m_rows, widths)`` serves each row at its own SEFP width (see
+    ``lm_decode_hidden``); the attention page pools are merged per written
+    (page, offset) cell (``_hetero_sweep_paged``), everything else
+    row-wise."""
     if cfg.family == "rwkv":
         return lm_decode_hidden(params, x_emb, cache, cfg, resolve=resolve,
-                                layer_unroll=layer_unroll)
+                                layer_unroll=layer_unroll, hetero=hetero)
     pos = cache["pos"]
+    if hetero is not None:
+        m_rows, h_widths = hetero[0], tuple(hetero[1])
     if cfg.family == "hybrid":
         emb0 = x_emb
         nshared = cfg.n_shared_attn_blocks
@@ -573,17 +687,33 @@ def lm_decode_hidden_paged(params, x_emb, cache, block_table,
 
             def seg_layer(x, inp):
                 lp, lcache = inp
-                lp = _resolve(resolve, lp)
-                h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
-                o, new_lcache = M2.mamba2_decode(lp["mamba"], h, lcache, cfg)
-                return x + o, new_lcache
 
-            sp = _resolve(resolve, jax.tree_util.tree_map(
-                lambda a, i=inv_idx % nshared: a[i], params["shared"]))
-            x, kp, vp = hybrid_shared_block_decode_paged(
-                sp, x, emb0, cache["pages"]["k"][inv_idx],
-                cache["pages"]["v"][inv_idx], block_table, cfg, pos,
-                page_size)
+                def one(lp, x):
+                    h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+                    o, new_lcache = M2.mamba2_decode(lp["mamba"], h, lcache,
+                                                     cfg)
+                    return x + o, new_lcache
+
+                if hetero is None:
+                    return one(_resolve(resolve, lp), x)
+                return _hetero_sweep(lambda w: one(resolve(lp, w), x),
+                                     m_rows, h_widths)
+
+            sp_raw = jax.tree_util.tree_map(
+                lambda a, i=inv_idx % nshared: a[i], params["shared"])
+            kp_in = cache["pages"]["k"][inv_idx]
+            vp_in = cache["pages"]["v"][inv_idx]
+            if hetero is None:
+                x, kp, vp = hybrid_shared_block_decode_paged(
+                    _resolve(resolve, sp_raw), x, emb0, kp_in, vp_in,
+                    block_table, cfg, pos, page_size)
+            else:
+                x, kp, vp = _hetero_sweep_paged(
+                    lambda w, x=x: hybrid_shared_block_decode_paged(
+                        resolve(sp_raw, w), x, emb0, kp_in, vp_in,
+                        block_table, cfg, pos, page_size),
+                    m_rows, h_widths, kp_in, vp_in, block_table, pos,
+                    page_size)
             new_kp.append(kp)
             new_vp.append(vp)
             x, new_seg_cache = lax.scan(seg_layer, x, (seg, seg_cache),
@@ -599,9 +729,16 @@ def lm_decode_hidden_paged(params, x_emb, cache, block_table,
 
     def body(x, inp):
         lp, (kp, vp) = inp
-        x, kp, vp = attn_layer_decode_paged(_resolve(resolve, lp), x, kp,
-                                            vp, block_table, cfg, pos,
-                                            page_size)
+        if hetero is None:
+            x, kp, vp = attn_layer_decode_paged(_resolve(resolve, lp), x,
+                                                kp, vp, block_table, cfg,
+                                                pos, page_size)
+        else:
+            x, kp, vp = _hetero_sweep_paged(
+                lambda w, x=x: attn_layer_decode_paged(
+                    resolve(lp, w), x, kp, vp, block_table, cfg, pos,
+                    page_size),
+                m_rows, h_widths, kp, vp, block_table, pos, page_size)
         return x, (kp, vp)
 
     x, (new_kp, new_vp) = lax.scan(

@@ -308,8 +308,11 @@ class SwitchableServer:
         or max_new so their slot is immediately re-admitted
         (repro/serve/scheduler.py).  ``width_policy`` selects the per-step
         weight width from the active slots' precision classes ("max-width",
-        "width-rr", "slo-degrade", or a WidthPolicy instance); ``policy``
-        defaults to the installed PrecisionPolicy.  Resilience knobs
+        "width-rr", "slo-degrade", "heterogeneous", or a WidthPolicy
+        instance); "heterogeneous" runs every slot at its own wanted width
+        in one fused step (per-row dequant, DESIGN.md §14) so no slot is
+        ever deferred; ``policy`` defaults to the installed
+        PrecisionPolicy.  Resilience knobs
         (DESIGN.md §12) pass through as keywords: ``max_queue`` (bounded
         queue + QueueFull backpressure), ``queue_ttl``, per-request
         deadlines via ``submit``, ``repetition_limit``, and ``faults``

@@ -113,6 +113,43 @@ def master_logits(h_last, unembed, m, kernel_backend: str | None = None):
                             backend=kernel_backend)
 
 
+def master_logits_hetero(h_last, unembed, m_rows, widths,
+                         kernel_backend: str | None = None):
+    """``master_logits`` with a PER-ROW width vector: logits row i is
+    projected at width ``m_rows[i]`` (int32 [B]); ``widths`` is the static
+    candidate ladder.
+
+    The XLA path sweeps the ladder exactly like the model-side hetero
+    sweep — dequantize at each present scalar width, f32 dot, row-masked
+    merge — so row i is bitwise what the scalar ``master_logits`` produces
+    for that row at ``m = m_rows[i]``.  A named kernel backend routes
+    through ``sefp_matmul_gemv_hetero``, whose rows are bitwise the scalar
+    ``sefp_matmul_gemv`` at the matching width (same contract caveats as
+    ``master_logits``)."""
+    w = unembed["w_unembed"]
+    if not packed_lib.is_master_leaf(w):
+        return L.logits_for_last(h_last, unembed)
+    if kernel_backend is None:
+        from jax import lax
+        h = h_last[:, 0].astype(jnp.float32)
+        acc = jnp.zeros((h.shape[0], w["mag"].shape[-1]), jnp.float32)
+        for wd in widths:
+            rmask = m_rows == wd
+
+            def one(wd=wd):
+                wq = packed_lib.dequantize_stacked(w, jnp.int32(wd),
+                                                   dtype=jnp.float32)
+                return h @ wq
+
+            out = lax.cond(jnp.any(rmask), one, lambda: acc)
+            acc = jnp.where(rmask[:, None], out, acc)
+        return acc
+    from repro.kernels.sefp_matmul import sefp_matmul_gemv_hetero
+    return sefp_matmul_gemv_hetero(h_last[:, 0], packed_lib.packed_view(w),
+                                   m_rows, widths=widths,
+                                   backend=kernel_backend)
+
+
 def _auto_layer_unroll(cfg: ModelConfig, layer_unroll: int | None) -> int:
     """Decode layer-loop unroll factor.  Per-step compute is tiny, so on
     CPU (per-iteration loop overhead, no HLO-size pressure) the layer loop
@@ -145,6 +182,38 @@ def make_master_serve_step(cfg: ModelConfig,
         h, cache = T.lm_decode_hidden(master, x, cache, cfg, resolve=resolve,
                                       layer_unroll=unroll)
         logits = master_logits(h, master["unembed"], m, kernel_backend)
+        return logits, cache
+
+    return serve
+
+
+def make_master_serve_step_hetero(cfg: ModelConfig, widths,
+                                  kernel_backend: str | None = None,
+                                  layer_unroll: int | None = None):
+    """serve(master, cache, token[B] int32, m_rows int32[B]) ->
+    (logits, cache): one WIDTH-HETEROGENEOUS decode step — slot i is
+    dequantized, attended and projected at its own width ``m_rows[i]``,
+    bitwise identical to serving that row in a lockstep batch at the
+    scalar width.  ``widths`` is the static candidate ladder the step is
+    compiled for; the embedding is gathered unpacked (width-free), so only
+    matmul-consuming weights sweep the ladder."""
+    if cfg.is_encdec:
+        raise NotImplementedError(
+            "packed-master serving covers the LM families")
+    dt = jnp.bfloat16
+    unroll = _auto_layer_unroll(cfg, layer_unroll)
+    widths = tuple(widths)
+
+    def serve(master, cache, token, m_rows):
+        def resolve(layer_slice, w):
+            return dequant_master_tree(layer_slice, jnp.int32(w), dt)
+
+        x = L.embed(master["embed"], token[:, None], dt)
+        h, cache = T.lm_decode_hidden(master, x, cache, cfg,
+                                      resolve=resolve, layer_unroll=unroll,
+                                      hetero=(m_rows, widths))
+        logits = master_logits_hetero(h, master["unembed"], m_rows, widths,
+                                      kernel_backend)
         return logits, cache
 
     return serve
@@ -199,6 +268,41 @@ def make_master_serve_step_paged(cfg: ModelConfig,
             master, x, cache, block_table, cfg, resolve=resolve,
             layer_unroll=unroll, page_size=page_size)
         logits = master_logits(h, master["unembed"], m, kernel_backend)
+        return logits, cache
+
+    return serve
+
+
+def make_master_serve_step_hetero_paged(cfg: ModelConfig, widths,
+                                        kernel_backend: str | None = None,
+                                        layer_unroll: int | None = None,
+                                        page_size: int = 16):
+    """serve(master, cache, token[B] int32, m_rows int32[B], block_table
+    int32[B, max_pages]) -> (logits, cache): the width-heterogeneous
+    decode step against the PAGED KV cache — every active slot advances
+    one token at its OWN width in a single fused step (the scheduler's
+    ``heterogeneous`` policy), each row bitwise its lockstep run at that
+    width.  The signature matches ``make_master_serve_step_paged`` with
+    ``m`` widened to ``int32[B]``, so the continuous stepper wraps it
+    unchanged."""
+    if cfg.is_encdec:
+        raise NotImplementedError(
+            "packed-master serving covers the LM families")
+    dt = jnp.bfloat16
+    unroll = _auto_layer_unroll(cfg, layer_unroll)
+    widths = tuple(widths)
+
+    def serve(master, cache, token, m_rows, block_table):
+        def resolve(layer_slice, w):
+            return dequant_master_tree(layer_slice, jnp.int32(w), dt)
+
+        x = L.embed(master["embed"], token[:, None], dt)
+        h, cache = T.lm_decode_hidden_paged(
+            master, x, cache, block_table, cfg, resolve=resolve,
+            layer_unroll=unroll, page_size=page_size,
+            hetero=(m_rows, widths))
+        logits = master_logits_hetero(h, master["unembed"], m_rows, widths,
+                                      kernel_backend)
         return logits, cache
 
     return serve

@@ -66,6 +66,13 @@ is therefore pure scheduling policy over the active slots' wanted widths:
     hysteretically when pressure relents.  Per-request ``min_width``
     floors (resolved through the PrecisionPolicy) are never crossed — a
     floored request keeps the step width at or above its floor.
+  * ``heterogeneous`` — per-row widths in ONE step (§14): the scheduler
+    builds an int32[n_slots] width vector from the wanted dict and runs
+    the fused per-row-width decode step
+    (packed_step.make_master_serve_step_hetero_paged), so EVERY active
+    slot commits EVERY step at its own width — commit rate 1.0 and zero
+    starvation by construction, each row bitwise its lockstep run.
+    Composes with slo-degrade by clamping the vector per slot.
 
 Resilience (§12) on top of the width policies:
 
@@ -200,8 +207,21 @@ class WidthRoundRobinPolicy(WidthPolicy):
     precision, unlike max-width's upgrade).  Fairness: every unserved
     group's wait counter grows each step and the largest wait wins, so a
     group waits at most (#groups - 1) consecutive steps under a steady
-    mix; ties rotate cyclically through the width order.  ``starvation``
-    reports the largest wait each width ever accumulated."""
+    mix; ties rotate cyclically through the width order.
+
+    Two starvation views with deliberately different lifetimes:
+
+      * ``current_waits`` — the LIVE consecutive-steps-unserved streak per
+        active width group.  Serving a group resets its streak to 0, and a
+        group that drains (all its requests finished) is dropped; if the
+        width reappears later its streak restarts at 0 — a streak never
+        carries across a drain.
+      * ``starvation`` — the lifetime HIGH-WATER of those streaks: the
+        largest wait each width ever accumulated.  It is intentionally
+        never reset — not when the group is served, not when it drains —
+        because it is the bound the fairness claim is audited against
+        ("no group ever waited more than N consecutive steps").  A width
+        group that drained mid-wait keeps its high-water entry."""
 
     name = "width-rr"
 
@@ -241,6 +261,10 @@ class WidthRoundRobinPolicy(WidthPolicy):
     @property
     def starvation(self) -> Dict[int, int]:
         return dict(self._starvation)
+
+    @property
+    def current_waits(self) -> Dict[int, int]:
+        return dict(self._wait)
 
 
 class SLODegradePolicy(WidthPolicy):
@@ -387,10 +411,68 @@ class SLODegradePolicy(WidthPolicy):
         }
 
 
+class HeterogeneousPolicy(WidthPolicy):
+    """Width-heterogeneous serving: EVERY active slot commits EVERY step
+    at its own wanted width, in one fused decode (the per-row-width step,
+    repro/serve/packed_step.py make_master_serve_step_hetero_paged).
+
+    This dissolves the max-width/width-rr tradeoff structurally:
+
+      * commit rate is 1.0 BY CONSTRUCTION — ``select`` returns the whole
+        wanted set, so no slot ever stalls for a width turn;
+      * starvation is structurally zero — there is no width rotation to
+        wait on, so ``starvation`` is always empty;
+      * per-class fidelity is exact — slot i decodes at ``wanted[i]``,
+        bitwise its lockstep run at that width (tests/test_hetero.py),
+        never upgraded (max-width) or turn-taken (width-rr).
+
+    ``select`` returns a PER-SLOT width dict ``{slot_idx: width}`` as the
+    ``m`` element instead of one scalar — the scheduler detects the
+    ``heterogeneous`` flag and builds the int32[n_slots] width vector the
+    fused step consumes.
+
+    SLO composition: pass ``degrade=SLODegradePolicy(...)`` and its
+    pressure state machine (escalation/hysteresis, DESIGN.md §12) runs
+    unchanged — but instead of forcing one batch-wide width, a breach
+    CLAMPS the vector per slot to ``max(floor_i, down(wanted_i, shift))``:
+    everyone still commits every step, the degraded widths just shed
+    bytes.  Per-request ``min_width`` floors are enforced per slot (not
+    via a batch max), so one high-floor request no longer pins the whole
+    batch's degraded width."""
+
+    name = "heterogeneous"
+    heterogeneous = True
+
+    def __init__(self, degrade: Optional[SLODegradePolicy] = None):
+        self._slo = degrade
+        self._floors: Dict[int, int] = {}
+
+    def observe(self, signals: dict) -> None:
+        self._floors = dict(signals.get("floors") or {})
+        if self._slo is not None:
+            self._slo.observe(signals)
+
+    def select(self, wanted: Dict[int, int]) -> tuple:
+        if self._slo is None or self._slo.shift == 0:
+            return dict(wanted), set(wanted)
+        k = self._slo.shift
+        out = {i: max(self._floors.get(i) or 0, self._slo._down(w, k))
+               for i, w in wanted.items()}
+        self._slo._degraded_steps += 1
+        self._slo._downshifted_slot_steps += sum(
+            1 for i, w in wanted.items() if out[i] < w)
+        return out, set(wanted)
+
+    @property
+    def degradation(self) -> dict:
+        return {} if self._slo is None else self._slo.degradation
+
+
 WIDTH_POLICIES = {
     MaxWidthPolicy.name: MaxWidthPolicy,
     WidthRoundRobinPolicy.name: WidthRoundRobinPolicy,
     SLODegradePolicy.name: SLODegradePolicy,
+    HeterogeneousPolicy.name: HeterogeneousPolicy,
 }
 
 
@@ -548,6 +630,13 @@ class ContinuousScheduler:
                               or PrecisionPolicy.all_widths(
                                   default=server.precision)))
         self._width_policy = make_width_policy(width_policy)
+        # width-heterogeneous policies return per-slot width dicts from
+        # select() and are served by the per-row-width fused step, which
+        # is compiled for the precision policy's static width ladder
+        self._hetero = bool(getattr(self._width_policy, "heterogeneous",
+                                    False))
+        self._hetero_widths = tuple(sorted(
+            {int(w) for w in self._policy.widths}, reverse=True))
         self.default_eos_id = eos_id
         self.on_token = on_token
         if max_queue is not None and max_queue < 1:
@@ -644,6 +733,19 @@ class ContinuousScheduler:
                 {**cache, "pos": cache["pos"].at[idx].set(value)})
             server._paged_exec_key = self.page_size
         self._step_fn = server._continuous_step_fn
+        if self._hetero:
+            # the hetero step is additionally keyed on the static width
+            # ladder it was compiled for (the ladder is baked into the
+            # per-width lax.cond sweep)
+            hkey = (self.page_size, self._hetero_widths)
+            if getattr(server, "_hetero_exec_key", None) != hkey:
+                serve_h = packed_step_lib.make_master_serve_step_hetero_paged(
+                    self.cfg, self._hetero_widths, server.kernel_backend,
+                    server.layer_unroll, page_size=self.page_size)
+                server._hetero_step_fn = _make_continuous_step(
+                    serve_h, self.page_size)
+                server._hetero_exec_key = hkey
+            self._step_fn = server._hetero_step_fn
         self._prefill_chunk_fn = server._paged_prefill_fn
         self._install_pages = server._install_pages_fn
         self._write_slot = server._write_slot_fn
@@ -657,7 +759,8 @@ class ContinuousScheduler:
                         "prefill_chunks": 0, "prefill_only_steps": 0,
                         "decode_stall_steps": 0, "reused_pages": 0,
                         "page_blocked_admissions": 0,
-                        "width_steps": collections.Counter()}
+                        "width_steps": collections.Counter(),
+                        "tokens_by_width": collections.Counter()}
 
     # -- fault injection ----------------------------------------------------
     def inject(self, fault) -> "ContinuousScheduler":
@@ -1076,6 +1179,30 @@ class ContinuousScheduler:
             "widths": self._policy.widths,
         })
         m, commit = self._width_policy.select(wanted)
+        if self._hetero:
+            # per-slot width dict -> int32[n_slots] vector for the fused
+            # per-row-width step.  Widths are host ints here, so ladder
+            # membership is checked per step with a clear error instead of
+            # a silent zero row inside the kernel sweep.
+            m_by_slot = dict(m)
+            bad = {i: w for i, w in m_by_slot.items()
+                   if w not in self._hetero_widths}
+            if bad:
+                raise RuntimeError(
+                    f"heterogeneous step selected widths {bad} outside the "
+                    f"compiled ladder {self._hetero_widths} (the precision "
+                    f"policy's widths)")
+            # free / prefilling slots ride along the most common active
+            # width so padding never adds a ladder branch to the sweep
+            fill = collections.Counter(
+                m_by_slot.values()).most_common(1)[0][0]
+            m_vec = np.full((self.n_slots,), fill, np.int32)
+            for i, w in m_by_slot.items():
+                m_vec[i] = w
+            m_arg = jnp.asarray(m_vec)
+        else:
+            m_by_slot = None
+            m_arg = jnp.int32(m)
         mask = np.zeros((self.n_slots,), bool)
         mask[sorted(commit)] = True
         poison = np.zeros((self.n_slots,), bool)
@@ -1083,7 +1210,7 @@ class ContinuousScheduler:
             f.poison_slots(self, poison)
         nxt, cache, keys, ok = self._step_fn(
             self._srv.master, self._cache, self._bt(), self._tok,
-            jnp.int32(m),
+            m_arg,
             self._keys, jnp.asarray(self._temps), jnp.asarray(self._topks),
             jnp.asarray(mask),
             jnp.asarray(poison) if poison.any() else self._no_poison,
@@ -1098,7 +1225,15 @@ class ContinuousScheduler:
         self.clock += 1
         self._counts["steps"] += 1
         self._counts["slot_steps_active"] += len(wanted)
-        self._counts["width_steps"][int(m)] += 1
+        if self._hetero:
+            # one fused step serves several widths at once: count each
+            # distinct width present this step (so width_steps sums to
+            # more than `steps` under mixed batches — it answers "how
+            # many steps touched width w", same as the scalar policies)
+            for w in set(m_by_slot.values()):
+                self._counts["width_steps"][int(w)] += 1
+        else:
+            self._counts["width_steps"][int(m)] += 1
         for idx in sorted(commit):
             slot = self._table.get(idx)
             if not bool(ok[idx]):
@@ -1110,8 +1245,10 @@ class ContinuousScheduler:
                 continue
             self._counts["slot_steps_committed"] += 1
             self._counts["committed_tokens"] += 1
+            realized = int(m_by_slot[idx]) if self._hetero else int(m)
+            self._counts["tokens_by_width"][realized] += 1
             t = int(toks[idx])
-            slot.decode_widths.append(int(m))
+            slot.decode_widths.append(realized)
             prev = slot.emitted[-1]
             slot.emitted.append(t)
             slot.repeat_run = slot.repeat_run + 1 if t == prev else 1
@@ -1249,6 +1386,10 @@ class ContinuousScheduler:
             "commit_rate": (c["slot_steps_committed"]
                             / max(c["slot_steps_active"], 1)),
             "width_steps": dict(c["width_steps"]),
+            # committed TOKENS per realized width — the fairness tax in
+            # tokens rather than batch-steps (a width-rr group can have
+            # many width_steps but few tokens if its slots are sparse)
+            "tokens_by_width": dict(c["tokens_by_width"]),
             "starvation": self._width_policy.starvation,
             "width_policy": self._width_policy.name,
             "degradation": self._width_policy.degradation,

@@ -31,7 +31,7 @@ The scheduling logic that drives these lives in repro/serve/scheduler.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -110,6 +110,15 @@ class FinishedRequest:
         raise exc(f"request {self.rid} finished with status "
                   f"{self.status!r} ({self.finish_reason}) after "
                   f"{len(self.tokens)} tokens")
+
+    def width_counts(self) -> Dict[int, int]:
+        """Committed tokens per realized decode width, e.g. ``{8: 5, 4: 3}``.
+        Summing this over finished requests reproduces the scheduler's
+        ``tokens_by_width`` stat for the drained portion of the run."""
+        counts: Dict[int, int] = {}
+        for w in self.decode_widths:
+            counts[w] = counts.get(w, 0) + 1
+        return counts
 
     def oracle_schedule(self) -> tuple:
         """(precision_schedule, prefill_precision) that reproduces this

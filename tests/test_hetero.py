@@ -1,0 +1,426 @@
+"""Width-heterogeneous fused decode (DESIGN.md §14): one step serves every
+batch row at its OWN SEFP mantissa width.  The acceptance contract is
+BITWISE: row i of the heterogeneous kernel / serve step / schedule equals
+the lockstep (single-width) run of that row at width m_i — heterogeneity
+must be free of numerics drift, not merely close."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packed as packed_lib
+from repro.kernels import dispatch
+from repro.kernels.sefp_matmul import (
+    normalize_widths,
+    sefp_matmul_gemv,
+    sefp_matmul_gemv_hetero,
+)
+from repro.models import model_zoo as Z
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.policy import PrecisionPolicy
+from repro.serve import SwitchableServer
+from repro.serve import packed_step as PS
+from repro.serve.scheduler import (
+    HeterogeneousPolicy,
+    SLODegradePolicy,
+    WidthRoundRobinPolicy,
+    make_width_policy,
+)
+
+WIDTHS = (8, 6, 4, 3)
+
+DENSE_CFG = ModelConfig(name="het-dense", family="dense", n_layers=2,
+                        d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                        vocab_size=256, head_dim=16, q_block=16, kv_block=16,
+                        loss_chunk=16, remat="none", dtype="bfloat16")
+
+MOE_CFG = ModelConfig(name="het-moe", family="moe", n_layers=2, d_model=128,
+                      n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256,
+                      vocab_size=256, n_experts=4, top_k=2, q_block=32,
+                      kv_block=32, loss_chunk=32, remat="none",
+                      dtype="bfloat16")
+
+RWKV_CFG = ModelConfig(name="het-rwkv", family="rwkv", n_layers=2,
+                       d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+                       d_ff=256, vocab_size=256, rwkv_head_dim=32,
+                       q_block=32, kv_block=32, loss_chunk=32, remat="none",
+                       dtype="bfloat16")
+
+# NOTE: hybrid is pinned at layer_unroll=1 (the TPU default).  Under CPU
+# auto-full-unroll XLA fuses across the unrolled Mamba2 scan iterations
+# differently around the hetero ladder's lax.cond, which breaks
+# cross-PROGRAM bitwise agreement for the recurrent state (DESIGN.md §14).
+HYBRID_CFG = ModelConfig(name="het-hybrid", family="hybrid", n_layers=4,
+                         d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                         vocab_size=256, head_dim=16, attn_every=2,
+                         ssm_state=16, ssm_head_dim=16, q_block=16,
+                         kv_block=16, loss_chunk=16, remat="none",
+                         dtype="bfloat16")
+
+
+def rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# kernel layer: per-row gemv vs the scalar gemv, row for row
+# ---------------------------------------------------------------------------
+
+KERNEL_BACKENDS = (dispatch.JAX_REF, dispatch.PALLAS_INTERPRET)
+
+
+class TestHeteroGemvKernel:
+    @pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+    def test_rows_bitwise_equal_scalar_gemv(self, backend):
+        """A mixed {8,6,4,3} batch: output row i of the fused hetero gemv
+        is bitwise row i of the scalar gemv at m_i."""
+        K, N = 128, 128
+        p = packed_lib.pack(rand((K, N), seed=1), group_axis=0)
+        x = rand((8, K), seed=2)
+        m = np.asarray([8, 6, 4, 3, 3, 4, 6, 8], np.int32)
+        out = np.asarray(sefp_matmul_gemv_hetero(
+            x, p, m, widths=WIDTHS, block_n=64, block_k=64, backend=backend))
+        for w in WIDTHS:
+            rows = np.flatnonzero(m == w)
+            solo = np.asarray(sefp_matmul_gemv(
+                x, p, w, block_n=64, block_k=64, backend=backend))
+            np.testing.assert_array_equal(out[rows], solo[rows])
+
+    @pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+    def test_all_same_width_degenerates_to_scalar(self, backend):
+        """A uniform width vector reproduces the scalar gemv exactly — the
+        lockstep path is a special case of the hetero path."""
+        K, N = 128, 64
+        p = packed_lib.pack(rand((K, N), seed=3), group_axis=0)
+        x = rand((8, K), seed=4)
+        m = np.full((8,), 6, np.int32)
+        out = sefp_matmul_gemv_hetero(x, p, m, widths=WIDTHS, block_n=64,
+                                      block_k=64, backend=backend)
+        solo = sefp_matmul_gemv(x, p, 6, block_n=64, block_k=64,
+                                backend=backend)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(solo))
+
+    @pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+    def test_row_padding_edge(self, backend):
+        """5 rows (not a sublane multiple): padded rows reuse m[0]'s width
+        internally and are sliced away; the visible rows stay bitwise."""
+        K, N = 128, 64
+        p = packed_lib.pack(rand((K, N), seed=5), group_axis=0)
+        x = rand((5, K), seed=6)
+        m = np.asarray([4, 8, 3, 6, 4], np.int32)
+        out = np.asarray(sefp_matmul_gemv_hetero(
+            x, p, m, widths=WIDTHS, block_n=64, block_k=64, backend=backend))
+        assert out.shape == (5, N)
+        for i, w in enumerate(m):
+            solo = np.asarray(sefp_matmul_gemv(
+                x, p, int(w), block_n=64, block_k=64, backend=backend))
+            np.testing.assert_array_equal(out[i], solo[i])
+
+    def test_backends_agree_bitwise(self):
+        """pallas-interpret and jax-ref walk the same tile sequence and
+        ladder, so whole outputs agree bitwise."""
+        K, N = 256, 128
+        p = packed_lib.pack(rand((K, N), seed=7), group_axis=0)
+        x = rand((8, K), seed=8)
+        m = np.asarray([8, 3, 6, 4, 8, 3, 6, 4], np.int32)
+        a = sefp_matmul_gemv_hetero(x, p, m, widths=WIDTHS, block_n=128,
+                                    block_k=128, backend=dispatch.JAX_REF)
+        b = sefp_matmul_gemv_hetero(x, p, m, widths=WIDTHS, block_n=128,
+                                    block_k=128,
+                                    backend=dispatch.PALLAS_INTERPRET)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_absent_ladder_width_zeroes_row(self):
+        """A row whose width is not on the compiled ladder comes back zero
+        (the documented kernel contract; serve callers validate on host)."""
+        K, N = 128, 64
+        p = packed_lib.pack(rand((K, N), seed=9), group_axis=0)
+        x = rand((8, K), seed=10)
+        m = np.asarray([8, 5, 8, 8, 8, 8, 8, 8], np.int32)  # 5 not in ladder
+        out = np.asarray(sefp_matmul_gemv_hetero(
+            x, p, m, widths=WIDTHS, backend=dispatch.JAX_REF))
+        assert not out[1].any()
+        assert out[0].any()
+
+    def test_normalize_widths(self):
+        assert normalize_widths(None) == (8, 7, 6, 5, 4, 3, 2, 1)
+        assert normalize_widths([4, 8, 4, 3]) == (8, 4, 3)
+        with pytest.raises(ValueError, match="non-empty"):
+            normalize_widths([])
+        with pytest.raises(ValueError, match="outside"):
+            normalize_widths([9])
+        with pytest.raises(ValueError, match="outside"):
+            normalize_widths([0])
+
+    def test_m_vector_shape_validated(self):
+        K, N = 128, 64
+        p = packed_lib.pack(rand((K, N), seed=11), group_axis=0)
+        x = rand((4, K), seed=12)
+        with pytest.raises(ValueError, match="one width per row"):
+            sefp_matmul_gemv_hetero(x, p, np.asarray([8, 4], np.int32))
+
+    def test_registered_on_all_backends(self):
+        assert dispatch.backends_for("sefp_matmul_gemv_hetero") == sorted(
+            dispatch.BACKENDS)
+
+
+# ---------------------------------------------------------------------------
+# serve-step layer: one fused hetero step vs per-width scalar steps
+# ---------------------------------------------------------------------------
+
+
+def _assert_step_rows_match_lockstep(cfg, unroll, paged):
+    """Run the hetero step (mixed widths) and, per ladder width, the scalar
+    step on the same batch; rows wanting that width must agree bitwise
+    across several greedy decode steps.  Rows are independent in decode, so
+    the scalar runs may feed different tokens at OTHER rows without
+    perturbing the compared rows."""
+    params = Z.init_params(cfg, jax.random.PRNGKey(0))
+    master = PS.pack_master_params(params, min_size=1 << 10)
+    B, PSZ, NPP = 4, 8, 2  # slots, page size, pages per slot
+    m = np.asarray([8, 6, 4, 3], np.int32)
+    m_dev = jnp.asarray(m)
+
+    if paged:
+        hetero = jax.jit(PS.make_master_serve_step_hetero_paged(
+            cfg, WIDTHS, layer_unroll=unroll, page_size=PSZ))
+        scalar = jax.jit(PS.make_master_serve_step_paged(
+            cfg, layer_unroll=unroll, page_size=PSZ))
+        n_pages = 1 + B * NPP  # page 0 is the null page
+        bt = np.zeros((B, NPP), np.int32)
+        for i in range(B):
+            bt[i] = 1 + i * NPP + np.arange(NPP)
+        bt = jnp.asarray(bt)
+
+        def init():
+            return T.lm_init_paged_cache(cfg, B, n_pages, PSZ)
+
+        def step(fn, cache, tok, width):
+            return fn(master, cache, tok, width, bt)
+    else:
+        hetero = jax.jit(PS.make_master_serve_step_hetero(
+            cfg, WIDTHS, layer_unroll=unroll))
+        scalar = jax.jit(PS.make_master_serve_step(cfg,
+                                                   layer_unroll=unroll))
+
+        def init():
+            return Z.init_cache(cfg, params, B, 16)
+
+        def step(fn, cache, tok, width):
+            return fn(master, cache, tok, width)
+
+    cache_h = init()
+    tok_h = jnp.asarray([3, 7, 11, 2], jnp.int32)
+    scalar_state = {w: (init(), tok_h) for w in WIDTHS}
+    for _ in range(3):
+        lh, cache_h = step(hetero, cache_h, tok_h, m_dev)
+        for w in WIDTHS:
+            cache_s, tok_s = scalar_state[w]
+            ls, cache_s = step(scalar, cache_s, tok_s, jnp.int32(w))
+            rows = np.flatnonzero(m == w)
+            np.testing.assert_array_equal(np.asarray(lh)[rows],
+                                          np.asarray(ls)[rows])
+            scalar_state[w] = (cache_s,
+                               jnp.argmax(ls, -1).astype(jnp.int32))
+        tok_h = jnp.argmax(lh, -1).astype(jnp.int32)
+
+
+class TestHeteroServeStep:
+    @pytest.mark.parametrize("cfg,unroll", [
+        (DENSE_CFG, None),
+        (MOE_CFG, None),
+        (RWKV_CFG, None),
+        (HYBRID_CFG, 1),
+    ], ids=["dense", "moe", "rwkv", "hybrid-unroll1"])
+    def test_step_rows_bitwise_lockstep(self, cfg, unroll):
+        _assert_step_rows_match_lockstep(cfg, unroll, paged=False)
+
+    @pytest.mark.parametrize("cfg,unroll", [
+        (DENSE_CFG, None),
+        (HYBRID_CFG, 1),
+    ], ids=["dense", "hybrid-unroll1"])
+    def test_paged_step_rows_bitwise_lockstep(self, cfg, unroll):
+        _assert_step_rows_match_lockstep(cfg, unroll, paged=True)
+
+
+# ---------------------------------------------------------------------------
+# policy layer: HeterogeneousPolicy units + SLO composition
+# ---------------------------------------------------------------------------
+
+
+class TestHeterogeneousPolicy:
+    def test_commits_everyone_at_wanted_width(self):
+        p = HeterogeneousPolicy()
+        wanted = {0: 8, 2: 4, 5: 3}
+        for _ in range(5):
+            m, commit = p.select(dict(wanted))
+            assert m == wanted          # per-slot dict, not one scalar
+            assert commit == {0, 2, 5}  # commit rate 1.0 by construction
+        assert p.starvation == {}       # nothing to rotate, nothing to wait
+
+    def test_registry(self):
+        assert isinstance(make_width_policy("heterogeneous"),
+                          HeterogeneousPolicy)
+        assert getattr(make_width_policy("heterogeneous"),
+                       "heterogeneous", False)
+
+    def test_slo_composition_clamps_per_slot(self):
+        """Under pressure the embedded slo-degrade state machine CLAMPS the
+        width vector per slot (honoring per-slot floors) instead of forcing
+        one batch-wide width — everyone still commits every step."""
+        p = HeterogeneousPolicy(degrade=SLODegradePolicy(queue_high=2))
+        sig = {"clock": 0, "queue_depth": 0, "active": 1, "slots": 4,
+               "step_seconds": None, "floors": {1: 8},
+               "widths": (8, 6, 4, 3)}
+        p.observe(dict(sig))
+        m, commit = p.select({0: 8, 1: 8, 2: 4})
+        assert m == {0: 8, 1: 8, 2: 4}  # healthy: exact fidelity
+        p.observe({**sig, "clock": 1, "queue_depth": 5})  # breach
+        m, commit = p.select({0: 8, 1: 8, 2: 4})
+        assert commit == {0, 1, 2}      # still everyone, every step
+        assert m == {0: 6, 1: 8, 2: 3}  # one rung down, slot 1 floored at 8
+        assert p.degradation["shift"] == 1
+        assert p.degradation["downshifted_slot_steps"] == 2
+
+
+# ---------------------------------------------------------------------------
+# width-rr starvation accounting (regression: audited semantics)
+# ---------------------------------------------------------------------------
+
+
+class TestWidthRRStarvationAccounting:
+    def test_high_water_vs_current_streak(self):
+        """``starvation`` is the lifetime HIGH-WATER wait per width group
+        (never reset — the fairness audit bound); ``current_waits`` is the
+        live streak, reset on serve and restarted at 0 when a drained
+        group reappears."""
+        p = WidthRoundRobinPolicy()
+        wanted = {0: 8, 1: 4}
+        for _ in range(4):
+            p.select(dict(wanted))
+        # steady two-group alternation: high-water pinned at 1, and the
+        # just-served group's live streak is 0
+        assert set(p.starvation.values()) == {1}
+        assert sorted(p.current_waits.values()) == [0, 1]
+        # group 4 drains: its live streak entry is dropped, its lifetime
+        # high-water persists
+        for _ in range(3):
+            m, _ = p.select({0: 8})
+            assert m == 8
+        assert 4 not in p.current_waits
+        assert p.starvation[4] == 1
+        assert p.current_waits == {8: 0}
+        # group 4 reappears: streak restarts at 0 (not carried across the
+        # drain), high-water unchanged until it genuinely waits longer
+        m, _ = p.select({0: 8, 1: 4})
+        assert m == 4  # rotation serves the returning group first
+        assert p.current_waits[4] == 0
+        assert p.starvation[4] == 1
+
+
+# ---------------------------------------------------------------------------
+# scheduler e2e: heterogeneous policy, oracle replay, token accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def server():
+    params = Z.init_params(DENSE_CFG, jax.random.PRNGKey(0))
+    srv = SwitchableServer(DENSE_CFG, params, max_len=96)
+    srv.set_policy(PrecisionPolicy.all_widths()
+                   .with_class("m8", 8).with_class("m6", 6)
+                   .with_class("m4", 4).with_class("m3", 3))
+    return srv
+
+
+def prompts(b=4, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, DENSE_CFG.vocab_size, (b, s)).astype(np.int32)
+
+
+def check_oracle(server, fr, prompt, **sample_kw):
+    sched, pm = fr.oracle_schedule()
+    solo = server.generate(prompt[None], max_new=len(fr.tokens),
+                           precision_schedule=sched, prefill_precision=pm,
+                           **sample_kw)
+    np.testing.assert_array_equal(fr.tokens, solo.tokens[0])
+
+
+class TestHeterogeneousScheduling:
+    def test_mixed_classes_all_at_wanted_width(self, server):
+        """Every request decodes EVERY step at its class width; commit rate
+        is 1.0, starvation empty, and each request replays bitwise on the
+        lockstep oracle."""
+        p = prompts(b=4, seed=3)
+        classes = ["m8", "m6", "m4", "m3"]
+        sched = server.continuous(slots=4, width_policy="heterogeneous")
+        rids = [sched.submit(p[i], 6, request_class=classes[i])
+                for i in range(4)]
+        done = sched.drain()
+        assert len(done) == 4
+        want = {"m8": 8, "m6": 6, "m4": 4, "m3": 3}
+        for i, rid in enumerate(rids):
+            fr = done[rid]
+            assert fr.decode_widths == [want[classes[i]]] * len(
+                fr.decode_widths)
+            check_oracle(server, fr, p[i])
+        stats = sched.stats
+        assert stats["commit_rate"] == 1.0
+        assert stats["starvation"] == {}
+        assert sum(stats["tokens_by_width"].values()) == \
+            stats["committed_tokens"]
+
+    def test_sampled_rows_replay_bitwise(self, server):
+        """temperature > 0 rows: per-slot PRNG streams survive the hetero
+        step — a sampled request replays bitwise with its seed."""
+        p = prompts(b=2, seed=21)
+        sched = server.continuous(slots=2, width_policy="heterogeneous")
+        r0 = sched.submit(p[0], 6, request_class="m6", temperature=0.8,
+                          top_k=8, seed=13)
+        r1 = sched.submit(p[1], 6, request_class="m3", temperature=1.1,
+                          top_k=4, seed=5)
+        done = sched.drain()
+        check_oracle(server, done[r0], p[0], temperature=0.8, top_k=8,
+                     seed=13)
+        check_oracle(server, done[r1], p[1], temperature=1.1, top_k=4,
+                     seed=5)
+
+    def test_staggered_admission_oracle(self, server):
+        """Slots join mid-flight at different widths; every finisher still
+        replays bitwise and tokens_by_width matches the per-request
+        width_counts aggregation."""
+        p = prompts(b=6, seed=8)
+        classes = ["m8", "m3", "m6", "m4", "m8", "m3"]
+        sched = server.continuous(slots=2, width_policy="heterogeneous")
+        rids = [sched.submit(p[i], 4, request_class=classes[i])
+                for i in range(6)]
+        done = sched.drain()
+        assert len(done) == 6
+        agg = {}
+        for i, rid in enumerate(rids):
+            fr = done[rid]
+            check_oracle(server, fr, p[i])
+            for w, c in fr.width_counts().items():
+                agg[w] = agg.get(w, 0) + c
+        stats = sched.stats
+        assert agg == stats["tokens_by_width"]
+        assert stats["commit_rate"] == 1.0
+        # heterogeneous serves multiple widths in ONE step: fewer steps
+        # than the per-width turn-taking would need
+        assert set(stats["width_steps"]) == {8, 6, 4, 3}
+
+    def test_tokens_by_width_all_policies(self, server):
+        """tokens_by_width is policy-agnostic accounting: width-rr runs
+        report it too, summing to committed_tokens."""
+        p = prompts(b=2, seed=30)
+        sched = server.continuous(slots=2, width_policy="width-rr")
+        sched.submit(p[0], 4, request_class="m8")
+        sched.submit(p[1], 4, request_class="m4")
+        sched.drain()
+        stats = sched.stats
+        assert sum(stats["tokens_by_width"].values()) == \
+            stats["committed_tokens"]
+        assert set(stats["tokens_by_width"]) <= {8, 4}

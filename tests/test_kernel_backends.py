@@ -21,7 +21,8 @@ from repro.kernels.sefp_pack.ref import sefp_pack_ref
 from repro.kernels.sefp_quant import sefp_quantize_pallas
 from repro.kernels.sefp_quant.ref import sefp_quantize_ref
 
-OPS = ("sefp_matmul", "sefp_matmul_gemv", "sefp_pack", "sefp_quant")
+OPS = ("sefp_matmul", "sefp_matmul_gemv", "sefp_matmul_gemv_hetero",
+       "sefp_pack", "sefp_quant")
 
 
 def rand(shape, seed=0, scale=1.0):
