@@ -28,6 +28,7 @@ from typing import Any, Optional
 
 from repro.artifact import (  # noqa: F401
     Artifact,
+    MissingBPSStats,
     export_artifact,
     load_artifact,
 )
@@ -52,12 +53,17 @@ from repro.serve.scheduler import (  # noqa: F401
     SLODegradePolicy,
 )
 from repro.serve.slots import FinishedRequest, Request  # noqa: F401
+from repro.serve.speculative import (  # noqa: F401
+    SpecAccounting,
+    SpeculativeConfig,
+)
 
 __all__ = [
     "Admission", "Artifact", "ContinuousScheduler", "DeadlineExceeded",
-    "FinetuneResult", "FinishedRequest", "GenerationResult", "ModelConfig",
-    "OTAROConfig", "PrecisionPolicy", "QueueFull", "Request",
-    "SLODegradePolicy", "ServeError", "SlotPoisoned", "SwitchableServer",
+    "FinetuneResult", "FinishedRequest", "GenerationResult",
+    "MissingBPSStats", "ModelConfig", "OTAROConfig", "PrecisionPolicy",
+    "QueueFull", "Request", "SLODegradePolicy", "ServeError", "SlotPoisoned",
+    "SpecAccounting", "SpeculativeConfig", "SwitchableServer",
     "UnknownRequestClass", "WIDTH_POLICIES", "export_artifact", "finetune",
     "init_params", "load_artifact", "make_loss_fn", "make_packed_serve_step",
     "otaro_config", "packed_param_shapes", "serve_errors", "serve_faults",

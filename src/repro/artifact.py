@@ -68,6 +68,28 @@ def _is_valid(path: str) -> bool:
     return os.path.exists(os.path.join(path, _DONE))
 
 
+class MissingBPSStats(KeyError):
+    """A consumer required the artifact's BPS visit/loss statistics but
+    meta.json has none (``bps: null`` — e.g. the artifact was packed from
+    bare params rather than an OTARo training state).  A KeyError subclass
+    so pre-existing ``except KeyError`` call sites keep working, but named
+    so the failure says WHAT is missing and what degrades without it (the
+    speculative acceptance estimator falls back to the static draft
+    width)."""
+
+    def __init__(self, path_or_hint: Optional[str] = None):
+        hint = f" at {path_or_hint!r}" if path_or_hint else ""
+        super().__init__(
+            f"artifact{hint} carries no BPS visit/loss statistics in "
+            f"meta.json (bps is null — it was packed without an OTARo "
+            f"training state); stats-driven consumers (e.g. the 'bps' "
+            f"speculative acceptance estimator, DESIGN.md §15) degrade "
+            f"to static behaviour without them")
+
+    def __str__(self) -> str:  # KeyError quotes its repr; keep it readable
+        return self.args[0]
+
+
 @dataclasses.dataclass
 class Artifact:
     """A loaded (or freshly packed) deployment artifact: the stacked-SEFP
@@ -311,6 +333,10 @@ class Artifact:
         srv = SwitchableServer.from_master(self.cfg, self.master,
                                            max_len=max_len, **kw)
         srv.set_policy(policy if policy is not None else self.policy)
+        # the BPS stats ride along so stats-driven serving consumers (the
+        # speculative acceptance estimator, DESIGN.md §15) can read them
+        # without holding the Artifact; None when the artifact has none
+        srv.bps_stats = self.bps_stats
         return srv
 
     def evaluate(self, batch, widths: Optional[Sequence[int]] = None) -> dict:
@@ -345,7 +371,22 @@ class Artifact:
 
     @property
     def bps_stats(self) -> Optional[dict]:
+        """The final BPS visit/loss statistics recorded at export
+        (``{"t", "t_b", "loss_b"}``, arms aligned with the policy's
+        ``widths`` order), or None for stats-less artifacts — the graceful
+        accessor; ``require_bps_stats`` is the loud one."""
         return self.meta.get("bps")
+
+    def require_bps_stats(self) -> dict:
+        """The BPS stats, or MissingBPSStats (a NAMED KeyError, not a bare
+        one) when the artifact predates them / was packed from bare
+        params.  Use this when the stats are load-bearing; use the
+        ``bps_stats`` property where degrading to static behaviour is the
+        right call."""
+        stats = self.meta.get("bps")
+        if stats is None:
+            raise MissingBPSStats(self.provenance.get("source"))
+        return stats
 
     @property
     def provenance(self) -> dict:

@@ -115,6 +115,17 @@ def _replay(server, args, policy):
         from repro.serve.scheduler import SLODegradePolicy
         width_policy = SLODegradePolicy(
             slo_step_seconds=args.slo_step_ms / 1e3)
+    spec_decode = None
+    if args.speculative:
+        spec_kw = {}
+        if args.draft_k is not None:
+            spec_kw["k"] = args.draft_k
+        if args.draft_width is not None:
+            spec_kw["draft_width"] = args.draft_width
+            spec_kw["candidates"] = (args.draft_width,)
+        spec_decode = spec_kw or True
+    elif args.draft_width is not None or args.draft_k is not None:
+        raise SystemExit("--draft-width/--draft-k require --speculative")
     sched = server.continuous(slots=args.slots,
                               width_policy=width_policy,
                               eos_id=args.eos_id,
@@ -124,7 +135,8 @@ def _replay(server, args, policy):
                               n_pages=args.n_pages,
                               prefill_chunk=args.prefill_chunk,
                               kv_dtype=args.kv_dtype,
-                              prefix_cache=not args.no_prefix_cache)
+                              prefix_cache=not args.no_prefix_cache,
+                              spec_decode=spec_decode)
     kv = sched.memory_report()["kv_cache"]
     if kv.get("paged"):
         print(f"paged KV: {kv['n_pages']} pages x {kv['page_size']} "
@@ -171,6 +183,14 @@ def _replay(server, args, policy):
               f"evicted={stats['evicted']} "
               f"deadline_missed={stats['deadline_missed']} "
               f"poisoned={stats['poisoned']}")
+    sp = stats.get("speculative")
+    if sp is not None:
+        rate = (f"{sp['acceptance_rate']:.2f}"
+                if sp["acceptance_rate"] is not None else "-")
+        print(f"speculative: k={sp['k']} estimator={sp['estimator']} "
+              f"macro_steps={sp['macro_steps']} drafted={sp['drafted']} "
+              f"accepted={sp['accepted']} wasted={sp['wasted']} "
+              f"bonus={sp['bonus_tokens']} acceptance={rate}")
     deg = stats["degradation"]
     if deg.get("escalations"):
         print(f"degradation: escalations={deg['escalations']} "
@@ -257,6 +277,19 @@ def main():
                     "whole prompt at admission)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable cross-request prompt-prefix KV reuse")
+    ap.add_argument("--speculative", action="store_true",
+                    help="self-speculative decoding (replay mode, DESIGN.md "
+                    "§15): draft k tokens per slot at a low width and "
+                    "verify them in one full-width batched step — greedy "
+                    "full-width requests speculate, everything else (and "
+                    "any degraded/sub-full-width step) decodes plain")
+    ap.add_argument("--draft-width", type=int, default=None,
+                    help="static fallback draft width for --speculative "
+                    "(default 4; the BPS acceptance estimator picks per "
+                    "request among {3,4} when the artifact has stats)")
+    ap.add_argument("--draft-k", type=int, default=None,
+                    help="draft tokens per speculative macro-step "
+                    "(default 3; the verify step batches k+1 positions)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="default EOS token id for replayed requests")
     ap.add_argument("--max-len", type=int, default=None,

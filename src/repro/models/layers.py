@@ -292,6 +292,75 @@ def paged_attention_decode(params, x, cfg: ModelConfig, k_pages, v_pages,
     return o @ params["wo"].astype(x.dtype), k_pages, v_pages
 
 
+def verify_attention(q, k_cache, v_cache, kv_len) -> jax.Array:
+    """Multi-position attention for draft verification: q [B,S,H,hd] vs
+    cache [B,Skv,KV,hd] with a per-(row, query) causal mask.
+
+    kv_len: int32[B,S] — query (b, i) sees only cache positions
+    ``< kv_len[b, i]``.  The speculative verify step feeds S = k+1 query
+    positions per row at positions ``pos[b] .. pos[b]+k``, each seeing its
+    own prefix (``kv_len[b, i] = pos[b] + i + 1``), so every query row is
+    the same elementwise score/softmax program as `decode_attention` run
+    solo at that position — the view index IS the logical position, exactly
+    as in the decode path."""
+    B, S, H, hd = q.shape
+    _, Skv, KV, _ = k_cache.shape
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+    qr = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qr.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale     # [B,KV,G,S,Skv]
+    tpos = jnp.arange(Skv, dtype=jnp.int32)
+    mask = tpos[None, None, :] >= kv_len[:, :, None]        # [B,S,Skv]
+    s = jnp.where(mask[:, None, None], NEG_INF, s)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bkgqh", p, v_cache.astype(jnp.float32))
+    o = jnp.moveaxis(o, 3, 1)                               # [B,S,KV,G,hd]
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def paged_attention_verify(params, x, cfg: ModelConfig, k_pages, v_pages,
+                           block_table, pos, page_size: int, n_used):
+    """Batched multi-position attention against a PAGED KV cache — the
+    speculative verify analogue of `paged_attention_decode`.
+
+    x: [B,S,d] — S = k+1 candidate positions per row, row b's query i at
+    logical position ``pos[b] + i``; k_pages/v_pages:
+    [n_pages, page_size, KV, hd]; block_table: int32[B, max_pages]; pos:
+    int32[B] (the position of the first candidate, i.e. the slot's current
+    decode position); n_used: int32[B] — row b only verifies its first
+    ``n_used[b]`` positions (0 for non-speculative rows riding the same
+    fixed-shape dispatch).
+
+    Each row scatters its VALID cells at ``(block_table[b, (pos[b]+i) //
+    page_size], (pos[b]+i) % page_size)`` — decode-region cells are
+    exclusive per slot (only full immutable prompt pages are ever shared),
+    so valid rows never collide; padded queries (``i >= n_used[b]``) are
+    routed to null page 0, whose contents are never read unmasked, so a
+    short or non-participating row can never corrupt a live cell.
+    Attention runs over the gathered block-table view with a per-query
+    causal mask (`verify_attention`), overwriting the draft's low-width
+    K/V with full-width bytes in the same pass.
+    Returns (out [B,S,d], new_k_pages, new_v_pages)."""
+    B, S, _ = x.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    q, k, v = qkv_project(params, x, cfg, positions)
+    valid = jnp.arange(S, dtype=jnp.int32)[None, :] < n_used[:, None]
+    logical = jnp.minimum(positions // page_size,
+                          block_table.shape[1] - 1)
+    pg = jnp.take_along_axis(block_table, logical, axis=1)   # [B,S]
+    pg = jnp.where(valid, pg, 0)
+    off = jnp.where(valid, positions % page_size, 0)
+    k_pages = k_pages.at[pg, off].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[pg, off].set(v.astype(v_pages.dtype))
+    kc = k_pages[block_table].reshape(B, -1, *k_pages.shape[2:])
+    vc = v_pages[block_table].reshape(B, -1, *v_pages.shape[2:])
+    o = verify_attention(q, kc, vc, kv_len=positions + 1)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    return o @ params["wo"].astype(x.dtype), k_pages, v_pages
+
+
 def cross_attention_apply(params, x, cfg: ModelConfig, k, v):
     """Decoder cross-attention against precomputed encoder k/v
     [B,S_enc,KV,hd].  Non-causal; x may be [B,S,d] or [B,1,d]."""

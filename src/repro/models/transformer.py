@@ -216,6 +216,23 @@ def attn_layer_decode_paged(p, x, k_pages, v_pages, block_table,
     return x, kp, vp
 
 
+def attn_layer_verify_paged(p, x, k_pages, v_pages, block_table,
+                            cfg: ModelConfig, pos, page_size: int, n_used):
+    """``attn_layer_decode_paged`` generalized to S candidate positions per
+    row (speculative verify): x is ``[B, S, d]`` with row b's query i at
+    global position ``pos[b] + i``, attending its own causal prefix through
+    the block-table view exactly like the chunked-prefill path does
+    (view index == logical position, per-query horizon).  ``n_used`` rows
+    the write mask — see layers.paged_attention_verify."""
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    o, kp, vp = L.paged_attention_verify(p["attn"], h, cfg, k_pages,
+                                         v_pages, block_table, pos,
+                                         page_size, n_used)
+    x = x + o
+    x = x + _ffn_apply(p, L.rmsnorm(x, p["ln2"], cfg.norm_eps), cfg)
+    return x, kp, vp
+
+
 def attn_layer_prefill_paged(p, x, k_pages, v_pages, block_table, start,
                              cfg: ModelConfig, page_size: int,
                              positions=None):
@@ -748,6 +765,47 @@ def lm_decode_hidden_paged(params, x_emb, cache, block_table,
     h = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
     return h, {**cache, "pages": {"k": new_kp, "v": new_vp},
                "pos": pos + 1}
+
+
+def lm_verify_hidden_paged(params, x_emb, cache, block_table,
+                           cfg: ModelConfig, resolve=None,
+                           layer_unroll: int = 1, page_size: int = 16,
+                           n_used=None):
+    """Speculative VERIFY forward over the paged continuous cache: x_emb
+    ``[B, S, d]`` holds, per row, the last committed token followed by up
+    to S-1 draft tokens, placed at global positions ``pos[b] + [0, S)``.
+    All S positions run in ONE batched pass (attn_layer_verify_paged) and
+    their full-width K/V overwrites the draft's low-width cells in place.
+
+    Unlike the decode step this does NOT advance ``cache["pos"]`` — the
+    caller decides how far the position moves after comparing draft tokens
+    to the verifier's argmax (serve/slots.rollback_paged).  ``n_used``
+    int32[B] marks how many leading positions each row actually verifies;
+    rows at 0 ride the dispatch without touching live cells.  Attention
+    families only — recurrent state (rwkv/hybrid) cannot be rolled back
+    position-wise, so those families cannot speculate."""
+    if cfg.family in ("rwkv", "hybrid"):
+        raise NotImplementedError(
+            "speculative verify requires a position-indexed cache; family "
+            f"{cfg.family!r} carries recurrent state that cannot be rolled "
+            "back to a rejected draft's predecessor")
+    pos = cache["pos"]
+    if n_used is None:
+        n_used = jnp.full(x_emb.shape[:1], x_emb.shape[1], jnp.int32)
+
+    def body(x, inp):
+        lp, (kp, vp) = inp
+        x, kp, vp = attn_layer_verify_paged(_resolve(resolve, lp), x,
+                                            kp, vp, block_table, cfg,
+                                            pos, page_size, n_used)
+        return x, (kp, vp)
+
+    x, (new_kp, new_vp) = lax.scan(
+        body, x_emb,
+        (params["layers"], (cache["pages"]["k"], cache["pages"]["v"])),
+        unroll=layer_unroll)
+    h = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return h, {**cache, "pages": {"k": new_kp, "v": new_vp}}
 
 
 def lm_prefill_paged_hidden(params, x_emb, pages, block_table, start,

@@ -100,6 +100,12 @@ class PrecisionPolicy:
                 class floor, so a class can refuse degradation outright
                 (floor == its wanted width).  Classes without a floor
                 degrade freely down to the policy's lowest width.
+    ``speculative``  optional self-speculative decoding spec (DESIGN.md
+                §15): a JSON-able dict of SpeculativeConfig fields
+                (``{"k", "draft_width", "candidates", ...}``, see
+                repro/serve/speculative.py).  A ContinuousScheduler built
+                over this policy speculates by default; its own
+                ``spec_decode`` argument overrides (False disables).
     """
 
     widths: Tuple[int, ...] = MANTISSA_WIDTHS
@@ -108,6 +114,7 @@ class PrecisionPolicy:
     plan: Optional[Plan] = None
     classes: Mapping[str, Plan] = dataclasses.field(default_factory=dict)
     floors: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    speculative: Optional[Mapping] = None
 
     def __post_init__(self):
         widths = tuple(_check_width(m, "policy width") for m in self.widths)
@@ -133,6 +140,18 @@ class PrecisionPolicy:
                 raise ValueError(f"floor names unknown class {k!r}; "
                                  f"defined classes: {sorted(norm)}")
         object.__setattr__(self, "floors", fl)
+        if self.speculative is not None:
+            # stored as a plain JSON-able dict; deep validation happens in
+            # SpeculativeConfig (serve/speculative.py) when a scheduler
+            # (or with_speculation) lowers it — policy.py stays import-
+            # independent of the serve package
+            try:
+                object.__setattr__(self, "speculative",
+                                   dict(self.speculative))
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"speculative must be a dict of SpeculativeConfig "
+                    f"fields or None, got {self.speculative!r}") from None
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -178,6 +197,19 @@ class PrecisionPolicy:
         floors[str(name)] = _check_width(min_width,
                                          f"floor for class {name!r}")
         return dataclasses.replace(self, floors=floors)
+
+    def with_speculation(self, spec=True) -> "PrecisionPolicy":
+        """Attach a self-speculative decoding spec (DESIGN.md §15):
+        ``True`` for defaults, an int for the draft depth ``k``, a dict of
+        SpeculativeConfig fields, or a SpeculativeConfig.  ``False``/None
+        detaches.  Schedulers built over the policy speculate by default;
+        their ``spec_decode`` argument still overrides per scheduler."""
+        # runtime import: policy.py is imported by the serve package, so
+        # the serve dependency must stay out of module scope
+        from repro.serve.speculative import as_spec
+        cfg = as_spec(spec)
+        return dataclasses.replace(
+            self, speculative=None if cfg is None else cfg.describe())
 
     # -- serve-side lowering ------------------------------------------------
     def plan_for(self, request_class: Optional[str] = None) -> Plan:
@@ -245,7 +277,9 @@ class PrecisionPolicy:
                 "plan": [list(s) for s in self.plan] if self.plan else None,
                 "classes": {k: [list(s) for s in v]
                             for k, v in self.classes.items()},
-                "floors": dict(self.floors)}
+                "floors": dict(self.floors),
+                "speculative": (dict(self.speculative)
+                                if self.speculative is not None else None)}
 
     @classmethod
     def from_meta(cls, d: dict) -> "PrecisionPolicy":
@@ -256,4 +290,5 @@ class PrecisionPolicy:
                    classes={k: tuple((m, n) for m, n in v)
                             for k, v in d.get("classes", {}).items()},
                    floors={k: int(v)
-                           for k, v in d.get("floors", {}).items()})
+                           for k, v in d.get("floors", {}).items()},
+                   speculative=d.get("speculative"))

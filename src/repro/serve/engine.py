@@ -322,8 +322,13 @@ class SwitchableServer:
         interleaved with decode steps, ``prefix_cache=False`` disables
         cross-request prompt-prefix KV reuse, and ``kv_dtype`` selects the
         page storage dtype (e.g. ``jnp.float8_e4m3fn`` for the int8-class
-        KV cache — a tolerance regime, not bitwise).  Shares this server's
-        compiled prefill/decode executables and packed master."""
+        KV cache — a tolerance regime, not bitwise).  ``spec_decode``
+        turns on self-speculative decoding (DESIGN.md §15: the same packed
+        master drafts k tokens at a low width and verifies them in one
+        full-width batched step) — True / a draft depth int / a dict of
+        SpeculativeConfig fields / a SpeculativeConfig; None inherits the
+        policy's ``speculative`` spec, False disables.  Shares this
+        server's compiled prefill/decode executables and packed master."""
         from repro.serve.scheduler import ContinuousScheduler
         return ContinuousScheduler(self, slots=slots,
                                    width_policy=width_policy,

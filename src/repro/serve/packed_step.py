@@ -150,6 +150,26 @@ def master_logits_hetero(h_last, unembed, m_rows, widths,
                                    backend=kernel_backend)
 
 
+def master_logits_all(h, unembed, m, kernel_backend: str | None = None):
+    """``master_logits`` at EVERY position: h [B,S,d] -> logits [B,S,V]
+    f32.  Row (b, s) is the same projection program as ``master_logits``
+    run on that row alone — the speculative verify head, where the
+    verifier needs the next-token distribution after each of the k+1
+    candidate positions in one dispatch."""
+    w = unembed["w_unembed"]
+    if not packed_lib.is_master_leaf(w):
+        wq = w.astype(jnp.float32)
+        return h.astype(jnp.float32) @ wq
+    if kernel_backend is None:
+        wq = packed_lib.dequantize_stacked(w, m, dtype=jnp.float32)
+        return h.astype(jnp.float32) @ wq
+    from repro.kernels.sefp_matmul import sefp_matmul_gemv
+    B, S, d = h.shape
+    flat = sefp_matmul_gemv(h.reshape(B * S, d), packed_lib.packed_view(w),
+                            m, backend=kernel_backend)
+    return flat.reshape(B, S, -1)
+
+
 def _auto_layer_unroll(cfg: ModelConfig, layer_unroll: int | None) -> int:
     """Decode layer-loop unroll factor.  Per-step compute is tiny, so on
     CPU (per-iteration loop overhead, no HLO-size pressure) the layer loop
@@ -306,6 +326,94 @@ def make_master_serve_step_hetero_paged(cfg: ModelConfig, widths,
         return logits, cache
 
     return serve
+
+
+def make_master_draft_scan_paged(cfg: ModelConfig, widths, k_max: int,
+                                 kernel_backend: str | None = None,
+                                 layer_unroll: int | None = None,
+                                 page_size: int = 16):
+    """draft(master, cache, tok [B] int32, m_rows int32[B], block_table,
+    k_eff int32[B]) -> (draft_toks int32[B, k_max], new_cache): the
+    speculative DRAFT phase as ONE fused dispatch — a lax.scan of k_max
+    width-heterogeneous greedy decode sub-steps (each row truncating the
+    shared packed master at its own draft width ``m_rows[b]``), feeding
+    each row's argmax back on-device.  Row b participates in sub-step i
+    only while ``i < k_eff[b]``: masked rows' KV cell and position are
+    restored per sub-step (slots.select_paged), so plain rows and
+    exhausted drafts ride the fixed-shape dispatch untouched.  Draft
+    sub-step i writes row b's KV cell ``pos[b] + i`` at the DRAFT width —
+    the verify step overwrites every one of them at full width, so
+    low-width bytes never outlive the macro-step.  Greedy only: the draft
+    proposes, the verifier disposes, so draft sampling needs no PRNG."""
+    if cfg.is_encdec:
+        raise NotImplementedError(
+            "packed-master serving covers the LM families")
+    from repro.serve import slots as slots_lib
+    dt = jnp.bfloat16
+    unroll = _auto_layer_unroll(cfg, layer_unroll)
+    widths = tuple(widths)
+    k_max = int(k_max)
+
+    def draft(master, cache, tok, m_rows, block_table, k_eff):
+        def resolve(layer_slice, w):
+            return dequant_master_tree(layer_slice, jnp.int32(w), dt)
+
+        def body(carry, i):
+            cache, tok = carry
+            x = L.embed(master["embed"], tok[:, None], dt)
+            h, new_cache = T.lm_decode_hidden_paged(
+                master, x, cache, block_table, cfg, resolve=resolve,
+                layer_unroll=unroll, page_size=page_size,
+                hetero=(m_rows, widths))
+            logits = master_logits_hetero(h, master["unembed"], m_rows,
+                                          widths, kernel_backend)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            eff = i < k_eff
+            cache = slots_lib.select_paged(eff, new_cache, cache,
+                                           block_table, page_size)
+            tok = jnp.where(eff, nxt, tok)
+            return (cache, tok), nxt
+
+        (cache, _), toks = jax.lax.scan(
+            body, (cache, tok), jnp.arange(k_max, dtype=jnp.int32))
+        return jnp.transpose(toks), cache
+
+    return draft
+
+
+def make_master_verify_step_paged(cfg: ModelConfig,
+                                  kernel_backend: str | None = None,
+                                  layer_unroll: int | None = None,
+                                  page_size: int = 16):
+    """verify(master, cache, tokens int32[B, S], m, block_table, n_used
+    int32[B]) -> (logits f32[B, S, V], cache): the speculative VERIFY
+    phase — row b's ``tokens[b]`` is its last committed token followed by
+    S-1 draft proposals, forwarded at the FULL width m through the paged
+    attention view in one batched pass (lm_verify_hidden_paged), with the
+    full-width K/V overwriting the draft's low-width cells in place.
+    ``logits[b, i]`` is the next-token distribution after position
+    ``pos[b] + i`` — compare ``argmax(logits[b, i-1])`` to draft token i
+    to find the accepted prefix.  ``cache["pos"]`` is NOT advanced; the
+    caller rolls forward/back via slots.rollback_paged once accept
+    lengths are known."""
+    if cfg.is_encdec:
+        raise NotImplementedError(
+            "packed-master serving covers the LM families")
+    dt = jnp.bfloat16
+    unroll = _auto_layer_unroll(cfg, layer_unroll)
+
+    def verify(master, cache, tokens, m, block_table, n_used):
+        def resolve(layer_slice):
+            return dequant_master_tree(layer_slice, m, dt)
+
+        x = L.embed(master["embed"], tokens, dt)
+        h, cache = T.lm_verify_hidden_paged(
+            master, x, cache, block_table, cfg, resolve=resolve,
+            layer_unroll=unroll, page_size=page_size, n_used=n_used)
+        logits = master_logits_all(h, master["unembed"], m, kernel_backend)
+        return logits, cache
+
+    return verify
 
 
 def make_master_prefill_paged(cfg: ModelConfig,

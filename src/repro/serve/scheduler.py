@@ -132,6 +132,7 @@ from repro.serve import errors as errors_lib
 from repro.serve import packed_step as packed_step_lib
 from repro.serve import pages as pages_lib
 from repro.serve import slots as slots_lib
+from repro.serve import speculative as spec_lib
 from repro.serve.errors import BadDeadline, QueueFull, UnknownRequestClass
 from repro.serve.pages import PageAllocator, PrefixCache
 from repro.serve.sampler import sample_token, sample_token_vec
@@ -550,6 +551,53 @@ def _make_continuous_step(serve_step, page_size: int):
     return jax.jit(step, static_argnames=("commit_all",))
 
 
+def _make_spec_macro(draft_fn, verify_step, page_size, s_max):
+    """The whole speculative macro-step as ONE jitted dispatch
+    (DESIGN.md §15): the fused k-step low-width draft scan, the batched
+    full-width verify over the feed token + the k drafts, and — all
+    in-graph — the greedy argmax, per-row health, accept length, the
+    rejected-tail rollback and the next feed token.  The host's single
+    round-trip is bookkeeping-only: by the time it sees the accept
+    lengths, the cache is already rolled back and the feed tokens for
+    the next step are already on device.
+
+    Draft writes are provisional (``pos`` is restored before the verify
+    re-derives every cell at full width; the rollback owns the position
+    advance).  A row is healthy when every USED position's verify logits
+    are finite (padded positions are don't-cares — they were null-routed
+    on write).  The accept length is the longest draft prefix matching
+    the verifier's argmax (``cumprod`` of the per-position match); an
+    unhealthy row keeps 0 cells, which makes the rollback an exact
+    restore of its pre-macro-step bytes."""
+    def run(master, cache, tok, m_rows, m_verify, block_table, k_eff):
+        draft_toks, dcache = draft_fn(master, cache, tok, m_rows,
+                                      block_table, k_eff)
+        dcache = {**dcache, "pos": cache["pos"]}
+        n_used = jnp.where(k_eff > 0, k_eff + 1, 0).astype(jnp.int32)
+        toks = jnp.concatenate([tok[:, None], draft_toks], axis=1)
+        logits, vcache = verify_step(master, dcache, toks, m_verify,
+                                     block_table, n_used)
+        finite = jnp.all(jnp.isfinite(logits), axis=-1)
+        used = (jnp.arange(logits.shape[1], dtype=jnp.int32)[None, :]
+                < n_used[:, None])
+        ok = jnp.all(finite | ~used, axis=-1)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        drafted = (jnp.arange(draft_toks.shape[1], dtype=jnp.int32)[None, :]
+                   < k_eff[:, None])
+        match = (draft_toks == pred[:, :-1]) & drafted
+        accept = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1),
+                         axis=1)
+        live = (k_eff > 0) & ok
+        keep = jnp.where(live, accept + 1, 0)
+        vcache = slots_lib.rollback_paged(vcache, block_table, keep,
+                                          n_used, page_size=page_size,
+                                          s_max=s_max)
+        bonus = jnp.take_along_axis(pred, accept[:, None], axis=1)[:, 0]
+        nxt = jnp.where(live, bonus, tok)
+        return draft_toks, pred, ok, accept, nxt, vcache
+    return jax.jit(run)
+
+
 # ---------------------------------------------------------------------------
 # admission verdicts
 # ---------------------------------------------------------------------------
@@ -620,7 +668,8 @@ class ContinuousScheduler:
                  n_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  kv_dtype=None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 spec_decode=None):
         self._srv = server
         self.cfg = server.cfg
         self.n_slots = int(slots)
@@ -751,6 +800,46 @@ class ContinuousScheduler:
         self._write_slot = server._write_slot_fn
         self._scrub_pages_fn = server._scrub_pages_fn
         self._set_pos = server._set_pos_fn
+
+        # -- self-speculative decoding (DESIGN.md §15) ---------------------
+        # spec_decode=None inherits the precision policy's speculation
+        # spec (PrecisionPolicy.speculative); an explicit True/int/dict/
+        # SpeculativeConfig overrides it, False disables it outright.
+        spec = spec_lib.as_spec(spec_decode)
+        if spec_decode is None:
+            spec = spec_lib.as_spec(getattr(self._policy, "speculative",
+                                            None))
+            if spec is not None and not self._chunkable:
+                spec = None  # recurrent state cannot be rolled back
+        elif spec is not None and not self._chunkable:
+            raise ValueError(
+                f"spec_decode requires a chunkable attention family "
+                f"(dense/moe/vlm) — {self.cfg.family} carries recurrent "
+                f"state that cannot be rolled back after a rejected draft")
+        self._spec = spec
+        self._spec_acct = spec_lib.SpecAccounting()
+        if spec is not None:
+            self._spec_est = spec_lib.make_estimator(spec)
+            self._bps_stats = getattr(server, "bps_stats", None)
+            # spec executables are keyed on (page_size, draft ladder, k):
+            # the ladder is baked into the draft scan's lax.cond sweep and
+            # k is its static scan length
+            skey = (self.page_size, spec.ladder, int(spec.k))
+            if getattr(server, "_spec_exec_key", None) != skey:
+                draft_scan = packed_step_lib.make_master_draft_scan_paged(
+                    self.cfg, spec.ladder, int(spec.k),
+                    server.kernel_backend, server.layer_unroll,
+                    page_size=self.page_size)
+                server._spec_macro_fn = _make_spec_macro(
+                    draft_scan,
+                    packed_step_lib.make_master_verify_step_paged(
+                        self.cfg, server.kernel_backend,
+                        server.layer_unroll, page_size=self.page_size),
+                    self.page_size, int(spec.k) + 1)
+                server._spec_exec_key = skey
+            self._spec_macro = server._spec_macro_fn
+            self._spec_vw = jnp.int32(spec.verify_width)
+            self._spec_arg_cache: Dict[tuple, tuple] = {}
 
         self._counts = {"steps": 0, "committed_tokens": 0,
                         "slot_steps_active": 0, "slot_steps_committed": 0,
@@ -1068,6 +1157,24 @@ class ContinuousScheduler:
         pages = hits + self._allocator.alloc(n_fresh)
         return pages, len(hits)
 
+    def _spec_pick(self, req: Request) -> Optional[int]:
+        """Draft width for ``req`` (chosen ONCE, at admission), or None
+        when the request decodes plain: speculation needs greedy sampling
+        (the accept rule compares argmaxes), at least two decode tokens to
+        ever draft ahead of, and an allowed request class."""
+        spec = self._spec
+        if spec is None or req.temperature > 0 or req.max_new < 3:
+            return None
+        if spec.classes is not None and req.request_class not in spec.classes:
+            return None
+        w = int(self._spec_est.draft_width(spec, self._bps_stats,
+                                           self._policy.widths))
+        if w not in spec.ladder:
+            raise RuntimeError(
+                f"estimator {self._spec_est.name!r} chose draft width {w} "
+                f"outside the compiled ladder {spec.ladder}")
+        return w
+
     def _admit_one(self, req: Request, schedule, idx: int) -> bool:
         """Admit ``req`` into slot ``idx``; False when the page budget
         blocks it (the request stays at the queue head)."""
@@ -1084,7 +1191,8 @@ class ContinuousScheduler:
                           decode_widths=[], prefill_precision=pm,
                           admit_step=self.clock, phase="prefill",
                           prefill_pos=n_reused * self.page_size,
-                          pages=pages, n_reused=n_reused)
+                          pages=pages, n_reused=n_reused,
+                          spec_draft_width=self._spec_pick(req))
         self._table.admit(idx, state)
         self._counts["admitted"] += 1
         self._counts["reused_pages"] += n_reused
@@ -1203,25 +1311,27 @@ class ContinuousScheduler:
         else:
             m_by_slot = None
             m_arg = jnp.int32(m)
-        mask = np.zeros((self.n_slots,), bool)
-        mask[sorted(commit)] = True
         poison = np.zeros((self.n_slots,), bool)
         for f in self._faults:
             f.poison_slots(self, poison)
-        nxt, cache, keys, ok = self._step_fn(
-            self._srv.master, self._cache, self._bt(), self._tok,
-            m_arg,
-            self._keys, jnp.asarray(self._temps), jnp.asarray(self._topks),
-            jnp.asarray(mask),
-            jnp.asarray(poison) if poison.any() else self._no_poison,
-            # the fast path must stay off while any slot prefills: its
-            # garbage decode write needs the masked restore (see
-            # _make_continuous_step)
-            commit_all=(len(commit) == len(wanted)
-                        and not self._any_prefilling()))
-        self._cache, self._keys, self._tok = cache, keys, nxt
-        # ONE host round-trip per continuous step (tokens + health)
-        toks, ok = jax.device_get((nxt, ok))
+        # speculative rows this step (§15): spec-enabled slots whose
+        # REALIZED width is the verify width — a degraded or sub-full-
+        # width row silently decodes plain, which is the whole SLO /
+        # heterogeneous composition rule — with draft budget left before
+        # max_new.  Fault-poisoned rows demote to the plain path so the
+        # §12 quarantine machinery applies unchanged.
+        spec_rows: Dict[int, int] = {}
+        if self._spec is not None:
+            vw = int(self._spec.verify_width)
+            for idx in commit:
+                s = self._table.get(idx)
+                w = int(m_by_slot[idx]) if self._hetero else int(m)
+                if (s.spec_draft_width is not None and w == vw
+                        and not poison[idx]):
+                    k_eff = min(int(self._spec.k),
+                                s.req.max_new - len(s.emitted) - 1)
+                    if k_eff >= 1:
+                        spec_rows[idx] = k_eff
         self.clock += 1
         self._counts["steps"] += 1
         self._counts["slot_steps_active"] += len(wanted)
@@ -1234,39 +1344,178 @@ class ContinuousScheduler:
                 self._counts["width_steps"][int(w)] += 1
         else:
             self._counts["width_steps"][int(m)] += 1
-        for idx in sorted(commit):
+        if spec_rows:
+            self._spec_step(set(commit) - set(spec_rows), spec_rows,
+                            m_arg, m_by_slot, m, poison)
+        else:
+            mask = np.zeros((self.n_slots,), bool)
+            mask[sorted(commit)] = True
+            nxt, cache, keys, ok = self._step_fn(
+                self._srv.master, self._cache, self._bt(), self._tok,
+                m_arg,
+                self._keys, jnp.asarray(self._temps),
+                jnp.asarray(self._topks),
+                jnp.asarray(mask),
+                jnp.asarray(poison) if poison.any() else self._no_poison,
+                # the fast path must stay off while any slot prefills: its
+                # garbage decode write needs the masked restore (see
+                # _make_continuous_step)
+                commit_all=(len(commit) == len(wanted)
+                            and not self._any_prefilling()))
+            self._cache, self._keys, self._tok = cache, keys, nxt
+            # ONE host round-trip per continuous step (tokens + health)
+            toks, ok = jax.device_get((nxt, ok))
+            for idx in sorted(commit):
+                slot = self._table.get(idx)
+                if not bool(ok[idx]):
+                    # quarantine: the row did NOT commit (traced health
+                    # gate), so its device state is still the last healthy
+                    # step — retire just this slot, neighbours untouched
+                    # (§12)
+                    self._retire(idx, "poisoned", status="poisoned")
+                    self._counts["poisoned"] += 1
+                    continue
+                self._counts["slot_steps_committed"] += 1
+                realized = int(m_by_slot[idx]) if self._hetero else int(m)
+                self._commit_token(idx, slot, int(toks[idx]), realized)
+        self._deadline_sweep()
+        self._last_step_seconds = time.perf_counter() - t0
+        return True
+
+    def _commit_token(self, idx: int, slot: SlotState, t: int,
+                      realized: int) -> bool:
+        """Book ONE committed token on slot ``idx``: width accounting,
+        stream emit, repetition quarantine, EOS / length retirement.
+        Returns True when the slot retired (the speculative commit walk
+        stops there — tokens after an EOS are discarded host-side; the
+        slot's device state is torn down by the retire anyway)."""
+        self._counts["committed_tokens"] += 1
+        self._counts["tokens_by_width"][realized] += 1
+        slot.decode_widths.append(realized)
+        prev = slot.emitted[-1]
+        slot.emitted.append(t)
+        slot.repeat_run = slot.repeat_run + 1 if t == prev else 1
+        eos = slot.req.eos_id
+        hit_eos = eos is not None and t == eos
+        if (self.repetition_limit is not None and not hit_eos
+                and slot.repeat_run >= self.repetition_limit):
+            self._emit(slot.req, t, True)
+            self._retire(idx, "repetition", status="poisoned")
+            self._counts["poisoned"] += 1
+            return True
+        done = hit_eos or len(slot.emitted) >= slot.req.max_new
+        self._emit(slot.req, t, done)
+        if done:
+            self._retire(idx, "eos" if hit_eos else "length")
+        return done
+
+    def _spec_step(self, plain_commit, spec_rows: Dict[int, int],
+                   m_arg, m_by_slot, m, poison) -> None:
+        """One speculative macro-step (DESIGN.md §15): ONE fused spec
+        dispatch (plus a plain sub-step when plain rows are mixed in) and
+        ONE bookkeeping-only host round-trip.
+
+          1. plain rows decode exactly as before (masked commit — spec
+             rows ride along restored, so mixing costs them nothing);
+          2. the fused macro dispatch drafts k tokens per spec row at its
+             per-slot draft width (argmax feedback on-device), verifies
+             all k+1 candidate positions at full width in one batched
+             pass, computes argmax + health + accept length in-graph,
+             rolls back the rejected tail (cells zeroed through the
+             block table — byte-exact, decode cells are slot-exclusive
+             and scrubbed-at-retirement; position += committed count)
+             and selects the next feed token per row.
+
+        The host only sees (plain token, draft tokens, verify argmax,
+        health, accept length) and updates the books — by the time it
+        looks, the cache is already rolled back and the next feed tokens
+        are already on device."""
+        spec = self._spec
+        bt = self._bt()
+        plain_out = None
+        if plain_commit:
+            mask = np.zeros((self.n_slots,), bool)
+            mask[sorted(plain_commit)] = True
+            nxt, cache, keys, ok = self._step_fn(
+                self._srv.master, self._cache, bt, self._tok, m_arg,
+                self._keys, jnp.asarray(self._temps),
+                jnp.asarray(self._topks), jnp.asarray(mask),
+                jnp.asarray(poison) if poison.any() else self._no_poison,
+                commit_all=False)
+            self._cache, self._keys, self._tok = cache, keys, nxt
+            plain_out = (nxt, ok)
+        # -- draft + verify + accept + rollback: ONE fused dispatch --------
+        # non-spec rows ride along at the modal draft width (k_eff 0 — the
+        # scan restores their cells) so padding never adds a ladder branch
+        fill = collections.Counter(
+            self._table.get(i).spec_draft_width
+            for i in spec_rows).most_common(1)[0][0]
+        m_draft = np.full((self.n_slots,), fill, np.int32)
+        k_eff_vec = np.zeros((self.n_slots,), np.int32)
+        for idx, ke in spec_rows.items():
+            m_draft[idx] = self._table.get(idx).spec_draft_width
+            k_eff_vec[idx] = ke
+        # steady-state macro-steps reuse the same (widths, budgets) vectors
+        # step after step — cache the device copies so the hot path pays
+        # zero per-step uploads (the cache stays tiny: one entry per
+        # distinct draft-width mix / end-of-request budget taper)
+        key = (m_draft.tobytes(), k_eff_vec.tobytes())
+        dev = self._spec_arg_cache.get(key)
+        if dev is None:
+            if len(self._spec_arg_cache) >= 64:
+                self._spec_arg_cache.clear()
+            dev = (jnp.asarray(m_draft), jnp.asarray(k_eff_vec))
+            self._spec_arg_cache[key] = dev
+        draft_toks, pred, vok, acc, nxt_all, cache = self._spec_macro(
+            self._srv.master, self._cache, self._tok,
+            dev[0], self._spec_vw, bt, dev[1])
+        self._cache = cache
+        self._tok = nxt_all  # stays on device; the get below is books-only
+        # ONE host round-trip for the whole macro-step
+        if plain_out is not None:
+            toks, ok, draft_h, pred_h, vok_h, acc_h = jax.device_get(
+                (plain_out[0], plain_out[1], draft_toks, pred, vok, acc))
+        else:
+            ok = None
+            toks, draft_h, pred_h, vok_h, acc_h = jax.device_get(
+                (nxt_all, draft_toks, pred, vok, acc))
+        accepts: Dict[int, Optional[int]] = {
+            idx: (int(acc_h[idx]) if bool(vok_h[idx]) else None)
+            for idx in spec_rows}  # None: keep-0 = exact restore happened
+        # -- commit --------------------------------------------------------
+        for idx in sorted(plain_commit):
             slot = self._table.get(idx)
             if not bool(ok[idx]):
-                # quarantine: the row did NOT commit (traced health gate),
-                # so its device state is still the last healthy step —
-                # retire just this slot, neighbours untouched (§12)
                 self._retire(idx, "poisoned", status="poisoned")
                 self._counts["poisoned"] += 1
                 continue
             self._counts["slot_steps_committed"] += 1
-            self._counts["committed_tokens"] += 1
             realized = int(m_by_slot[idx]) if self._hetero else int(m)
-            self._counts["tokens_by_width"][realized] += 1
-            t = int(toks[idx])
-            slot.decode_widths.append(realized)
-            prev = slot.emitted[-1]
-            slot.emitted.append(t)
-            slot.repeat_run = slot.repeat_run + 1 if t == prev else 1
-            eos = slot.req.eos_id
-            hit_eos = eos is not None and t == eos
-            if (self.repetition_limit is not None and not hit_eos
-                    and slot.repeat_run >= self.repetition_limit):
-                self._emit(slot.req, t, True)
-                self._retire(idx, "repetition", status="poisoned")
+            self._commit_token(idx, slot, int(toks[idx]), realized)
+        for idx in sorted(spec_rows):
+            slot = self._table.get(idx)
+            ke = spec_rows[idx]
+            j = accepts[idx]
+            if j is None:
+                # non-finite verify logits: the rollback above already
+                # restored the slot to its pre-macro-step bytes (keep=0),
+                # so quarantine proceeds exactly as a plain poisoned row
+                self._retire(idx, "poisoned", status="poisoned")
                 self._counts["poisoned"] += 1
                 continue
-            done = hit_eos or len(slot.emitted) >= slot.req.max_new
-            self._emit(slot.req, t, done)
-            if done:
-                self._retire(idx, "eos" if hit_eos else "length")
-        self._deadline_sweep()
-        self._last_step_seconds = time.perf_counter() - t0
-        return True
+            self._counts["slot_steps_committed"] += 1
+            slot.spec_drafted += ke
+            slot.spec_accepted += j
+            slot.spec_rejected += ke - j
+            committed = [int(draft_h[idx][i]) for i in range(j)]
+            committed.append(int(pred_h[idx][j]))  # the bonus token
+            realized = int(spec.verify_width)
+            n_done = 0
+            for t in committed:
+                n_done += 1
+                if self._commit_token(idx, slot, t, realized):
+                    break  # retired; the device-side feed token is moot
+            self._spec_acct.record(slot.spec_draft_width, ke, j, n_done)
 
     def _deadline_sweep(self) -> None:
         """Retire slots (decoding OR still prefilling) whose step budget is
@@ -1352,6 +1601,12 @@ class ContinuousScheduler:
             self._bt_dev = None
             self._scrub(freed)
         self._counts["finished"] += 1
+        spec_info = None
+        if slot.spec_draft_width is not None:
+            spec_info = {"draft_width": int(slot.spec_draft_width),
+                         "drafted": slot.spec_drafted,
+                         "accepted": slot.spec_accepted,
+                         "rejected": slot.spec_rejected}
         self._finished[slot.req.rid] = FinishedRequest(
             rid=slot.req.rid,
             tokens=np.asarray(slot.emitted, np.int32),
@@ -1363,7 +1618,8 @@ class ContinuousScheduler:
             submit_step=slot.req.submit_step,
             admit_step=slot.admit_step,
             finish_step=self.clock,
-            status=status)
+            status=status,
+            spec=spec_info)
 
     # -- accounting ---------------------------------------------------------
     @property
@@ -1397,7 +1653,16 @@ class ContinuousScheduler:
             "prefill_only_steps": c["prefill_only_steps"],
             "decode_stall_steps": c["decode_stall_steps"],
             "pages": self._page_stats(),
+            "speculative": self._spec_stats(),
         }
+
+    def _spec_stats(self) -> Optional[dict]:
+        if self._spec is None:
+            return None
+        return {"k": int(self._spec.k),
+                "verify_width": int(self._spec.verify_width),
+                "estimator": self._spec_est.name,
+                **self._spec_acct.summary()}
 
     def _page_stats(self) -> Optional[dict]:
         if not self._paged:

@@ -95,6 +95,7 @@ class FinishedRequest:
     admit_step: int
     finish_step: int
     status: str = "ok"          # ok | evicted | deadline | poisoned
+    spec: Optional[Dict[str, int]] = None  # speculative accounting, if any
 
     @property
     def ok(self) -> bool:
@@ -158,6 +159,10 @@ class SlotState:
     pages: List[int] = dataclasses.field(default_factory=list)
     n_reused: int = 0           # leading shared (read-only) pages
     inserted_pages: List[int] = dataclasses.field(default_factory=list)
+    spec_draft_width: Optional[int] = None  # draft width (None = plain)
+    spec_drafted: int = 0       # draft tokens proposed for this slot
+    spec_accepted: int = 0      # draft tokens accepted by the verifier
+    spec_rejected: int = 0      # draft tokens rejected (rolled back)
 
     @property
     def wanted(self) -> int:
@@ -329,6 +334,44 @@ def install_prefill_pages(cache: Any, slot_cache: Any, idx, block_row,
             slot_cache["attn"]["v"][:, 0, :plen].astype(
                 cache["pages"]["v"].dtype)),
     }
+    return new
+
+
+def rollback_paged(cache: Any, block_table, keep, n_written,
+                   page_size: int, s_max: int) -> Any:
+    """Settle a speculative macro-step: advance each row's position by its
+    accepted token count and zero the rejected-tail KV cells.
+
+    ``keep`` int32[B] — tokens committed this macro-step (accepted drafts
+    + the verifier's bonus token; 0 for rows that did not speculate);
+    ``n_written`` int32[B] — cells the draft+verify pass wrote for the row
+    (``k_eff + 1``; 0 for non-participants); ``s_max`` static — the
+    compiled upper bound (``k_max + 1``).  Row b's cells ``pos[b] +
+    [keep[b], n_written[b])`` are zeroed through its block table — a
+    byte-exact restore, because decode-region cells are exclusive to the
+    slot (only full immutable prompt pages are ever shared) and were zero
+    before the draft wrote them (scrub-at-retirement discipline), so a
+    rejected draft never leaks bytes into a later resident's gathered
+    view.  Inactive (row, i) pairs are routed to null page 0, where
+    writing zeros is always harmless.  ``pos`` moves to the next write
+    cell: ``pos + keep``."""
+    pos = cache["pos"]
+    offs = jnp.arange(s_max, dtype=jnp.int32)[None, :]        # [1,S]
+    cellpos = pos[:, None] + offs                             # [B,S]
+    active = (offs >= keep[:, None]) & (offs < n_written[:, None])
+    logical = jnp.minimum(cellpos // page_size,
+                          block_table.shape[1] - 1)
+    pg = jnp.where(active, jnp.take_along_axis(block_table, logical,
+                                               axis=1), 0)
+    off = jnp.where(active, cellpos % page_size, 0)
+
+    def rb(path, c):
+        if _is_pages(path):
+            return c.at[:, pg, off].set(jnp.zeros((), c.dtype))
+        return c
+
+    new = jax.tree_util.tree_map_with_path(rb, cache)
+    new["pos"] = pos + keep
     return new
 
 

@@ -1,0 +1,331 @@
+"""Self-speculative decoding: the packed SEFP master drafts for itself
+(DESIGN.md §15).
+
+The stacked {mag, sign, exp} master already CONTAINS its own draft model:
+truncating the mantissa to m=3/4 is a cheaper forward pass over the same
+bytes, and the BPS visit/loss stats the artifact stores per width arm
+quantify how closely each truncation tracks the full-width model — which
+is exactly the signal that predicts draft acceptance.  So speculative
+decoding here needs ZERO extra weight memory: draft and verifier are one
+packed artifact read at two widths.
+
+One speculative macro-step per slot:
+
+  1. **draft** — k greedy sub-steps at the slot's draft width (m=3/4,
+     chosen per request by an AcceptanceEstimator from the artifact's BPS
+     loss stats, static fallback when stats are absent), fused into ONE
+     dispatch (packed_step.make_master_draft_scan_paged): the argmax
+     feedback loop runs on-device, per-slot draft widths ride the
+     ``sefp_matmul_gemv_hetero`` ladder sweep, and draft K/V lands in the
+     slot's own pages at the draft width.
+  2. **verify** — all k+1 candidate positions forwarded at the FULL width
+     (m=8) in ONE batched dispatch (make_master_verify_step_paged),
+     reusing the paged block-table attention view with a per-query causal
+     horizon — the same view-index-is-position discipline as the chunked
+     prefill path — and overwriting every draft K/V cell at full width.
+  3. **accept** — the longest prefix of drafts matching the verifier's
+     argmax commits, PLUS the verifier's own next token (the "bonus"), so
+     even a 0-accept macro-step nets one token — speculation never
+     decodes slower than plain in tokens-per-dispatch.
+  4. **rollback** — rejected-tail cells are zeroed through the block
+     table and the position advances by exactly the committed count
+     (slots.rollback_paged); pages are refcount-untouched (the budget was
+     reserved at admission) and the zero-restore is byte-exact because
+     decode-region cells are slot-exclusive and scrubbed-at-retirement.
+
+The lockstep engine stays the bitwise oracle: greedy speculative output
+is token-identical to plain greedy m=8 decode at matched batch shapes
+(tests/test_speculative.py), because every committed token is the argmax
+of full-width logits over the identical cache contents.
+
+This module owns the host-side pieces: the per-request config
+(SpeculativeConfig), the pluggable acceptance estimator registry, the
+accept-length rule and the drafted/accepted/rejected accounting whose
+invariants the property tests pin (drafted == accepted + rejected, per
+slot and in aggregate).  The scheduler (serve/scheduler.py,
+``ContinuousScheduler(spec_decode=...)``) wires them into the continuous
+batch, mixing speculative and plain requests in one slot table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+from repro.core.packed import MASTER_M
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculativeConfig:
+    """Speculation spec for a scheduler (or a PrecisionPolicy).
+
+    ``k`` — draft tokens per macro-step (the verify step batches k+1
+    positions).  ``draft_width`` — the STATIC fallback draft width, used
+    whenever the estimator has no BPS stats to read.  ``verify_width`` —
+    the full width drafts are checked at; a slot speculates only when its
+    realized step width equals it, which is what makes SLO-degrade
+    compose for free: a degraded (or heterogeneous sub-full-width) slot
+    silently falls back to plain decode.  ``candidates`` — the draft
+    widths the estimator chooses among (they define the fused draft
+    step's compiled ladder).  ``estimator`` — a name in ESTIMATORS or an
+    AcceptanceEstimator instance.  ``classes`` — restrict speculation to
+    these request classes (None = every eligible request)."""
+
+    k: int = 3
+    draft_width: int = 4
+    verify_width: int = MASTER_M
+    candidates: Tuple[int, ...] = (3, 4)
+    estimator: object = "bps"
+    classes: Optional[Tuple[str, ...]] = None
+
+    def __post_init__(self):
+        if not 1 <= int(self.k) <= 8:
+            raise ValueError(f"spec_decode k must be in 1..8, got {self.k}")
+        cands = tuple(int(w) for w in self.candidates)
+        if not cands:
+            raise ValueError("spec_decode needs at least one candidate "
+                             "draft width")
+        object.__setattr__(self, "candidates", cands)
+        for w in cands + (int(self.draft_width),):
+            if not 1 <= w <= MASTER_M:
+                raise ValueError(f"draft width {w} outside 1..{MASTER_M}")
+            if w >= int(self.verify_width):
+                raise ValueError(
+                    f"draft width {w} must be strictly below the verify "
+                    f"width {self.verify_width} — drafting at (or above) "
+                    f"full width is just a slower plain step")
+        if not 1 <= int(self.verify_width) <= MASTER_M:
+            raise ValueError(f"verify_width must be in 1..{MASTER_M}, got "
+                             f"{self.verify_width}")
+        if int(self.draft_width) not in cands:
+            object.__setattr__(self, "candidates",
+                               tuple(sorted(set(cands)
+                                            | {int(self.draft_width)})))
+        if self.classes is not None:
+            object.__setattr__(self, "classes",
+                               tuple(str(c) for c in self.classes))
+
+    @property
+    def ladder(self) -> Tuple[int, ...]:
+        """Static draft-width ladder the fused draft step compiles for."""
+        return tuple(sorted(set(self.candidates), reverse=True))
+
+    def describe(self) -> dict:
+        """JSON-serializable form (PrecisionPolicy round-trip)."""
+        d = {"k": int(self.k), "draft_width": int(self.draft_width),
+             "verify_width": int(self.verify_width),
+             "candidates": [int(w) for w in self.candidates],
+             "estimator": (self.estimator if isinstance(self.estimator, str)
+                           else getattr(self.estimator, "name",
+                                        type(self.estimator).__name__))}
+        if self.classes is not None:
+            d["classes"] = list(self.classes)
+        return d
+
+    @classmethod
+    def from_meta(cls, d: Optional[dict]) -> Optional["SpeculativeConfig"]:
+        if d is None:
+            return None
+        return cls(k=int(d.get("k", 3)),
+                   draft_width=int(d.get("draft_width", 4)),
+                   verify_width=int(d.get("verify_width", MASTER_M)),
+                   candidates=tuple(d.get("candidates", (3, 4))),
+                   estimator=d.get("estimator", "bps"),
+                   classes=(tuple(d["classes"])
+                            if d.get("classes") is not None else None))
+
+
+def as_spec(spec) -> Optional[SpeculativeConfig]:
+    """Normalize a scheduler's ``spec_decode`` argument: None/False off,
+    True for defaults, an int for ``k``, a dict of kwargs, or a ready
+    SpeculativeConfig."""
+    if spec is None or spec is False:
+        return None
+    if spec is True:
+        return SpeculativeConfig()
+    if isinstance(spec, SpeculativeConfig):
+        return spec
+    if isinstance(spec, int):
+        return SpeculativeConfig(k=spec)
+    if isinstance(spec, dict):
+        return SpeculativeConfig(**spec)
+    raise TypeError(f"spec_decode must be None/bool/int/dict/"
+                    f"SpeculativeConfig, got {type(spec).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# acceptance estimators (pluggable)
+# ---------------------------------------------------------------------------
+
+class AcceptanceEstimator:
+    """Chooses a per-request draft width from the artifact's BPS stats.
+
+    ``draft_width(spec, bps_stats, widths)`` returns a width from
+    ``spec.candidates``; ``bps_stats`` is ``Artifact.bps_stats`` (a
+    ``{"t", "t_b", "loss_b"}`` dict whose arms align with the precision
+    policy's ``widths`` order) or None when the artifact predates the
+    stats — every estimator must degrade to ``spec.draft_width`` then."""
+
+    name = "abstract"
+
+    def draft_width(self, spec: SpeculativeConfig, bps_stats,
+                    widths) -> int:
+        raise NotImplementedError
+
+
+class StaticEstimator(AcceptanceEstimator):
+    """Always the configured static draft width — the explicit opt-out of
+    stats-driven selection, and the documented fallback body."""
+
+    name = "static"
+
+    def draft_width(self, spec, bps_stats, widths) -> int:
+        return int(spec.draft_width)
+
+
+class BPSAcceptanceEstimator(AcceptanceEstimator):
+    """Pick the candidate draft width maximizing expected committed
+    tokens per unit of weight-streaming cost, using the loss gap between
+    each width arm and the full-width arm as an acceptance proxy.
+
+    The BPS loss stats (artifact meta ``bps.loss_b``, one arm per policy
+    width) measure how much worse the truncated model predicts the same
+    data.  A greedy draft at width w is accepted when its argmax matches
+    the full-width argmax, and a per-token match probability is
+    well-approximated by ``a = exp(-(loss_w - loss_full))`` — the
+    likelihood-ratio reading of the loss gap (exact when the gap is 0:
+    a=1, every draft accepted).  Expected committed tokens of a k-draft
+    macro-step with per-token acceptance a is the standard speculative
+    formula ``E[c] = (1 - a^(k+1)) / (1 - a)`` (k+1 at a=1, counting the
+    bonus token), and the macro-step's weight-bytes cost relative to one
+    full-width step is ``1 + k * (w + 1.125) / (M + 1.125)`` (the SEFP
+    bytes-per-weight ratio, DESIGN.md §7).  The arg-max of E[c]/cost over
+    ``spec.candidates`` wins.  Missing/malformed stats, or a candidate
+    without an arm, fall back to the static width — never an error on the
+    serving path (Artifact.require_bps_stats is the loud accessor)."""
+
+    name = "bps"
+
+    def acceptance(self, spec, bps_stats, widths,
+                   w: int) -> Optional[float]:
+        """Predicted per-token draft acceptance for width ``w`` (None when
+        the stats cannot say)."""
+        try:
+            losses = [float(x) for x in bps_stats["loss_b"]]
+            arms = {int(a): l for a, l in zip(widths, losses)}
+            gap = arms[int(w)] - arms[int(spec.verify_width)]
+        except (KeyError, TypeError, ValueError):
+            return None
+        return math.exp(-max(0.0, gap))
+
+    def draft_width(self, spec, bps_stats, widths) -> int:
+        if not bps_stats:
+            return int(spec.draft_width)
+        k = int(spec.k)
+        best_w, best_rate = None, -1.0
+        for w in spec.candidates:
+            a = self.acceptance(spec, bps_stats, widths, w)
+            if a is None:
+                continue
+            exp_tokens = (k + 1.0 if a >= 1.0
+                          else (1.0 - a ** (k + 1)) / (1.0 - a))
+            cost = 1.0 + k * (w + 1.125) / (spec.verify_width + 1.125)
+            rate = exp_tokens / cost
+            if rate > best_rate:
+                best_w, best_rate = int(w), rate
+        return best_w if best_w is not None else int(spec.draft_width)
+
+
+ESTIMATORS = {
+    StaticEstimator.name: StaticEstimator,
+    BPSAcceptanceEstimator.name: BPSAcceptanceEstimator,
+}
+
+
+def make_estimator(est) -> AcceptanceEstimator:
+    """Resolve ``SpeculativeConfig.estimator`` (or a SpeculativeConfig):
+    an instance passes through, a registered name constructs."""
+    if isinstance(est, SpeculativeConfig):
+        est = est.estimator
+    if isinstance(est, AcceptanceEstimator):
+        return est
+    try:
+        return ESTIMATORS[est]()
+    except (KeyError, TypeError):
+        raise ValueError(f"unknown acceptance estimator {est!r}; "
+                         f"registered: {sorted(ESTIMATORS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# accept rule + accounting
+# ---------------------------------------------------------------------------
+
+def accept_length(draft_tokens, verified_tokens, k_eff: int) -> int:
+    """Longest accepted draft prefix: drafts ``d_1..d_k`` (draft_tokens)
+    against the verifier's argmax ``verified_tokens`` where
+    ``verified_tokens[i]`` is the full-width next token AFTER candidate
+    position i — so draft i+1 is accepted iff it equals
+    ``verified_tokens[i]``, and acceptance stops at the first miss."""
+    j = 0
+    while j < k_eff and int(draft_tokens[j]) == int(verified_tokens[j]):
+        j += 1
+    return j
+
+
+@dataclasses.dataclass
+class SpecAccounting:
+    """Aggregate drafted/accepted/rejected accounting, per draft width.
+
+    Invariants (property-tested): ``drafted == accepted + rejected`` both
+    per width and in total; ``committed == accepted + bonus`` where bonus
+    counts one verifier token per healthy macro-slot-step.  "wasted" in
+    the bench schema is ``rejected`` — draft tokens whose compute never
+    produced a committed token."""
+
+    drafted: Dict[int, int] = dataclasses.field(default_factory=dict)
+    accepted: Dict[int, int] = dataclasses.field(default_factory=dict)
+    rejected: Dict[int, int] = dataclasses.field(default_factory=dict)
+    macro_steps: int = 0
+    bonus_tokens: int = 0
+    committed_tokens: int = 0
+
+    def record(self, draft_width: int, k_eff: int, n_accepted: int,
+               n_committed: int) -> None:
+        """One slot's macro-step outcome: ``k_eff`` drafted,
+        ``n_accepted`` of them matched, ``n_committed`` tokens actually
+        committed (accepted prefix + bonus, possibly truncated by EOS)."""
+        w = int(draft_width)
+        self.drafted[w] = self.drafted.get(w, 0) + int(k_eff)
+        self.accepted[w] = self.accepted.get(w, 0) + int(n_accepted)
+        self.rejected[w] = (self.rejected.get(w, 0)
+                            + int(k_eff) - int(n_accepted))
+        self.macro_steps += 1
+        self.committed_tokens += int(n_committed)
+        if n_committed > n_accepted:
+            self.bonus_tokens += 1
+
+    def summary(self) -> dict:
+        tot_d = sum(self.drafted.values())
+        tot_a = sum(self.accepted.values())
+        tot_r = sum(self.rejected.values())
+        return {
+            "macro_steps": self.macro_steps,
+            "drafted": tot_d,
+            "accepted": tot_a,
+            "wasted": tot_r,
+            "bonus_tokens": self.bonus_tokens,
+            "committed_tokens": self.committed_tokens,
+            "acceptance_rate": (tot_a / tot_d) if tot_d else None,
+            "by_width": {
+                str(w): {
+                    "drafted": self.drafted.get(w, 0),
+                    "accepted": self.accepted.get(w, 0),
+                    "wasted": self.rejected.get(w, 0),
+                    "acceptance_rate": (self.accepted.get(w, 0)
+                                        / self.drafted[w])
+                    if self.drafted.get(w) else None,
+                }
+                for w in sorted(self.drafted)
+            },
+        }

@@ -1,0 +1,486 @@
+"""Self-speculative decoding tests (DESIGN.md §15): config/estimator
+plumbing, the bitwise oracle (greedy speculative == plain greedy m=8 at
+matched batch shapes), rollback/page invariants, accept-length
+bookkeeping properties, and the MissingBPSStats fallback contract."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.models import model_zoo as Z
+from repro.models.config import ModelConfig
+from repro.serve import SwitchableServer
+from repro.serve.speculative import (
+    BPSAcceptanceEstimator,
+    SpecAccounting,
+    SpeculativeConfig,
+    StaticEstimator,
+    accept_length,
+    as_spec,
+    make_estimator,
+)
+
+CFG = ModelConfig(name="spec-tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, q_block=16, kv_block=16, loss_chunk=16,
+                  remat="none", dtype="bfloat16")
+
+RWKV_CFG = ModelConfig(name="spec-rwkv", family="rwkv", n_layers=2,
+                       d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+                       d_ff=256, vocab_size=256, rwkv_head_dim=32,
+                       q_block=32, kv_block=32, loss_chunk=32, remat="none",
+                       dtype="bfloat16")
+
+# one spec executable for the whole module: every scheduler below uses the
+# (4, 3) draft ladder with k=3, so the fused draft scan compiles once and
+# is reused from the server cache
+SPEC = {"k": 3, "draft_width": 4, "candidates": (3, 4)}
+
+
+@pytest.fixture(scope="module")
+def params():
+    return Z.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def server(params):
+    return SwitchableServer(CFG, params, max_len=96)
+
+
+def prompt(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, CFG.vocab_size, (n,)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# config normalization + validation
+# ---------------------------------------------------------------------------
+
+class TestSpeculativeConfig:
+    def test_as_spec_normalization(self):
+        assert as_spec(None) is None
+        assert as_spec(False) is None
+        assert as_spec(True) == SpeculativeConfig()
+        assert as_spec(2).k == 2
+        got = as_spec({"k": 4, "draft_width": 3})
+        assert (got.k, got.draft_width) == (4, 3)
+        cfg = SpeculativeConfig(k=5)
+        assert as_spec(cfg) is cfg
+        with pytest.raises(TypeError):
+            as_spec("yes please")
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            SpeculativeConfig(k=0)
+        with pytest.raises(ValueError):
+            SpeculativeConfig(k=9)
+        with pytest.raises(ValueError):
+            SpeculativeConfig(candidates=())
+        # drafting at (or above) the verify width is just a slow plain step
+        with pytest.raises(ValueError):
+            SpeculativeConfig(draft_width=8)
+        with pytest.raises(ValueError):
+            SpeculativeConfig(candidates=(3, 8))
+        with pytest.raises(ValueError):
+            SpeculativeConfig(candidates=(0,))
+
+    def test_ladder_and_static_width_membership(self):
+        # the static width joins the candidate set (it must be servable by
+        # the compiled draft ladder) and the ladder is sorted descending
+        cfg = SpeculativeConfig(draft_width=5, candidates=(3, 4))
+        assert 5 in cfg.candidates
+        assert cfg.ladder == (5, 4, 3)
+
+    def test_describe_round_trip(self):
+        cfg = SpeculativeConfig(k=4, draft_width=3, candidates=(3, 4),
+                                classes=("generation",))
+        assert SpeculativeConfig.from_meta(cfg.describe()) == cfg
+        assert SpeculativeConfig.from_meta(None) is None
+
+    def test_estimator_registry(self):
+        assert isinstance(make_estimator("static"), StaticEstimator)
+        assert isinstance(make_estimator("bps"), BPSAcceptanceEstimator)
+        est = StaticEstimator()
+        assert make_estimator(est) is est
+        assert isinstance(make_estimator(SpeculativeConfig()),
+                          BPSAcceptanceEstimator)
+        with pytest.raises(ValueError):
+            make_estimator("nope")
+
+
+# ---------------------------------------------------------------------------
+# acceptance estimators
+# ---------------------------------------------------------------------------
+
+WIDTHS = (8, 7, 6, 5, 4, 3)
+
+
+def _stats(loss_by_width):
+    """BPS stats dict with arms aligned to WIDTHS order."""
+    return {"t": 60, "t_b": [10] * len(WIDTHS),
+            "loss_b": [loss_by_width[w] for w in WIDTHS]}
+
+
+class TestEstimators:
+    def test_static_ignores_stats(self):
+        spec = SpeculativeConfig(**SPEC)
+        est = StaticEstimator()
+        assert est.draft_width(spec, _stats(dict.fromkeys(WIDTHS, 1.0)),
+                               WIDTHS) == 4
+
+    def test_bps_falls_back_without_stats(self):
+        spec = SpeculativeConfig(**SPEC)
+        est = BPSAcceptanceEstimator()
+        assert est.draft_width(spec, None, WIDTHS) == spec.draft_width
+        assert est.draft_width(spec, {}, WIDTHS) == spec.draft_width
+        # malformed stats degrade silently too — never an error on the
+        # serving path
+        assert est.draft_width(spec, {"loss_b": "garbage"},
+                               WIDTHS) == spec.draft_width
+        assert est.draft_width(spec, {"loss_b": [1.0]},
+                               WIDTHS) == spec.draft_width
+
+    def test_bps_prefers_cheapest_at_equal_loss(self):
+        # zero loss gap everywhere -> every candidate accepts at a=1.0 and
+        # the cheaper (narrower) draft wins on bytes streamed
+        spec = SpeculativeConfig(**SPEC)
+        est = BPSAcceptanceEstimator()
+        stats = _stats(dict.fromkeys(WIDTHS, 2.0))
+        assert est.draft_width(spec, stats, WIDTHS) == 3
+
+    def test_bps_pays_for_acceptance(self):
+        # width 3 predicts terribly (huge loss gap -> near-zero
+        # acceptance), width 4 tracks the full model -> 4 wins despite
+        # costing more per draft token
+        spec = SpeculativeConfig(**SPEC)
+        est = BPSAcceptanceEstimator()
+        losses = dict.fromkeys(WIDTHS, 2.0)
+        losses[3] = 8.0
+        assert est.draft_width(spec, _stats(losses), WIDTHS) == 4
+        a3 = est.acceptance(spec, _stats(losses), WIDTHS, 3)
+        a4 = est.acceptance(spec, _stats(losses), WIDTHS, 4)
+        assert a3 == pytest.approx(np.exp(-6.0))
+        assert a4 == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# MissingBPSStats (the named-error / graceful-fallback contract)
+# ---------------------------------------------------------------------------
+
+class TestMissingBPSStats:
+    @pytest.fixture(scope="class")
+    def artifact(self, params):
+        return api.Artifact.from_params(CFG, params,
+                                        policy=api.PrecisionPolicy
+                                        .all_widths())
+
+    def test_named_error_on_statless_artifact(self, artifact):
+        assert artifact.bps_stats is None  # graceful accessor
+        with pytest.raises(api.MissingBPSStats):
+            artifact.require_bps_stats()
+        # a NAMED KeyError: callers that caught KeyError keep working
+        assert issubclass(api.MissingBPSStats, KeyError)
+
+    def test_bps_estimator_serves_statless_artifact(self, artifact):
+        # estimator="bps" on an artifact without stats degrades to the
+        # static draft width instead of erroring at admission
+        srv = artifact.server(artifact.policy, max_len=96)
+        sched = srv.continuous(slots=2, spec_decode=SPEC)
+        rid = sched.submit(prompt(12), max_new=6)
+        done = sched.drain()
+        assert done[rid].spec is not None
+        assert done[rid].spec["draft_width"] == SPEC["draft_width"]
+
+    def test_stats_steer_the_draft_width(self, artifact):
+        # inject stats making width 3 track the full model exactly: the
+        # bps estimator now picks 3 over the static 4
+        losses = dict.fromkeys(WIDTHS, 2.0)
+        stats = _stats(losses)
+        artifact.meta["bps"] = stats
+        try:
+            srv = artifact.server(artifact.policy, max_len=96)
+            sched = srv.continuous(slots=2, spec_decode=SPEC)
+            rid = sched.submit(prompt(12), max_new=6)
+            done = sched.drain()
+            assert done[rid].spec["draft_width"] == 3
+        finally:
+            artifact.meta["bps"] = None
+
+
+# ---------------------------------------------------------------------------
+# the bitwise oracle: greedy speculative == plain greedy m=8
+# ---------------------------------------------------------------------------
+
+def _run(server, spec_decode, reqs, slots=3):
+    sched = server.continuous(slots=slots, spec_decode=spec_decode)
+    rids = [sched.submit(p, max_new=n, temperature=t, seed=i)
+            for i, (p, n, t) in enumerate(reqs)]
+    return rids, sched.drain(max_steps=2000), sched
+
+
+class TestBitwiseOracle:
+    @pytest.mark.parametrize("draft_width", [3, 4])
+    def test_token_identical_to_plain(self, server, draft_width):
+        reqs = [(prompt(12 + i, seed=i), 10 + i, 0.0) for i in range(3)]
+        spec = dict(SPEC, draft_width=draft_width, estimator="static")
+        rids, plain, _ = _run(server, False, reqs)
+        rids2, specd, _ = _run(server, spec, reqs)
+        assert rids == rids2
+        for r in rids:
+            np.testing.assert_array_equal(plain[r].tokens, specd[r].tokens)
+            assert specd[r].spec["draft_width"] == draft_width
+            # committed tokens record the VERIFY width, so the lockstep
+            # oracle replay is the plain m=8 schedule, unchanged
+            assert set(specd[r].decode_widths) == {8}
+            assert plain[r].spec is None
+
+    def test_mixed_spec_and_plain_batch(self, server):
+        # a sampled request (temperature > 0) decodes plain in the same
+        # slot table; greedy neighbours still match the plain run bitwise
+        reqs = [(prompt(12), 8, 0.0), (prompt(13, seed=1), 8, 0.7),
+                (prompt(14, seed=2), 8, 0.0)]
+        rids, plain, _ = _run(server, False, reqs)
+        rids2, specd, sched = _run(server, SPEC, reqs)
+        for i in (0, 2):
+            np.testing.assert_array_equal(plain[rids[i]].tokens,
+                                          specd[rids2[i]].tokens)
+            assert specd[rids2[i]].spec is not None
+        assert specd[rids2[1]].spec is None  # sampled -> never speculates
+        assert len(specd[rids2[1]].tokens) == 8
+        sp = sched.stats["speculative"]
+        assert sp["drafted"] > 0
+
+    def test_tiny_max_new_decodes_plain(self, server):
+        # max_new < 3 can never draft ahead (k_eff >= 1 needs one drafted
+        # + one bonus + one budgeted token) -> admitted as plain
+        _, done, _ = _run(server, SPEC, [(prompt(12), 2, 0.0)])
+        (fr,) = done.values()
+        assert fr.spec is None and len(fr.tokens) == 2
+
+    def test_class_restriction(self, server):
+        policy = (api.PrecisionPolicy.all_widths()
+                  .with_class("generation", 8).with_class("analysis", 8))
+        sched = server.continuous(
+            slots=2, policy=policy,
+            spec_decode=dict(SPEC, classes=("generation",)))
+        r1 = sched.submit(prompt(12), max_new=6,
+                          request_class="generation")
+        r2 = sched.submit(prompt(12, seed=1), max_new=6,
+                          request_class="analysis")
+        done = sched.drain()
+        assert done[r1].spec is not None
+        assert done[r2].spec is None
+
+    def test_non_chunkable_family_rejects_spec(self):
+        params = Z.init_params(RWKV_CFG, jax.random.PRNGKey(0))
+        srv = SwitchableServer(RWKV_CFG, params, max_len=64)
+        with pytest.raises(ValueError, match="chunkable"):
+            srv.continuous(slots=2, spec_decode=True)
+        # inherited (policy-level) speculation downgrades silently instead
+        sched = srv.continuous(slots=2, spec_decode=None)
+        assert sched._spec is None
+
+
+# ---------------------------------------------------------------------------
+# rollback + page invariants
+# ---------------------------------------------------------------------------
+
+class TestRollbackInvariants:
+    def test_positions_pages_and_tail_cells(self, server):
+        """After EVERY macro-step: pos tracks the emitted count exactly,
+        page refcounts never move during decode (the budget was reserved
+        at admission), and every KV cell past pos is zero — the rejected
+        tail was restored byte-exactly (zero IS the pre-draft byte
+        content: decode cells are slot-exclusive and scrubbed at
+        retirement)."""
+        sched = server.continuous(slots=2, spec_decode=SPEC)
+        plen = 12
+        rid = sched.submit(prompt(plen), max_new=16)
+        in_use0 = None
+        checked = 0
+        while sched.step():
+            for idx, slot in sched._table.active():
+                if slot.phase != "decode":
+                    continue
+                if in_use0 is None:
+                    in_use0 = sched._allocator.pages_in_use
+                assert sched._allocator.pages_in_use == in_use0
+                pos = int(np.asarray(sched._cache["pos"])[idx])
+                assert pos == plen + len(slot.emitted) - 1
+                row = sched._block_table[idx]
+                for name in ("k", "v"):
+                    # pool: [n_layers, n_pages, page_size, heads, hd];
+                    # gathering the slot's block row per layer rebuilds the
+                    # view where view index IS position
+                    pool = np.asarray(sched._cache["pages"][name])
+                    view = pool[:, row].reshape(
+                        (pool.shape[0], -1) + pool.shape[3:])
+                    assert not np.any(view[:, pos:]), (
+                        f"stale {name} bytes past pos={pos}")
+                checked += 1
+        done = sched.drain()
+        assert checked > 1 and done[rid].spec["drafted"] > 0
+        # full teardown: every page freed and scrubbed to zero
+        assert sched._allocator.pages_in_use == 0
+        for name in ("k", "v"):
+            assert not np.any(np.asarray(sched._cache["pages"][name]))
+
+    def test_per_slot_accounting_matches_aggregate(self, server):
+        reqs = [(prompt(12 + i, seed=i), 8 + i, 0.0) for i in range(4)]
+        _, done, sched = _run(server, SPEC, reqs, slots=2)
+        sp = sched.stats["speculative"]
+        per = [fr.spec for fr in done.values()]
+        assert all(d["drafted"] == d["accepted"] + d["rejected"]
+                   for d in per)
+        assert sp["drafted"] == sum(d["drafted"] for d in per)
+        assert sp["accepted"] == sum(d["accepted"] for d in per)
+        assert sp["wasted"] == sum(d["rejected"] for d in per)
+        assert sp["drafted"] == sp["accepted"] + sp["wasted"]
+        # every request still emitted exactly its budget
+        assert {len(done[r].tokens) for r in done} == {8, 9, 10, 11}
+
+
+# ---------------------------------------------------------------------------
+# accept-length bookkeeping properties (hypothesis optional: the same
+# sweep runs as a deterministic fallback without it, mirroring
+# tests/test_serving.py)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 — mirrors the hypothesis strategies namespace
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def lists(elem, min_size, max_size):
+            return _Strategy(lambda rng: [
+                elem.draw(rng) for _ in range(
+                    int(rng.integers(min_size, max_size + 1)))])
+
+    def settings(max_examples=20, **kw):
+        def deco(f):
+            f._fallback_examples = max_examples
+            return f
+        return deco
+
+    def given(**strategies):
+        def deco(f):
+            def wrapper(self):
+                n = getattr(wrapper, "_fallback_examples", 20)
+                rng = np.random.default_rng(0x5EC0)
+                for _ in range(n):
+                    kw = {name: s.draw(rng)
+                          for name, s in strategies.items()}
+                    try:
+                        f(self, **kw)
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"fallback property sweep failed on {kw}"
+                        ) from e
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco
+
+
+class TestAcceptBookkeepingProperties:
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 2**16), k=st.integers(1, 8),
+           k_eff=st.integers(0, 8), vocab=st.integers(2, 64))
+    def test_device_accept_rule_matches_host_reference(self, seed, k,
+                                                       k_eff, vocab):
+        """The scheduler's in-graph accept rule — sum(cumprod(match)) over
+        the drafted prefix — equals the host accept_length reference for
+        any draft/verify token pair."""
+        k_eff = min(k_eff, k)
+        rng = np.random.default_rng(seed)
+        drafts = rng.integers(0, vocab, (k,))
+        pred = rng.integers(0, vocab, (k + 1,))
+        host = accept_length(drafts, pred, k_eff)
+        drafted = np.arange(k) < k_eff
+        match = (drafts == pred[:-1]) & drafted
+        device = int(np.cumprod(match.astype(np.int32)).sum())
+        assert device == host
+        assert 0 <= host <= k_eff
+        # acceptance stops at the first miss: everything before the
+        # accept point matched, the boundary token (if any) did not
+        assert all(drafts[i] == pred[i] for i in range(host))
+        if host < k_eff:
+            assert drafts[host] != pred[host]
+
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           outcomes=st.lists(st.integers(0, 3), min_size=1, max_size=60))
+    def test_accounting_conservation(self, seed, outcomes):
+        """drafted == accepted + rejected per width AND in total, and
+        committed == accepted + bonus, for ANY macro-step sequence
+        (including EOS-truncated commits, where the bonus never lands)."""
+        rng = np.random.default_rng(seed)
+        acct = SpecAccounting()
+        drafted = accepted = committed = 0
+        for w in outcomes:
+            width = (3, 4, 6, 7)[w]
+            k_eff = int(rng.integers(1, 5))
+            n_acc = int(rng.integers(0, k_eff + 1))
+            # EOS inside the accepted prefix truncates the commit walk
+            n_com = int(rng.integers(1, n_acc + 2))
+            acct.record(width, k_eff, n_acc, n_com)
+            drafted += k_eff
+            accepted += n_acc
+            committed += n_com
+        s = acct.summary()
+        assert s["drafted"] == drafted
+        assert s["accepted"] == accepted
+        assert s["wasted"] == drafted - accepted
+        assert s["committed_tokens"] == committed
+        assert s["macro_steps"] == len(outcomes)
+        assert s["drafted"] == sum(v["drafted"]
+                                   for v in s["by_width"].values())
+        for v in s["by_width"].values():
+            assert v["drafted"] == v["accepted"] + v["wasted"]
+        assert s["bonus_tokens"] <= s["macro_steps"]
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16), n=st.integers(1, 6))
+    def test_scheduler_slot_conservation(self, seed, n):
+        """End-to-end per-slot conservation on the live scheduler: every
+        finished speculative request reports drafted == accepted +
+        rejected and its full token budget."""
+        rng = np.random.default_rng(seed)
+        srv = _scheduler_server()
+        sched = srv.continuous(slots=2, spec_decode=SPEC)
+        rids = {}
+        for i in range(n):
+            plen = int(rng.integers(8, 20))
+            max_new = int(rng.integers(3, 12))
+            p = rng.integers(0, CFG.vocab_size, (plen,)).astype(np.int32)
+            rids[sched.submit(p, max_new=max_new)] = max_new
+        done = sched.drain(max_steps=2000)
+        for rid, max_new in rids.items():
+            fr = done[rid]
+            assert len(fr.tokens) == max_new
+            assert fr.spec["drafted"] == (fr.spec["accepted"]
+                                          + fr.spec["rejected"])
+
+
+_SRV_CACHE = {}
+
+
+def _scheduler_server():
+    """Module-lifetime server for the property sweep (fixtures are not
+    visible from the hypothesis inner function)."""
+    if "srv" not in _SRV_CACHE:
+        params = Z.init_params(CFG, jax.random.PRNGKey(0))
+        _SRV_CACHE["srv"] = SwitchableServer(CFG, params, max_len=96)
+    return _SRV_CACHE["srv"]
