@@ -91,20 +91,40 @@ structural on the dispatch-bound smoke size: one host sync per macro-step
 instead of per token).  ``--check`` hard-fails on oracle divergence, an
 accounting mismatch, or a failed check.
 
+``--telemetry`` additionally runs the observability scenario (DESIGN.md
+§16) and records a ``telemetry`` section: ONE mixed workload — self-
+speculative m=8 generation beside plain m=4 understanding under the
+heterogeneous policy with slo-degrade composed, plus an arrival flood
+that forces a queue-pressure escalation — served twice, identically
+except for telemetry (full ``Telemetry`` vs the ``NullTelemetry``
+default).  The instrumented run must produce a valid Prometheus text
+exposition, a structurally valid Chrome trace (per-track timestamp
+ordering, matched B/E request spans) whose per-request width timeline
+reconciles EXACTLY with ``FinishedRequest.width_counts()`` and the
+scheduler's ``tokens_by_width``, and per-precision-class TTFT / inter-
+token-latency histograms; both runs must produce token-identical output
+(telemetry is passive), and the overhead contract is a hard bar:
+tokens/s with telemetry on must stay >= ``TEL_OVERHEAD_BAR`` (0.95) x
+telemetry off (warmup + best-of-3 walls on both sides).  The Chrome
+trace is written to ``--trace-out`` — open it at ui.perfetto.dev — and
+CI uploads it as an artifact on every PR.
+
 ``--check`` validates any JSON from schema v3 up: sections a run did not
-produce (``faults`` / ``long_context`` / ``speculative`` null or absent,
-or a pre-v4 document without the heterogeneous mode) are skipped, not
-errors — only what a run recorded is held to its bars.
+produce (``faults`` / ``long_context`` / ``speculative`` / ``telemetry``
+null or absent, or a pre-v4 document without the heterogeneous mode) are
+skipped, not errors — only what a run recorded is held to its bars.
 
 Writes BENCH_serving.json at the repo root.  CI runs ``--smoke`` then
 ``--check`` and uploads the JSON, extending the serving perf trajectory;
 further CI legs run ``--faults --smoke --check``,
-``--long-context --smoke --check`` and ``--speculative --smoke --check``.
+``--long-context --smoke --check``, ``--speculative --smoke --check``
+and ``--telemetry --smoke --check``.
 
     PYTHONPATH=src python benchmarks/bench_serving.py [--smoke] [--out PATH]
     PYTHONPATH=src python benchmarks/bench_serving.py --faults [--smoke]
     PYTHONPATH=src python benchmarks/bench_serving.py --long-context [--smoke]
     PYTHONPATH=src python benchmarks/bench_serving.py --speculative [--smoke]
+    PYTHONPATH=src python benchmarks/bench_serving.py --telemetry [--smoke]
     PYTHONPATH=src python benchmarks/bench_serving.py --check PATH
 """
 
@@ -115,7 +135,7 @@ import json
 import sys
 import time
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 # oldest schema --check still accepts: optional sections (the heterogeneous
 # mode entry, faults, long_context, speculative) are validated only when the
 # checked document actually produced them, so older perf-trajectory JSONs
@@ -129,6 +149,10 @@ OPTIONAL_MODES = ("heterogeneous",)
 # factor on the smoke workload (dispatch-bound: the macro-step's one host
 # sync per ~k committed tokens is the structural win being pinned)
 SPEC_SPEEDUP_BAR = 1.3
+# telemetry overhead contract (DESIGN.md §16): tokens/s with full
+# Telemetry recording on must stay >= this fraction of the NullTelemetry
+# run over the SAME workload (warmup + best-of-3 walls on both sides)
+TEL_OVERHEAD_BAR = 0.95
 FAULT_SCENARIOS = ("flood", "nan_slot", "cache_corruption", "stall")
 # per-token service budget (scheduler steps) the flood scenario must hold
 SLO_STEPS_PER_TOKEN = 1.5
@@ -314,6 +338,39 @@ def check_schema(doc: dict) -> list:
         for name, ok in checks.items():
             if ok is not True:
                 errs.append(f"$.speculative.checks.{name}: failed ({ok!r})")
+    # telemetry: same optional-section rule; when present the instrumented
+    # run's trace must have reconciled with the scheduler's accounting and
+    # the overhead bar must have held (all recorded as checks), and the
+    # exported width tallies must agree with each other in the document
+    if doc.get("telemetry") is not None:
+        tl = doc["telemetry"]
+        if not isinstance(tl, dict):
+            errs.append(f"$.telemetry: expected dict, got "
+                        f"{type(tl).__name__}")
+            return errs
+        for k in ("requests", "useful_tokens", "trace_events",
+                  "trace_dropped", "exposition_lines", "spec_drafted",
+                  "slo_escalations"):
+            need(tl, k, int, "$.telemetry")
+        for k in ("tokens_per_sec_on", "tokens_per_sec_off",
+                  "overhead_ratio", "overhead_bar"):
+            need(tl, k, (int, float), "$.telemetry")
+        need(tl, "trace_path", str, "$.telemetry")
+        for k in ("ttft_counts", "itl_counts", "tokens_by_width",
+                  "trace_token_widths"):
+            need(tl, k, dict, "$.telemetry")
+        if (isinstance(tl.get("tokens_by_width"), dict)
+                and tl.get("tokens_by_width")
+                != tl.get("trace_token_widths")):
+            errs.append(
+                f"$.telemetry: trace_token_widths "
+                f"{tl.get('trace_token_widths')} != tokens_by_width "
+                f"{tl.get('tokens_by_width')} — the per-request width "
+                f"timeline must reconcile exactly")
+        checks = need(tl, "checks", dict, "$.telemetry") or {}
+        for name, ok in checks.items():
+            if ok is not True:
+                errs.append(f"$.telemetry.checks.{name}: failed ({ok!r})")
     return errs
 
 
@@ -923,11 +980,169 @@ def run_speculative(artifact, policy, smoke: bool,
 
 
 # ---------------------------------------------------------------------------
+# telemetry overhead + export-validity scenario (--telemetry; DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+def run_telemetry(artifact, policy, smoke: bool,
+                  trace_out: str = "BENCH_serving_trace.json") -> dict:
+    """One mixed workload — speculative m=8 generation beside plain m=4
+    understanding under heterogeneous(slo-degrade), plus an arrival flood
+    that forces a queue-pressure escalation — served twice, identical
+    except for telemetry.  Scheduling here is deterministic (the degrade
+    trigger is queue-depth only, never wall clock), so both runs must
+    produce token-identical output and the tokens/s ratio isolates the
+    recording overhead.  The instrumented run's exports are then held to
+    the §16 validity bars: parseable Prometheus exposition, structurally
+    valid Chrome trace, and EXACT reconciliation of the trace's token
+    width timeline against ``width_counts()`` / ``tokens_by_width``."""
+    import collections as cl
+
+    import numpy as np
+
+    from repro.serve.faults import ArrivalFlood
+    from repro.serve.scheduler import HeterogeneousPolicy, SLODegradePolicy
+    from repro.serve.telemetry import (
+        Telemetry,
+        parse_prometheus,
+        validate_trace,
+    )
+
+    ps = PAGE_SIZE
+    prompt_len = 16
+    # calm early phase (spaced arrivals: the m=8 rows speculate at shift
+    # 0), then a one-burst flood deep enough to cross queue_high — the
+    # escalation downshifts below the verify width, so the same run also
+    # exercises the plain degraded path
+    if smoke:
+        n_requests, slots = 10, 3
+        max_new_lo, max_new_hi, arrival_gap = 32, 56, 4
+        flood_at, flood_n, flood_new = 48, 6, 8
+    else:
+        n_requests, slots = 12, 4
+        max_new_lo, max_new_hi, arrival_gap = 32, 64, 4
+        flood_at, flood_n, flood_new = 60, 8, 12
+    max_len = prompt_len + max_new_hi + 1
+    max_len += -max_len % ps
+    server = artifact.server(policy, max_len=max_len)
+    classes = {"generation": 8, "understanding": 4}
+    reqs = make_workload(n_requests, prompt_len, max_new_lo, max_new_hi,
+                         arrival_gap, server.cfg.vocab_size, classes,
+                         seed=11)
+    spec_cfg = {"k": 3, "draft_width": 6, "candidates": (4, 6)}
+
+    def drive(on):
+        tel = Telemetry(max_events=1 << 17) if on else None
+        sched = server.continuous(
+            slots=slots,
+            width_policy=HeterogeneousPolicy(
+                degrade=SLODegradePolicy(queue_high=3, hold_steps=2)),
+            spec_decode=spec_cfg,
+            faults=[ArrivalFlood(at_step=flood_at, n=flood_n,
+                                 prompt_len=8, max_new=flood_new,
+                                 request_class="understanding", seed=77)],
+            telemetry=tel)
+        t0 = time.perf_counter()
+        done = sched.replay(reqs, max_steps=20_000)
+        wall = time.perf_counter() - t0
+        return sched, tel, done, wall
+
+    for on in (False, True):
+        drive(on)  # warmup: compile before timing
+    best = {}
+    for name, on in (("off", False), ("on", True)):
+        for _ in range(5):  # best-of-5: the ratio bar needs low variance
+            got = drive(on)
+            if name not in best or got[3] < best[name][3]:
+                best[name] = got
+    sched_off, _, done_off, wall_off = best["off"]
+    sched_on, tel, done_on, wall_on = best["on"]
+
+    useful = sum(len(fr.tokens) for fr in done_on.values())
+    tps_off = sum(len(fr.tokens)
+                  for fr in done_off.values()) / max(wall_off, 1e-9)
+    tps_on = useful / max(wall_on, 1e-9)
+    ratio = tps_on / max(tps_off, 1e-9)
+    tokens_identical = (set(done_on) == set(done_off) and all(
+        np.array_equal(done_on[r].tokens, done_off[r].tokens)
+        for r in done_on))
+
+    # export validity (the instrumented side)
+    stats = sched_on.stats
+    evs = tel.tracer.events()
+    trace_errs = validate_trace(evs)
+    trace_widths = cl.Counter(e["args"]["width"] for e in evs
+                              if e["name"] == "token")
+    agg = cl.Counter()
+    for fr in done_on.values():
+        agg.update(fr.width_counts())
+    exposition = sched_on.metrics.render_prometheus()
+    try:
+        parse_prometheus(exposition)
+        exposition_valid = True
+    except ValueError:
+        exposition_valid = False
+    ttft_counts = {k[0]: ch.count for k, ch in sched_on.metrics.series(
+        "otaro_serve_ttft_seconds").items()}
+    itl_counts = {k[0]: ch.count for k, ch in sched_on.metrics.series(
+        "otaro_serve_itl_seconds").items()}
+    deg = stats["degradation"]
+    sp = stats["speculative"]
+    tel.tracer.write_chrome_trace(trace_out)
+
+    checks = {
+        "tokens_identical_on_vs_off": bool(tokens_identical),
+        f"overhead_le_{round((1 - TEL_OVERHEAD_BAR) * 100)}pct":
+            tps_on >= TEL_OVERHEAD_BAR * tps_off,
+        "exposition_valid": exposition_valid,
+        "trace_valid": not trace_errs,
+        "trace_widths_reconcile": (
+            dict(trace_widths) == dict(agg) == stats["tokens_by_width"]),
+        "ttft_recorded_per_class": (
+            set(ttft_counts) == set(classes)
+            and all(v > 0 for v in ttft_counts.values())),
+        "itl_recorded_per_class": (
+            set(itl_counts) == set(classes)
+            and all(v > 0 for v in itl_counts.values())),
+        "spec_engaged": sp["drafted"] > 0,
+        "slo_escalated": deg["escalations"] >= 1,
+        "no_trace_drops": tel.tracer.dropped == 0,
+    }
+    return {
+        "requests": int(len(done_on)),
+        "useful_tokens": int(useful),
+        "tokens_per_sec_on": tps_on,
+        "tokens_per_sec_off": tps_off,
+        "overhead_ratio": ratio,
+        "overhead_bar": TEL_OVERHEAD_BAR,
+        "trace_events": int(len(evs)),
+        "trace_dropped": int(tel.tracer.dropped),
+        "trace_path": trace_out,
+        "exposition_lines": int(len(exposition.splitlines())),
+        "ttft_counts": ttft_counts,
+        "itl_counts": itl_counts,
+        "tokens_by_width": {str(k): v for k, v in
+                            sorted(stats["tokens_by_width"].items())},
+        "trace_token_widths": {str(k): v for k, v in
+                               sorted(trace_widths.items())},
+        "spec_drafted": int(sp["drafted"]),
+        "slo_escalations": int(deg["escalations"]),
+        "workload": {"requests": n_requests, "prompt_len": prompt_len,
+                     "max_new_min": max_new_lo, "max_new_max": max_new_hi,
+                     "arrival_gap": arrival_gap, "flood_at": flood_at,
+                     "flood_n": flood_n,
+                     "classes": {k: int(v) for k, v in classes.items()}},
+        "checks": checks,
+    }
+
+
+# ---------------------------------------------------------------------------
 # measurement
 # ---------------------------------------------------------------------------
 
 def run(smoke: bool = False, faults: bool = False,
-        long_context: bool = False, speculative: bool = False) -> dict:
+        long_context: bool = False, speculative: bool = False,
+        telemetry: bool = False,
+        trace_out: str = "BENCH_serving_trace.json") -> dict:
     import jax
 
     from repro import api
@@ -1025,6 +1240,9 @@ def run(smoke: bool = False, faults: bool = False,
                          if long_context else None),
         "speculative": (run_speculative(artifact, policy, smoke)
                         if speculative else None),
+        "telemetry": (run_telemetry(artifact, policy, smoke,
+                                    trace_out=trace_out)
+                      if telemetry else None),
     }
     return doc
 
@@ -1048,6 +1266,17 @@ def main():
                     "oracle divergence from the plain m=8 run, an "
                     "acceptance-accounting mismatch, or — in smoke — "
                     f"speedup under {SPEC_SPEEDUP_BAR}x)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="also run the observability scenario and record "
+                    "the 'telemetry' section (hard-fails on a tokens/s "
+                    f"overhead ratio under {TEL_OVERHEAD_BAR}x, an invalid "
+                    "Prometheus exposition or Chrome trace, or a trace "
+                    "width timeline that does not reconcile with the "
+                    "scheduler's accounting); writes the Perfetto-loadable "
+                    "trace to --trace-out")
+    ap.add_argument("--trace-out", default="BENCH_serving_trace.json",
+                    help="where --telemetry writes the Chrome trace "
+                    "(open at ui.perfetto.dev)")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--check", default=None, metavar="PATH",
                     help="validate an existing JSON against the schema "
@@ -1068,7 +1297,8 @@ def main():
 
     doc = run(smoke=args.smoke, faults=args.faults,
               long_context=args.long_context,
-              speculative=args.speculative)
+              speculative=args.speculative,
+              telemetry=args.telemetry, trace_out=args.trace_out)
     errs = check_schema(doc)
     assert not errs, errs
     with open(args.out, "w") as f:
@@ -1152,6 +1382,20 @@ def main():
               f"{sp['macro_steps']} macro-steps")
         bad = [k for k, v in sp["checks"].items() if v is not True]
         print(f"  speculative/checks: "
+              f"{'ALL PASS' if not bad else 'FAILED: ' + ', '.join(bad)}")
+    tl = doc.get("telemetry")
+    if tl:
+        print(f"  telemetry: {tl['tokens_per_sec_on']:.1f} tok/s on vs "
+              f"{tl['tokens_per_sec_off']:.1f} off -> "
+              f"{tl['overhead_ratio']:.3f}x "
+              f"(bar {tl['overhead_bar']:.2f}x)")
+        print(f"  telemetry: {tl['trace_events']} trace events "
+              f"({tl['trace_dropped']} dropped) -> {tl['trace_path']}, "
+              f"{tl['exposition_lines']} exposition lines, "
+              f"token widths {tl['trace_token_widths']} reconcile, "
+              f"ttft counts {tl['ttft_counts']}")
+        bad = [k for k, v in tl["checks"].items() if v is not True]
+        print(f"  telemetry/checks: "
               f"{'ALL PASS' if not bad else 'FAILED: ' + ', '.join(bad)}")
 
 

@@ -57,16 +57,26 @@ from repro.serve.speculative import (  # noqa: F401
     SpecAccounting,
     SpeculativeConfig,
 )
+from repro.serve.telemetry import (  # noqa: F401
+    MetricsRegistry,
+    NullTelemetry,
+    Telemetry,
+    Tracer,
+    parse_prometheus,
+    serve_metrics,
+)
 
 __all__ = [
     "Admission", "Artifact", "ContinuousScheduler", "DeadlineExceeded",
     "FinetuneResult", "FinishedRequest", "GenerationResult",
-    "MissingBPSStats", "ModelConfig", "OTAROConfig", "PrecisionPolicy",
+    "MetricsRegistry", "MissingBPSStats", "ModelConfig", "NullTelemetry",
+    "OTAROConfig", "PrecisionPolicy",
     "QueueFull", "Request", "SLODegradePolicy", "ServeError", "SlotPoisoned",
-    "SpecAccounting", "SpeculativeConfig", "SwitchableServer",
-    "UnknownRequestClass", "WIDTH_POLICIES", "export_artifact", "finetune",
-    "init_params", "load_artifact", "make_loss_fn", "make_packed_serve_step",
-    "otaro_config", "packed_param_shapes", "serve_errors", "serve_faults",
+    "SpecAccounting", "SpeculativeConfig", "SwitchableServer", "Telemetry",
+    "Tracer", "UnknownRequestClass", "WIDTH_POLICIES", "export_artifact",
+    "finetune", "init_params", "load_artifact", "make_loss_fn",
+    "make_packed_serve_step", "otaro_config", "packed_param_shapes",
+    "parse_prometheus", "serve_errors", "serve_faults", "serve_metrics",
 ]
 
 

@@ -126,6 +126,13 @@ def _replay(server, args, policy):
         spec_decode = spec_kw or True
     elif args.draft_width is not None or args.draft_k is not None:
         raise SystemExit("--draft-width/--draft-k require --speculative")
+    # full telemetry (trace spans + wall-clock TTFT/ITL, DESIGN.md §16)
+    # rides on either observability flag; the metrics registry itself is
+    # always on — it is what the report below renders from
+    from repro.serve.telemetry import (Telemetry, parse_prometheus,
+                                       render_report, serve_metrics)
+    telemetry = (Telemetry() if (args.metrics_port is not None
+                                 or args.trace_out) else None)
     sched = server.continuous(slots=args.slots,
                               width_policy=width_policy,
                               eos_id=args.eos_id,
@@ -136,7 +143,12 @@ def _replay(server, args, policy):
                               prefill_chunk=args.prefill_chunk,
                               kv_dtype=args.kv_dtype,
                               prefix_cache=not args.no_prefix_cache,
-                              spec_decode=spec_decode)
+                              spec_decode=spec_decode,
+                              telemetry=telemetry)
+    metrics_srv = None
+    if args.metrics_port is not None:
+        metrics_srv = serve_metrics(sched.metrics, args.metrics_port)
+        print(f"metrics: {metrics_srv.url}")
     kv = sched.memory_report()["kv_cache"]
     if kv.get("paged"):
         print(f"paged KV: {kv['n_pages']} pages x {kv['page_size']} "
@@ -159,44 +171,28 @@ def _replay(server, args, policy):
           f"{wall:.2f}s ({total_toks / max(wall, 1e-9):.1f} tok/s) — "
           f"{stats['steps']} steps, occupancy {stats['occupancy']:.2f}, "
           f"commit rate {stats['commit_rate']:.2f}")
-    pg = stats["pages"]
-    if pg is not None:
-        pc = pg["prefix_cache"]
-        reuse = (f", prefix hits {pc['hits']}/{pc['hits'] + pc['misses']}"
-                 if pc is not None else "")
-        print(f"pages: high-water {pg['high_water']}/{pg['n_pages']}"
-              f", reused {pg['reused_pages']}{reuse}, "
-              f"prefill chunks {stats['prefill_chunks']}, "
-              f"decode stalls {stats['decode_stall_steps']}")
-    print(f"width steps: {stats['width_steps']}  "
-          f"starvation: {stats['starvation']}  "
-          f"policy: {stats['width_policy']}")
-    tbw = stats["tokens_by_width"]
-    if tbw:
-        print("tokens by width: "
-              + ", ".join(f"E5M{w}: {tbw[w]}" for w in sorted(tbw,
-                                                              reverse=True))
-              + f"  (committed {stats['committed_tokens']})")
-    if (stats["rejected"] or stats["evicted"] or stats["deadline_missed"]
-            or stats["poisoned"]):
-        print(f"resilience: rejected={stats['rejected']} "
-              f"evicted={stats['evicted']} "
-              f"deadline_missed={stats['deadline_missed']} "
-              f"poisoned={stats['poisoned']}")
-    sp = stats.get("speculative")
-    if sp is not None:
-        rate = (f"{sp['acceptance_rate']:.2f}"
-                if sp["acceptance_rate"] is not None else "-")
-        print(f"speculative: k={sp['k']} estimator={sp['estimator']} "
-              f"macro_steps={sp['macro_steps']} drafted={sp['drafted']} "
-              f"accepted={sp['accepted']} wasted={sp['wasted']} "
-              f"bonus={sp['bonus_tokens']} acceptance={rate}")
-    deg = stats["degradation"]
-    if deg.get("escalations"):
-        print(f"degradation: escalations={deg['escalations']} "
-              f"degraded_steps={deg['degraded_steps']} "
-              f"downshifted_slot_steps={deg['downshifted_slot_steps']} "
-              f"final_shift={deg['shift']}")
+    # every aggregate line below renders from the ONE metrics registry
+    # (repro/serve/telemetry.py render_report) — the CLI no longer keeps
+    # its own formatting of the same counters
+    for line in render_report(sched):
+        print(line)
+    if metrics_srv is not None:
+        # self-scrape once: proves the exposition end-to-end (the CI
+        # smoke's validation path) and leaves the endpoint's last render
+        # in the log for debugging
+        text = metrics_srv.scrape()
+        parse_prometheus(text)  # raises on a malformed exposition
+        print(f"metrics: scraped {len(text.splitlines())} exposition "
+              f"lines from {metrics_srv.url} (valid)")
+        metrics_srv.close()
+    if args.trace_out:
+        tracer = sched.telemetry.tracer
+        if args.trace_out.endswith(".jsonl"):
+            tracer.write_jsonl(args.trace_out)
+        else:
+            tracer.write_chrome_trace(args.trace_out)
+        print(f"trace: {len(tracer.events())} events -> {args.trace_out} "
+              f"(open in ui.perfetto.dev; {tracer.dropped} dropped)")
     for rid in sorted(done):
         fr = done[rid]
         widths = dict.fromkeys(fr.decode_widths)
@@ -292,6 +288,17 @@ def main():
                     "(default 3; the verify step batches k+1 positions)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="default EOS token id for replayed requests")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve the Prometheus metrics exposition on "
+                    "http://127.0.0.1:PORT/metrics during replay (0 = "
+                    "ephemeral port, printed at startup); also enables "
+                    "full telemetry (trace spans + wall-clock TTFT/ITL)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the per-request trace timeline after "
+                    "replay: Chrome trace_event JSON (open in "
+                    "ui.perfetto.dev), or JSONL when PATH ends in "
+                    ".jsonl; enables full telemetry")
     ap.add_argument("--max-len", type=int, default=None,
                     help="serving cache length (replay mode; default "
                     "prompt-len + new-tokens + 1)")

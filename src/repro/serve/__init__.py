@@ -25,3 +25,11 @@ from repro.serve.scheduler import (  # noqa: F401
     WidthRoundRobinPolicy,
 )
 from repro.serve.slots import FinishedRequest, Request  # noqa: F401
+from repro.serve.telemetry import (  # noqa: F401
+    MetricsRegistry,
+    NullTelemetry,
+    Telemetry,
+    Tracer,
+    parse_prometheus,
+    serve_metrics,
+)

@@ -327,7 +327,12 @@ class SwitchableServer:
         master drafts k tokens at a low width and verifies them in one
         full-width batched step) — True / a draft depth int / a dict of
         SpeculativeConfig fields / a SpeculativeConfig; None inherits the
-        policy's ``speculative`` spec, False disables.  Shares this
+        policy's ``speculative`` spec, False disables.  ``telemetry``
+        (DESIGN.md §16) enables trace spans + wall-clock TTFT/ITL
+        recording: True or a ``repro.serve.telemetry.Telemetry`` instance
+        (default NullTelemetry — metrics registry only, every trace hook a
+        no-op); the scheduler's registry is always live at
+        ``sched.metrics`` with ``render_prometheus()``.  Shares this
         server's compiled prefill/decode executables and packed master."""
         from repro.serve.scheduler import ContinuousScheduler
         return ContinuousScheduler(self, slots=slots,

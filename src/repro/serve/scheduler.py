@@ -133,6 +133,7 @@ from repro.serve import packed_step as packed_step_lib
 from repro.serve import pages as pages_lib
 from repro.serve import slots as slots_lib
 from repro.serve import speculative as spec_lib
+from repro.serve import telemetry as telemetry_lib
 from repro.serve.errors import BadDeadline, QueueFull, UnknownRequestClass
 from repro.serve.pages import PageAllocator, PrefixCache
 from repro.serve.sampler import sample_token, sample_token_vec
@@ -303,10 +304,13 @@ class SLODegradePolicy(WidthPolicy):
                  queue_high: int = 4, queue_low: int = 0,
                  ewma_alpha: float = 0.25, hold_steps: int = 6,
                  upshift_ratio: float = 0.7,
-                 max_shift: Optional[int] = None):
+                 max_shift: Optional[int] = None,
+                 trace_len: int = 4096):
         if queue_low > queue_high:
             raise ValueError(f"queue_low {queue_low} > queue_high "
                              f"{queue_high}")
+        if trace_len < 1:
+            raise ValueError(f"trace_len must be >= 1, got {trace_len}")
         self.slo_step_seconds = slo_step_seconds
         self.queue_high = int(queue_high)
         self.queue_low = int(queue_low)
@@ -324,7 +328,14 @@ class SLODegradePolicy(WidthPolicy):
         self._escalations = 0
         self._downshifted_slot_steps = 0
         self._degraded_steps = 0
-        self._trace: List[Tuple[int, int]] = []  # (clock, new shift)
+        # bounded ring of (clock, new shift) transitions: a long-running
+        # server's shift history must not grow without bound, so overflow
+        # drops the OLDEST transitions; max_shift_seen stays exact via the
+        # running max below, which never forgets
+        self._trace: collections.deque = collections.deque(
+            maxlen=int(trace_len))
+        self._max_shift_seen = 0
+        self.last_shift_cause: Optional[str] = None
 
     # -- pressure state machine --------------------------------------------
     def observe(self, signals: dict) -> None:
@@ -351,6 +362,13 @@ class SLODegradePolicy(WidthPolicy):
             if self._shift < self._shift_cap():
                 self._shift += 1
                 self._escalations += 1
+                self._max_shift_seen = max(self._max_shift_seen,
+                                           self._shift)
+                self.last_shift_cause = (
+                    "queue_depth" if qd >= self.queue_high
+                    else "slots_full_backlog"
+                    if (full and qd > max(self.queue_low, 0))
+                    else "latency_ewma")
                 self._trace.append((self._clock, self._shift))
             return
         lat_calm = (self.slo_step_seconds is None or self._ewma is None
@@ -361,6 +379,7 @@ class SLODegradePolicy(WidthPolicy):
             if self._relief >= self.hold_steps and self._shift > 0:
                 self._shift -= 1
                 self._relief = 0
+                self.last_shift_cause = "relief"
                 self._trace.append((self._clock, self._shift))
         else:
             self._relief = 0
@@ -403,7 +422,7 @@ class SLODegradePolicy(WidthPolicy):
     def degradation(self) -> dict:
         return {
             "shift": self._shift,
-            "max_shift_seen": max((s for _, s in self._trace), default=0),
+            "max_shift_seen": self._max_shift_seen,
             "escalations": self._escalations,
             "degraded_steps": self._degraded_steps,
             "downshifted_slot_steps": self._downshifted_slot_steps,
@@ -463,6 +482,14 @@ class HeterogeneousPolicy(WidthPolicy):
         self._slo._downshifted_slot_steps += sum(
             1 for i, w in wanted.items() if out[i] < w)
         return out, set(wanted)
+
+    @property
+    def shift(self) -> int:
+        return 0 if self._slo is None else self._slo.shift
+
+    @property
+    def last_shift_cause(self) -> Optional[str]:
+        return None if self._slo is None else self._slo.last_shift_cause
 
     @property
     def degradation(self) -> dict:
@@ -654,6 +681,16 @@ class ContinuousScheduler:
     "int8"/"f8"/"kv8" for byte-wide pages — a tolerance regime: the
     bitwise oracle property holds for bf16 pages), and
     ``prefix_cache=False`` to disable cross-request prefix KV reuse.
+
+    Telemetry (DESIGN.md §16): the scheduler always owns a
+    ``MetricsRegistry`` (``sched.metrics``) — every counter in ``stats``
+    is a registry child, exposable via ``metrics.render_prometheus()`` or
+    ``repro.serve.telemetry.serve_metrics``.  ``telemetry=True`` (or a
+    ``Telemetry`` instance) additionally records per-request trace spans
+    (Chrome trace_event / JSONL export via ``sched.telemetry.tracer``)
+    and wall-clock TTFT/ITL histograms per precision class, with the
+    wall times mirrored onto each ``FinishedRequest.wall``.  All
+    recording is host-side; the jitted step is untouched.
     """
 
     def __init__(self, server, slots: int = 8, width_policy="max-width",
@@ -669,7 +706,8 @@ class ContinuousScheduler:
                  prefill_chunk: Optional[int] = None,
                  kv_dtype=None,
                  prefix_cache: bool = True,
-                 spec_decode=None):
+                 spec_decode=None,
+                 telemetry=None):
         self._srv = server
         self.cfg = server.cfg
         self.n_slots = int(slots)
@@ -841,15 +879,25 @@ class ContinuousScheduler:
             self._spec_vw = jnp.int32(spec.verify_width)
             self._spec_arg_cache: Dict[tuple, tuple] = {}
 
-        self._counts = {"steps": 0, "committed_tokens": 0,
-                        "slot_steps_active": 0, "slot_steps_committed": 0,
-                        "admitted": 0, "finished": 0, "rejected": 0,
-                        "evicted": 0, "deadline_missed": 0, "poisoned": 0,
-                        "prefill_chunks": 0, "prefill_only_steps": 0,
-                        "decode_stall_steps": 0, "reused_pages": 0,
-                        "page_blocked_admissions": 0,
-                        "width_steps": collections.Counter(),
-                        "tokens_by_width": collections.Counter()}
+        # -- telemetry (DESIGN.md §16) -------------------------------------
+        # The metrics registry is ALWAYS on: its children are the storage
+        # behind every scheduler counter, and ``stats`` is a thin view over
+        # them (one source of truth).  What the telemetry object gates is
+        # the EXPENSIVE layer — trace events and wall-clock TTFT/ITL — and
+        # NullTelemetry (the default) no-ops all of it, so an
+        # uninstrumented scheduler pays only the same increment-per-event
+        # cost the old _counts dict did.  telemetry=True builds a full
+        # Telemetry (trace + latency histograms).
+        if telemetry is None or telemetry is False:
+            telemetry = telemetry_lib.NullTelemetry()
+        elif telemetry is True:
+            telemetry = telemetry_lib.Telemetry()
+        self.telemetry = self._tel = telemetry
+        self.metrics = (getattr(telemetry, "registry", None)
+                        or telemetry_lib.MetricsRegistry())
+        self._m = telemetry_lib.SchedulerMetrics(self.metrics)
+        telemetry.attach(self.metrics)
+        self._m.register_gauges(self)
 
     # -- fault injection ----------------------------------------------------
     def inject(self, fault) -> "ContinuousScheduler":
@@ -914,7 +962,8 @@ class ContinuousScheduler:
                 raise ValueError(f"min_width must be in 1..{MASTER_M}, "
                                  f"got {min_width}")
         if self.max_queue is not None and len(self._queue) >= self.max_queue:
-            self._counts["rejected"] += 1
+            self._m.rejected.inc()
+            self._tel.request_rejected(len(self._queue), self.clock)
             raise QueueFull(len(self._queue), self.max_queue,
                             self._retry_after())
         rid = self._next_rid
@@ -928,6 +977,8 @@ class ContinuousScheduler:
                       submit_step=self.clock, deadline=deadline,
                       min_width=min_width)
         self._queue.append((req, schedule))
+        self._tel.request_submitted(rid, request_class, prompt.size,
+                                    max_new, self.clock)
         return rid
 
     def try_submit(self, prompt, max_new: int, **kw) -> Admission:
@@ -975,9 +1026,11 @@ class ContinuousScheduler:
                 1, req.request_class)[0],
             decode_widths=[], request_class=req.request_class,
             submit_step=req.submit_step, admit_step=-1,
-            finish_step=self.clock, status=status)
-        self._counts["finished"] += 1
-        self._counts["evicted"] += 1
+            finish_step=self.clock, status=status,
+            wall=self._tel.finish_request(req.rid, req.request_class,
+                                          status, reason, self.clock, 0))
+        self._m.finished.inc()
+        self._m.evicted.inc()
 
     def _evict_expired(self) -> None:
         """Shed queued requests that can no longer be served in time:
@@ -1043,6 +1096,8 @@ class ContinuousScheduler:
         slot.prefill_pos = plen
         slot.emitted.append(tok0)
         slot.repeat_run = 1
+        self._tel.first_token(req.rid, idx, slot.prefill_precision,
+                              self.clock)
         if self._prefix is not None:
             keys = pages_lib.prefix_keys(req.prompt, self.page_size,
                                          slot.prefill_precision)
@@ -1077,7 +1132,9 @@ class ContinuousScheduler:
             self._cache["pages"], jnp.asarray(row), jnp.int32(start))
         self._cache = {**self._cache, "pages": new_pages}
         slot.prefill_pos = start + n
-        self._counts["prefill_chunks"] += 1
+        self._m.prefill_chunks.inc()
+        self._tel.prefill_chunk(req.rid, idx, start, n,
+                                slot.prefill_precision, self.clock)
         if slot.prefill_pos >= plen:
             self._finalize_prefill(idx, logits)
 
@@ -1116,6 +1173,7 @@ class ContinuousScheduler:
                           decode_widths=[], prefill_precision=pm,
                           admit_step=self.clock, repeat_run=1)
         self._table.admit(idx, state)
+        self._tel.first_token(req.rid, idx, pm, self.clock)
         done = (tok0 == req.eos_id if req.eos_id is not None
                 else False) or req.max_new <= 1
         self._emit(req, tok0, done)
@@ -1144,15 +1202,21 @@ class ContinuousScheduler:
             for p in hits:     # adopt BEFORE evict_for: a hit whose only
                 self._allocator.incref(p)  # ref is the cache must not be
                                            # evicted out from under us
+        if hits:
+            self._tel.prefix_hit(req.rid, len(hits), self.clock)
         n_fresh = need - len(hits)
         if not self._allocator.can_alloc(n_fresh):
             if self._prefix is not None:
-                self._scrub(self._prefix.evict_for(n_fresh))
+                evicted = self._prefix.evict_for(n_fresh)
+                if evicted:
+                    self._tel.prefix_evicted(len(evicted), self.clock)
+                self._scrub(evicted)
             if not self._allocator.can_alloc(n_fresh):
                 freed = [p for p in hits if self._allocator.decref(p)]
                 self._scrub(freed)  # cache entry still holds a ref, so
                                     # nothing frees in practice
-                self._counts["page_blocked_admissions"] += 1
+                self._m.page_blocked_admissions.inc()
+                self._tel.page_blocked(req.rid, self.clock)
                 return None
         pages = hits + self._allocator.alloc(n_fresh)
         return pages, len(hits)
@@ -1179,8 +1243,9 @@ class ContinuousScheduler:
         """Admit ``req`` into slot ``idx``; False when the page budget
         blocks it (the request stays at the queue head)."""
         if not self._paged:
+            self._m.admitted.inc()
+            self._tel.request_admitted(req.rid, idx, self.clock, 0, 0)
             self._admit_dense(req, schedule, idx)
-            self._counts["admitted"] += 1
             return True
         pm = schedule[0]
         claim = self._claim_pages(req, pm)
@@ -1194,8 +1259,10 @@ class ContinuousScheduler:
                           pages=pages, n_reused=n_reused,
                           spec_draft_width=self._spec_pick(req))
         self._table.admit(idx, state)
-        self._counts["admitted"] += 1
-        self._counts["reused_pages"] += n_reused
+        self._m.admitted.inc()
+        self._m.reused_pages.inc(n_reused)
+        self._tel.request_admitted(req.rid, idx, self.clock, n_reused,
+                                   len(pages))
         if not self._chunkable:
             # hybrid: whole dense prefill, attention KV scattered into the
             # slot's pages, recurrent state written dense — then the slot
@@ -1226,6 +1293,7 @@ class ContinuousScheduler:
                 # free slot.  No prefill actually runs; the recorded width
                 # is the one the request's class would have prefilled at.
                 self._queue.popleft()
+                self._tel.request_admitted(req.rid, -1, self.clock, 0, 0)
                 self._finished[req.rid] = FinishedRequest(
                     rid=req.rid, tokens=np.zeros((0,), np.int32),
                     prompt_len=req.prompt.size, finish_reason="length",
@@ -1233,9 +1301,12 @@ class ContinuousScheduler:
                         1, req.request_class)[0],
                     decode_widths=[], request_class=req.request_class,
                     submit_step=req.submit_step, admit_step=self.clock,
-                    finish_step=self.clock)
-                self._counts["admitted"] += 1
-                self._counts["finished"] += 1
+                    finish_step=self.clock,
+                    wall=self._tel.finish_request(
+                        req.rid, req.request_class, "ok", "length",
+                        self.clock, 0))
+                self._m.admitted.inc()
+                self._m.finished.inc()
                 continue
             idx = self._table.free_idx()
             if idx is None:
@@ -1269,12 +1340,15 @@ class ContinuousScheduler:
                 # clock still ticks (deadlines and latency stats count
                 # prefill time)
                 self.clock += 1
-                self._counts["steps"] += 1
-                self._counts["prefill_only_steps"] += 1
+                self._m.steps.inc()
+                self._m.prefill_only_steps.inc()
                 self._deadline_sweep()
-                self._last_step_seconds = time.perf_counter() - t0
+                self._last_step_seconds = dt = time.perf_counter() - t0
+                self._tel.step_done(self.clock, dt)
                 return True
             return False
+        prev_shift = (getattr(self._width_policy, "shift", 0)
+                      if self._tel.enabled else 0)
         self._width_policy.observe({
             "clock": self.clock,
             "queue_depth": len(self._queue),
@@ -1286,6 +1360,12 @@ class ContinuousScheduler:
                        if s.phase == "decode"},
             "widths": self._policy.widths,
         })
+        if self._tel.enabled:
+            new_shift = getattr(self._width_policy, "shift", 0)
+            if new_shift != prev_shift:
+                self._tel.slo_shift(
+                    self.clock, new_shift, prev_shift,
+                    getattr(self._width_policy, "last_shift_cause", None))
         m, commit = self._width_policy.select(wanted)
         if self._hetero:
             # per-slot width dict -> int32[n_slots] vector for the fused
@@ -1333,17 +1413,17 @@ class ContinuousScheduler:
                     if k_eff >= 1:
                         spec_rows[idx] = k_eff
         self.clock += 1
-        self._counts["steps"] += 1
-        self._counts["slot_steps_active"] += len(wanted)
+        self._m.steps.inc()
+        self._m.slot_steps_active.inc(len(wanted))
         if self._hetero:
             # one fused step serves several widths at once: count each
             # distinct width present this step (so width_steps sums to
             # more than `steps` under mixed batches — it answers "how
             # many steps touched width w", same as the scalar policies)
             for w in set(m_by_slot.values()):
-                self._counts["width_steps"][int(w)] += 1
+                self._m.width_step(int(w))
         else:
-            self._counts["width_steps"][int(m)] += 1
+            self._m.width_step(int(m))
         if spec_rows:
             self._spec_step(set(commit) - set(spec_rows), spec_rows,
                             m_arg, m_by_slot, m, poison)
@@ -1373,13 +1453,14 @@ class ContinuousScheduler:
                     # step — retire just this slot, neighbours untouched
                     # (§12)
                     self._retire(idx, "poisoned", status="poisoned")
-                    self._counts["poisoned"] += 1
+                    self._m.poisoned.inc()
                     continue
-                self._counts["slot_steps_committed"] += 1
+                self._m.slot_steps_committed.inc()
                 realized = int(m_by_slot[idx]) if self._hetero else int(m)
                 self._commit_token(idx, slot, int(toks[idx]), realized)
         self._deadline_sweep()
-        self._last_step_seconds = time.perf_counter() - t0
+        self._last_step_seconds = dt = time.perf_counter() - t0
+        self._tel.step_done(self.clock, dt)
         return True
 
     def _commit_token(self, idx: int, slot: SlotState, t: int,
@@ -1389,8 +1470,9 @@ class ContinuousScheduler:
         Returns True when the slot retired (the speculative commit walk
         stops there — tokens after an EOS are discarded host-side; the
         slot's device state is torn down by the retire anyway)."""
-        self._counts["committed_tokens"] += 1
-        self._counts["tokens_by_width"][realized] += 1
+        self._m.committed_tokens.inc()
+        self._m.token_at_width(realized)
+        self._tel.token_committed(slot.req.rid, idx, realized, self.clock)
         slot.decode_widths.append(realized)
         prev = slot.emitted[-1]
         slot.emitted.append(t)
@@ -1401,7 +1483,7 @@ class ContinuousScheduler:
                 and slot.repeat_run >= self.repetition_limit):
             self._emit(slot.req, t, True)
             self._retire(idx, "repetition", status="poisoned")
-            self._counts["poisoned"] += 1
+            self._m.poisoned.inc()
             return True
         done = hit_eos or len(slot.emitted) >= slot.req.max_new
         self._emit(slot.req, t, done)
@@ -1487,9 +1569,9 @@ class ContinuousScheduler:
             slot = self._table.get(idx)
             if not bool(ok[idx]):
                 self._retire(idx, "poisoned", status="poisoned")
-                self._counts["poisoned"] += 1
+                self._m.poisoned.inc()
                 continue
-            self._counts["slot_steps_committed"] += 1
+            self._m.slot_steps_committed.inc()
             realized = int(m_by_slot[idx]) if self._hetero else int(m)
             self._commit_token(idx, slot, int(toks[idx]), realized)
         for idx in sorted(spec_rows):
@@ -1501,15 +1583,17 @@ class ContinuousScheduler:
                 # restored the slot to its pre-macro-step bytes (keep=0),
                 # so quarantine proceeds exactly as a plain poisoned row
                 self._retire(idx, "poisoned", status="poisoned")
-                self._counts["poisoned"] += 1
+                self._m.poisoned.inc()
                 continue
-            self._counts["slot_steps_committed"] += 1
+            self._m.slot_steps_committed.inc()
             slot.spec_drafted += ke
             slot.spec_accepted += j
             slot.spec_rejected += ke - j
             committed = [int(draft_h[idx][i]) for i in range(j)]
             committed.append(int(pred_h[idx][j]))  # the bonus token
             realized = int(spec.verify_width)
+            self._tel.spec_macro(slot.req.rid, idx, slot.spec_draft_width,
+                                 ke, j, len(committed), self.clock)
             n_done = 0
             for t in committed:
                 n_done += 1
@@ -1524,7 +1608,7 @@ class ContinuousScheduler:
             dl = slot.req.deadline
             if dl is not None and self.clock - slot.req.submit_step >= dl:
                 self._retire(idx, "deadline", status="deadline")
-                self._counts["deadline_missed"] += 1
+                self._m.deadline_missed.inc()
 
     def drain(self, max_steps: Optional[int] = None
               ) -> Dict[int, FinishedRequest]:
@@ -1600,7 +1684,9 @@ class ContinuousScheduler:
             self._block_table[idx, :] = 0
             self._bt_dev = None
             self._scrub(freed)
-        self._counts["finished"] += 1
+        self._m.finished.inc()
+        if status == "poisoned":
+            self._tel.quarantine(slot.req.rid, idx, reason, self.clock)
         spec_info = None
         if slot.spec_draft_width is not None:
             spec_info = {"draft_width": int(slot.spec_draft_width),
@@ -1619,42 +1705,53 @@ class ContinuousScheduler:
             admit_step=slot.admit_step,
             finish_step=self.clock,
             status=status,
-            spec=spec_info)
+            spec=spec_info,
+            wall=self._tel.finish_request(
+                slot.req.rid, slot.req.request_class, status, reason,
+                self.clock, len(slot.emitted)))
 
     # -- accounting ---------------------------------------------------------
     @property
     def stats(self) -> dict:
-        c = self._counts
-        steps = max(c["steps"], 1)
-        return {
-            "steps": c["steps"],
-            "committed_tokens": c["committed_tokens"],
-            "admitted": c["admitted"],
-            "finished": c["finished"],
+        """The scheduler's counters, as the dict shape the benches and
+        tests have always consumed — now a thin VIEW over the metrics
+        registry (DESIGN.md §16): every value below reads the same
+        registry child ``render_prometheus()`` exposes, so the two
+        surfaces cannot drift.  The snapshot is strictly
+        JSON-serializable (``json_sanitize`` coerces any stray numpy
+        scalar from a device readback)."""
+        m = self._m
+        steps = int(m.steps.value)
+        active_ss = int(m.slot_steps_active.value)
+        return telemetry_lib.json_sanitize({
+            "steps": steps,
+            "committed_tokens": int(m.committed_tokens.value),
+            "admitted": int(m.admitted.value),
+            "finished": int(m.finished.value),
             "pending": self.pending,
             "active": self.active,
-            "rejected": c["rejected"],
-            "evicted": c["evicted"],
-            "deadline_missed": c["deadline_missed"],
-            "poisoned": c["poisoned"],
+            "rejected": int(m.rejected.value),
+            "evicted": int(m.evicted.value),
+            "deadline_missed": int(m.deadline_missed.value),
+            "poisoned": int(m.poisoned.value),
             # mean fraction of slots occupied / committed per step
-            "occupancy": c["slot_steps_active"] / (steps * self.n_slots),
-            "commit_rate": (c["slot_steps_committed"]
-                            / max(c["slot_steps_active"], 1)),
-            "width_steps": dict(c["width_steps"]),
+            "occupancy": active_ss / (max(steps, 1) * self.n_slots),
+            "commit_rate": (int(m.slot_steps_committed.value)
+                            / max(active_ss, 1)),
+            "width_steps": m.width_steps_dict(),
             # committed TOKENS per realized width — the fairness tax in
             # tokens rather than batch-steps (a width-rr group can have
             # many width_steps but few tokens if its slots are sparse)
-            "tokens_by_width": dict(c["tokens_by_width"]),
+            "tokens_by_width": m.tokens_by_width_dict(),
             "starvation": self._width_policy.starvation,
             "width_policy": self._width_policy.name,
             "degradation": self._width_policy.degradation,
-            "prefill_chunks": c["prefill_chunks"],
-            "prefill_only_steps": c["prefill_only_steps"],
-            "decode_stall_steps": c["decode_stall_steps"],
+            "prefill_chunks": int(m.prefill_chunks.value),
+            "prefill_only_steps": int(m.prefill_only_steps.value),
+            "decode_stall_steps": int(m.decode_stall_steps.value),
             "pages": self._page_stats(),
             "speculative": self._spec_stats(),
-        }
+        })
 
     def _spec_stats(self) -> Optional[dict]:
         if self._spec is None:
@@ -1672,9 +1769,9 @@ class ContinuousScheduler:
             "n_pages": self.n_pages,
             "pages_in_use": self._allocator.pages_in_use,
             "high_water": self._allocator.high_water,
-            "reused_pages": self._counts["reused_pages"],
+            "reused_pages": int(self._m.reused_pages.value),
             "page_blocked_admissions":
-                self._counts["page_blocked_admissions"],
+                int(self._m.page_blocked_admissions.value),
             "prefix_cache": (self._prefix.stats
                              if self._prefix is not None else None),
         }

@@ -96,6 +96,11 @@ class FinishedRequest:
     finish_step: int
     status: str = "ok"          # ok | evicted | deadline | poisoned
     spec: Optional[Dict[str, int]] = None  # speculative accounting, if any
+    # wall-clock latency (DESIGN.md §16), recorded host-side only when the
+    # scheduler runs with telemetry enabled (None under NullTelemetry):
+    # submit_s / first_token_s / finish_s (seconds since the tracer epoch),
+    # ttft_s, itl_mean_s.  Step-clock accounting above is always present.
+    wall: Optional[Dict[str, Optional[float]]] = None
 
     @property
     def ok(self) -> bool:

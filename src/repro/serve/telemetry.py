@@ -1,0 +1,1017 @@
+"""Serving telemetry (DESIGN.md §16): one metrics registry + per-request
+trace timelines for the whole serve stack.
+
+Before this module the serve stack explained itself through scattered
+ad-hoc dicts — ``scheduler.stats``, ``stats["degradation"]``, the page /
+prefix-cache / speculative accounting — with no unified export and no way
+to see *when and why* a slot's SEFP width changed.  This module gives the
+stack three layers, all zero-dependency (stdlib only):
+
+  * **MetricsRegistry** — counters, gauges and fixed-bucket histograms
+    with label support.  Incrementally-owned metrics (the scheduler's
+    step/token/admission counters) live IN the registry — registry
+    children are the storage, ``scheduler.stats`` is a thin view over
+    them — while live state (queue depth, pages in use, SLO shift, the
+    prefix-cache and speculative accounting) is exposed through collect
+    callbacks that read the owning object at scrape time, Prometheus-
+    collector style.  Either way there is ONE source of truth per value.
+    ``render_prometheus()`` emits text exposition format 0.0.4;
+    ``serve_metrics(registry, port)`` serves it from a stdlib
+    ``http.server`` daemon thread (``launch/serve.py --metrics-port``).
+
+  * **Tracer** — a bounded ring of structured events: per-request
+    timelines (submit → admission verdict → prefill chunks → decode /
+    speculative macro-steps → retire, each carrying the realized SEFP
+    width, slot id and page counts) plus scheduler-level events (SLO
+    escalation/relief with trigger cause, quarantine, page-blocked
+    admission, prefix-cache hit/evict, speculative accept/reject
+    lengths).  Exportable as JSONL (one event per line) and as Chrome
+    ``trace_event`` JSON — open the file in Perfetto (ui.perfetto.dev)
+    and every request is a named track.
+
+  * **Telemetry / NullTelemetry** — the facade the scheduler calls.
+    ``NullTelemetry`` (the default) no-ops every hook, so an
+    uninstrumented scheduler pays only the cost of its own registry
+    counters (the same dict-increment class of work the old ``_counts``
+    dict did).  ``Telemetry`` additionally records trace events and
+    WALL-CLOCK latency: TTFT and inter-token-latency histograms per
+    precision class, observed host-side from the one host sync the
+    scheduler already performs per step — recording never enters the
+    jitted step.  The overhead contract is pinned by
+    ``benchmarks/bench_serving.py --telemetry``: tokens/s with telemetry
+    on must stay >= 0.95x telemetry off.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+__all__ = [
+    "LATENCY_BUCKETS",
+    "MetricsRegistry",
+    "NullTelemetry",
+    "Telemetry",
+    "Tracer",
+    "json_sanitize",
+    "parse_prometheus",
+    "render_report",
+    "serve_metrics",
+]
+
+
+def json_sanitize(obj):
+    """Coerce a stats tree to strictly JSON-serializable Python types:
+    numpy/jax scalars -> int/float, arrays -> lists, Counters -> plain
+    dicts, non-primitive dict keys -> their Python scalar.  Device
+    readbacks must never leak numpy scalars into a ``stats`` snapshot —
+    ``json.dumps(sched.stats)`` always succeeds."""
+    if isinstance(obj, dict):
+        out = {}
+        for k, v in obj.items():
+            if not isinstance(k, (str, int, float, bool, type(None))):
+                k = k.item() if hasattr(k, "item") else str(k)
+            out[k] = json_sanitize(v)
+        return out
+    if isinstance(obj, (list, tuple)):
+        return [json_sanitize(v) for v in obj]
+    if isinstance(obj, (str, bool, int, float, type(None))):
+        return obj
+    nd = getattr(obj, "ndim", None)
+    if nd is not None:  # numpy/jax array or scalar
+        return json_sanitize(obj.item() if nd == 0 else obj.tolist())
+    if hasattr(obj, "item"):
+        return json_sanitize(obj.item())
+    return str(obj)
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+# wall-clock latency buckets (seconds): spans interactive TTFT (~ms) out
+# to CPU-bound CI decode steps; fixed at registration per the exposition
+# contract (bucket sets never change across a process lifetime)
+LATENCY_BUCKETS = (0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+                   0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
+
+
+def _escape_label(v: str) -> str:
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _escape_help(v: str) -> str:
+    return str(v).replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool):
+        return "1" if v else "0"
+    if isinstance(v, int):
+        return str(v)
+    f = float(v)
+    if f != f:
+        return "NaN"
+    if f in (float("inf"), float("-inf")):
+        return "+Inf" if f > 0 else "-Inf"
+    return repr(f)
+
+
+class _Child:
+    """One (metric, label-values) series.  Counters/gauges hold a scalar
+    ``value``; histograms hold per-bucket counts plus sum/count.  A gauge
+    child may instead carry a zero-arg callback (``set_function``) read
+    at collect time — the Prometheus-collector idiom for live state whose
+    source of truth is another object."""
+
+    __slots__ = ("value", "_fn", "buckets", "bucket_counts", "sum", "count")
+
+    def __init__(self, buckets: Optional[Tuple[float, ...]] = None):
+        self.value = 0
+        self._fn: Optional[Callable[[], float]] = None
+        self.buckets = buckets
+        if buckets is not None:
+            self.bucket_counts = [0] * (len(buckets) + 1)  # +Inf last
+            self.sum = 0.0
+            self.count = 0
+
+    def inc(self, n=1) -> None:
+        self.value += n
+
+    def set(self, v) -> None:
+        self.value = v
+
+    def set_function(self, fn: Callable[[], float]) -> None:
+        self._fn = fn
+
+    def get(self):
+        return self._fn() if self._fn is not None else self.value
+
+    def observe(self, x: float) -> None:
+        x = float(x)
+        self.sum += x
+        self.count += 1
+        for i, le in enumerate(self.buckets):
+            if x <= le:
+                self.bucket_counts[i] += 1
+                return
+        self.bucket_counts[-1] += 1
+
+
+class MetricFamily:
+    """A named metric plus its labeled children.  ``labels(**kv)`` returns
+    (creating on first use) the child for those label values;
+    ``child()`` is the unlabeled singleton.  ``set_collect`` installs a
+    family-level callback returning ``{label_values_tuple: value}`` — used
+    for dynamically-labeled live state (e.g. per-draft-width speculative
+    counters) where the children are not known upfront."""
+
+    def __init__(self, name: str, help: str, kind: str,
+                 label_names: Tuple[str, ...] = (),
+                 buckets: Optional[Tuple[float, ...]] = None):
+        if not _NAME_RE.match(name):
+            raise ValueError(f"invalid metric name {name!r} "
+                             f"(must match {_NAME_RE.pattern})")
+        for ln in label_names:
+            if not _LABEL_RE.match(ln) or ln.startswith("__"):
+                raise ValueError(f"invalid label name {ln!r} on {name}")
+        if kind == "histogram":
+            if buckets is None or not buckets:
+                raise ValueError(f"histogram {name} needs fixed buckets")
+            bs = tuple(float(b) for b in buckets)
+            if list(bs) != sorted(set(bs)):
+                raise ValueError(f"histogram {name} buckets must be "
+                                 f"strictly increasing, got {buckets}")
+            if "le" in label_names:
+                raise ValueError(f"histogram {name}: 'le' is reserved")
+            buckets = bs
+        self.name = name
+        self.help = help
+        self.kind = kind
+        self.label_names = tuple(label_names)
+        self.buckets = buckets
+        self._children: Dict[Tuple[str, ...], _Child] = {}
+        self._collect_fn: Optional[Callable[[], Dict[tuple, float]]] = None
+
+    def labels(self, **kv) -> _Child:
+        if set(kv) != set(self.label_names):
+            raise ValueError(f"{self.name}: expected labels "
+                             f"{self.label_names}, got {tuple(kv)}")
+        key = tuple(str(kv[ln]) for ln in self.label_names)
+        ch = self._children.get(key)
+        if ch is None:
+            ch = _Child(self.buckets)
+            self._children[key] = ch
+        return ch
+
+    def child(self) -> _Child:
+        if self.label_names:
+            raise ValueError(f"{self.name} is labeled; use labels()")
+        return self.labels()
+
+    def set_collect(self, fn: Callable[[], Dict[tuple, float]]) -> None:
+        self._collect_fn = fn
+
+    def samples(self) -> List[Tuple[Tuple[str, ...], object]]:
+        """[(label_values, value_or_child)] — collect callbacks win."""
+        if self._collect_fn is not None:
+            out = []
+            for key, v in sorted(self._collect_fn().items()):
+                key = (key,) if isinstance(key, str) else tuple(
+                    str(k) for k in key)
+                out.append((key, v))
+            return out
+        return [(k, (ch if self.kind == "histogram" else ch.get()))
+                for k, ch in sorted(self._children.items())]
+
+
+class MetricsRegistry:
+    """Zero-dependency metric registry with Prometheus text exposition."""
+
+    def __init__(self):
+        self._families: Dict[str, MetricFamily] = {}
+
+    def _register(self, name, help, kind, labels, buckets=None
+                  ) -> MetricFamily:
+        fam = self._families.get(name)
+        if fam is not None:
+            if (fam.kind, fam.label_names) != (kind, tuple(labels)):
+                raise ValueError(
+                    f"metric {name} re-registered as {kind}{tuple(labels)} "
+                    f"(was {fam.kind}{fam.label_names})")
+            return fam
+        fam = MetricFamily(name, help, kind, tuple(labels), buckets)
+        self._families[name] = fam
+        return fam
+
+    def counter(self, name: str, help: str = "", labels=()) -> MetricFamily:
+        return self._register(name, help, "counter", labels)
+
+    def gauge(self, name: str, help: str = "", labels=()) -> MetricFamily:
+        return self._register(name, help, "gauge", labels)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets=LATENCY_BUCKETS, labels=()) -> MetricFamily:
+        return self._register(name, help, "histogram", labels, buckets)
+
+    def get(self, name: str) -> Optional[MetricFamily]:
+        return self._families.get(name)
+
+    def families(self) -> List[MetricFamily]:
+        return [self._families[n] for n in sorted(self._families)]
+
+    def value(self, name: str, **kv):
+        """Current value of one series (None when absent) — the accessor
+        the stats views read through."""
+        fam = self._families.get(name)
+        if fam is None:
+            return None
+        key = tuple(str(kv[ln]) for ln in fam.label_names)
+        for k, v in fam.samples():
+            if k == key:
+                return v
+        return 0 if not kv else None
+
+    def series(self, name: str) -> Dict[Tuple[str, ...], object]:
+        """{label_values: value} for every child of one family."""
+        fam = self._families.get(name)
+        return dict(fam.samples()) if fam is not None else {}
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition format 0.0.4."""
+        lines: List[str] = []
+        for fam in self.families():
+            lines.append(f"# HELP {fam.name} {_escape_help(fam.help)}")
+            lines.append(f"# TYPE {fam.name} {fam.kind}")
+            for key, v in fam.samples():
+                lbl = ",".join(
+                    f'{ln}="{_escape_label(lv)}"'
+                    for ln, lv in zip(fam.label_names, key))
+                if fam.kind != "histogram":
+                    lines.append(f"{fam.name}{{{lbl}}} {_fmt(v)}"
+                                 if lbl else f"{fam.name} {_fmt(v)}")
+                    continue
+                ch = v
+                acc = 0
+                pre = lbl + "," if lbl else ""
+                for le, n in zip(ch.buckets, ch.bucket_counts):
+                    acc += n
+                    lines.append(f'{fam.name}_bucket{{{pre}le="{_fmt(le)}"}}'
+                                 f" {acc}")
+                lines.append(f'{fam.name}_bucket{{{pre}le="+Inf"}} '
+                             f"{ch.count}")
+                lines.append(f"{fam.name}_sum{{{lbl}}} {_fmt(ch.sum)}"
+                             if lbl else f"{fam.name}_sum {_fmt(ch.sum)}")
+                lines.append(f"{fam.name}_count{{{lbl}}} {ch.count}"
+                             if lbl else f"{fam.name}_count {ch.count}")
+        return "\n".join(lines) + "\n"
+
+    def snapshot(self) -> dict:
+        """JSON-serializable dump: {name: {type, samples: [{labels,
+        value | (sum, count, buckets)}]}}."""
+        out = {}
+        for fam in self.families():
+            rows = []
+            for key, v in fam.samples():
+                labels = dict(zip(fam.label_names, key))
+                if fam.kind == "histogram":
+                    rows.append({"labels": labels, "sum": float(v.sum),
+                                 "count": int(v.count),
+                                 "buckets": dict(zip(
+                                     map(_fmt, v.buckets),
+                                     v.bucket_counts))})
+                else:
+                    rows.append({"labels": labels,
+                                 "value": (float(v) if isinstance(v, float)
+                                           else int(v))})
+            out[fam.name] = {"type": fam.kind, "samples": rows}
+        return out
+
+
+def parse_prometheus(text: str) -> dict:
+    """Parse a text exposition back into {metric: {type, samples:
+    [(labels_dict, value)]}} — the validator the tests, the bench
+    telemetry checks and the CLI's self-scrape share.  Raises ValueError
+    on a malformed line, an invalid metric name, or a histogram whose
+    cumulative buckets decrease."""
+    out: dict = {}
+    types: Dict[str, str] = {}
+    sample_re = re.compile(
+        r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(?:\{(.*)\})?\s+(\S+)$")
+    label_re = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            _, _, rest = line.partition("# TYPE ")
+            name, _, kind = rest.partition(" ")
+            if not _NAME_RE.match(name):
+                raise ValueError(f"line {lineno}: bad metric name {name!r}")
+            types[name] = kind.strip()
+            out.setdefault(name, {"type": kind.strip(), "samples": []})
+            continue
+        if line.startswith("#"):
+            continue
+        m = sample_re.match(line)
+        if m is None:
+            raise ValueError(f"line {lineno}: unparseable sample {line!r}")
+        name, lbl_str, val = m.groups()
+        labels = {}
+        if lbl_str:
+            consumed = 0
+            for lm in label_re.finditer(lbl_str):
+                labels[lm.group(1)] = (
+                    lm.group(2).replace("\\n", "\n")
+                    .replace('\\"', '"').replace("\\\\", "\\"))
+                consumed = lm.end()
+            if lbl_str[consumed:].strip(", "):
+                raise ValueError(f"line {lineno}: bad labels {lbl_str!r}")
+        base = name
+        for suf in ("_bucket", "_sum", "_count"):
+            if name.endswith(suf) and name[:-len(suf)] in types:
+                base = name[:-len(suf)]
+                break
+        out.setdefault(base, {"type": types.get(base, "untyped"),
+                              "samples": []})
+        out[base]["samples"].append(
+            (name, labels, float(val) if val not in ("+Inf", "-Inf", "NaN")
+             else float(val.replace("+", ""))))
+    # histogram bucket monotonicity: cumulative counts must not decrease
+    for base, fam in out.items():
+        if fam["type"] != "histogram":
+            continue
+        series: Dict[tuple, list] = {}
+        for name, labels, val in fam["samples"]:
+            if not name.endswith("_bucket"):
+                continue
+            key = tuple(sorted((k, v) for k, v in labels.items()
+                               if k != "le"))
+            series.setdefault(key, []).append(
+                (float("inf") if labels["le"] == "+Inf"
+                 else float(labels["le"]), val))
+        for key, pts in series.items():
+            pts.sort()
+            vals = [v for _, v in pts]
+            if any(b > a for a, b in zip(vals[1:], vals)):
+                raise ValueError(
+                    f"{base}{dict(key)}: non-monotonic buckets {vals}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the /metrics endpoint (stdlib http.server, daemon thread)
+# ---------------------------------------------------------------------------
+
+class MetricsServer:
+    """Tiny scrape endpoint: GET /metrics renders the registry.  Runs in
+    a daemon thread; ``port=0`` binds an ephemeral port (``.port`` has
+    the real one).  ``close()`` shuts it down."""
+
+    def __init__(self, registry: MetricsRegistry, port: int = 0,
+                 host: str = "127.0.0.1"):
+        import http.server
+
+        reg = registry
+
+        class Handler(http.server.BaseHTTPRequestHandler):
+            def do_GET(self):                              # noqa: N802
+                if self.path.rstrip("/") not in ("", "/metrics"):
+                    self.send_error(404)
+                    return
+                body = reg.render_prometheus().encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *a):                     # silence stderr
+                pass
+
+        self._httpd = http.server.ThreadingHTTPServer((host, port), Handler)
+        self.host = host
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="metrics-server", daemon=True)
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}/metrics"
+
+    def scrape(self) -> str:
+        """GET our own /metrics (the CLI's one-shot exposition check)."""
+        import urllib.request
+        with urllib.request.urlopen(self.url, timeout=10) as r:
+            return r.read().decode()
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5)
+
+
+def serve_metrics(registry: MetricsRegistry, port: int = 0,
+                  host: str = "127.0.0.1") -> MetricsServer:
+    return MetricsServer(registry, port, host)
+
+
+# ---------------------------------------------------------------------------
+# trace events (Chrome trace_event format; Perfetto-loadable)
+# ---------------------------------------------------------------------------
+
+TID_SCHED = 0  # the scheduler-level track; request tracks are rid + 1
+
+
+class Tracer:
+    """Bounded ring of Chrome ``trace_event`` dicts.  Timestamps are
+    microseconds of host wall clock (perf_counter) since the tracer's
+    epoch, so per-track ordering is monotonic by construction.  The ring
+    (``max_events``) bounds a long-running server's memory; overflow
+    drops the OLDEST events and counts them in ``dropped`` (the newest
+    window is what a post-incident export wants).  Request lifecycles are
+    B/E span pairs on the request's own track; everything inside them is
+    instant ("i") or complete ("X") events."""
+
+    def __init__(self, max_events: int = 65536,
+                 clock: Callable[[], float] = time.perf_counter):
+        if max_events < 1:
+            raise ValueError(f"max_events must be >= 1, got {max_events}")
+        import collections
+        self.max_events = int(max_events)
+        self._clock = clock
+        self.epoch = clock()
+        self._events = collections.deque(maxlen=self.max_events)
+        self._meta: Dict[int, dict] = {}   # tid -> thread_name metadata
+        self.dropped = 0
+
+    def now(self) -> float:
+        """Seconds since the tracer epoch (host wall clock)."""
+        return self._clock() - self.epoch
+
+    def _push(self, ev: dict) -> None:
+        if len(self._events) == self.max_events:
+            self.dropped += 1
+        self._events.append(ev)
+
+    def name_track(self, tid: int, name: str) -> None:
+        if tid not in self._meta:
+            self._meta[tid] = {"name": "thread_name", "ph": "M", "pid": 0,
+                               "tid": tid, "args": {"name": name}}
+
+    def instant(self, name: str, tid: int, ts: Optional[float] = None,
+                **args) -> None:
+        self._push({"name": name, "ph": "i", "s": "t", "pid": 0, "tid": tid,
+                    "ts": round((self.now() if ts is None else ts) * 1e6, 3),
+                    "args": args})
+
+    def begin(self, name: str, tid: int, **args) -> None:
+        self._push({"name": name, "ph": "B", "pid": 0, "tid": tid,
+                    "ts": round(self.now() * 1e6, 3), "args": args})
+
+    def end(self, name: str, tid: int, **args) -> None:
+        self._push({"name": name, "ph": "E", "pid": 0, "tid": tid,
+                    "ts": round(self.now() * 1e6, 3), "args": args})
+
+    def complete(self, name: str, tid: int, t0: float, **args) -> None:
+        """An X (complete) event spanning [t0, now] (t0 from ``now()``)."""
+        t1 = self.now()
+        self._push({"name": name, "ph": "X", "pid": 0, "tid": tid,
+                    "ts": round(t0 * 1e6, 3),
+                    "dur": round(max(t1 - t0, 0.0) * 1e6, 3),
+                    "args": args})
+
+    def events(self) -> List[dict]:
+        """Metadata first, then the ring in arrival (= ts) order."""
+        return [self._meta[t] for t in sorted(self._meta)] \
+            + list(self._events)
+
+    def chrome_trace(self) -> dict:
+        return {"traceEvents": self.events(), "displayTimeUnit": "ms",
+                "otherData": {"dropped_events": self.dropped}}
+
+    def write_chrome_trace(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f)
+            f.write("\n")
+
+    def write_jsonl(self, path: str) -> None:
+        with open(path, "w") as f:
+            for ev in self.events():
+                f.write(json.dumps(ev) + "\n")
+
+
+def validate_trace(events: List[dict]) -> List[str]:
+    """Structural validity checks for a trace export (the bench's and the
+    tests' shared checker): every event has name/ph/pid/tid/ts (except M
+    metadata), per-track timestamps are non-decreasing, and B/E span
+    pairs match per track (no E without B, nothing left open)."""
+    errs: List[str] = []
+    last_ts: Dict[int, float] = {}
+    open_spans: Dict[int, List[str]] = {}
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph == "M":
+            continue
+        for k in ("name", "ph", "pid", "tid", "ts"):
+            if k not in ev:
+                errs.append(f"event {i}: missing {k!r}")
+        tid, ts = ev.get("tid"), ev.get("ts", 0.0)
+        if tid in last_ts and ts < last_ts[tid]:
+            errs.append(f"event {i} ({ev.get('name')}): ts {ts} < previous "
+                        f"{last_ts[tid]} on tid {tid}")
+        last_ts[tid] = max(ts, last_ts.get(tid, ts))
+        if ph == "B":
+            open_spans.setdefault(tid, []).append(ev.get("name"))
+        elif ph == "E":
+            stack = open_spans.get(tid) or []
+            if not stack:
+                errs.append(f"event {i}: E {ev.get('name')!r} on tid {tid} "
+                            f"without a matching B")
+            else:
+                stack.pop()
+    for tid, stack in open_spans.items():
+        for name in stack:
+            errs.append(f"tid {tid}: span {name!r} never ended")
+    return errs
+
+
+# ---------------------------------------------------------------------------
+# the facade the scheduler drives
+# ---------------------------------------------------------------------------
+
+class NullTelemetry:
+    """The no-op default: every hook is a pass, so an uninstrumented
+    scheduler pays nothing beyond its own registry counters.  ``tracer``
+    and ``registry`` are None — the scheduler owns its registry either
+    way (metrics are always on; tracing and wall-clock latency are what
+    this gates)."""
+
+    enabled = False
+    tracer: Optional[Tracer] = None
+    registry: Optional[MetricsRegistry] = None
+
+    def attach(self, registry: MetricsRegistry) -> None:
+        pass
+
+    # request lifecycle ------------------------------------------------------
+    def request_submitted(self, rid, request_class, prompt_len, max_new,
+                          clock) -> None:
+        pass
+
+    def request_rejected(self, queue_depth, clock) -> None:
+        pass
+
+    def request_admitted(self, rid, slot, clock, n_reused, n_pages) -> None:
+        pass
+
+    def prefill_chunk(self, rid, slot, start, n, width, clock) -> None:
+        pass
+
+    def first_token(self, rid, slot, width, clock) -> None:
+        pass
+
+    def token_committed(self, rid, slot, width, clock) -> None:
+        pass
+
+    def spec_macro(self, rid, slot, draft_width, k_eff, accepted,
+                   committed, clock) -> None:
+        pass
+
+    def finish_request(self, rid, request_class, status, reason, clock,
+                       n_tokens) -> Optional[dict]:
+        return None
+
+    # scheduler-level events -------------------------------------------------
+    def slo_shift(self, clock, shift, prev_shift, cause) -> None:
+        pass
+
+    def quarantine(self, rid, slot, reason, clock) -> None:
+        pass
+
+    def page_blocked(self, rid, clock) -> None:
+        pass
+
+    def prefix_hit(self, rid, n_pages, clock) -> None:
+        pass
+
+    def prefix_evicted(self, n_pages, clock) -> None:
+        pass
+
+    def step_done(self, clock, seconds) -> None:
+        pass
+
+
+class Telemetry(NullTelemetry):
+    """Full recording: trace events on a bounded Tracer plus wall-clock
+    TTFT / inter-token-latency histograms per precision class.  All
+    host-side: the hooks fire from the scheduler's existing host
+    bookkeeping, never inside the jitted step, and only consume what the
+    one host sync per step already transferred."""
+
+    enabled = True
+
+    def __init__(self, trace: bool = True, max_events: int = 65536):
+        self.tracer = Tracer(max_events=max_events) if trace else None
+        self.registry: Optional[MetricsRegistry] = None
+        self._ttft = None
+        self._itl = None
+        self._step_hist = None
+        # rid -> [class, submit_s, first_s, last_s, n_tokens]
+        self._live: Dict[int, list] = {}
+        self._t0 = time.perf_counter()
+
+    def _now(self) -> float:
+        return (self.tracer.now() if self.tracer is not None
+                else time.perf_counter() - self._t0)
+
+    def attach(self, registry: MetricsRegistry) -> None:
+        """Bind the latency histograms to the scheduler's registry (the
+        scheduler calls this once, at construction)."""
+        self.registry = registry
+        self._ttft = registry.histogram(
+            "otaro_serve_ttft_seconds",
+            "Wall-clock time to first token, submit to first emit",
+            labels=("request_class",))
+        self._itl = registry.histogram(
+            "otaro_serve_itl_seconds",
+            "Wall-clock inter-token latency between committed tokens",
+            labels=("request_class",))
+        self._step_hist = registry.histogram(
+            "otaro_serve_step_seconds",
+            "Wall-clock scheduler step duration (host-observed)")
+
+    # -- request lifecycle ---------------------------------------------------
+    def request_submitted(self, rid, request_class, prompt_len, max_new,
+                          clock) -> None:
+        t = self._now()
+        self._live[rid] = [request_class, t, None, None, 0]
+        tr = self.tracer
+        if tr is not None:
+            tid = rid + 1
+            tr.name_track(TID_SCHED, "scheduler")
+            tr.name_track(tid, f"req {rid} [{request_class or 'default'}]")
+            tr.begin("request", tid, rid=rid,
+                     request_class=request_class, prompt_len=int(prompt_len),
+                     max_new=int(max_new), clock=int(clock))
+
+    def request_rejected(self, queue_depth, clock) -> None:
+        if self.tracer is not None:
+            self.tracer.instant("rejected", TID_SCHED,
+                                queue_depth=int(queue_depth),
+                                clock=int(clock))
+
+    def request_admitted(self, rid, slot, clock, n_reused, n_pages) -> None:
+        if self.tracer is not None:
+            self.tracer.instant("admitted", rid + 1, slot=int(slot),
+                                clock=int(clock), reused_pages=int(n_reused),
+                                pages=int(n_pages))
+
+    def prefill_chunk(self, rid, slot, start, n, width, clock) -> None:
+        if self.tracer is not None:
+            self.tracer.instant("prefill_chunk", rid + 1, slot=int(slot),
+                                start=int(start), tokens=int(n),
+                                width=int(width), clock=int(clock))
+
+    def first_token(self, rid, slot, width, clock) -> None:
+        t = self._now()
+        rec = self._live.get(rid)
+        if rec is not None:
+            rec[2] = rec[3] = t
+            rec[4] += 1
+            if self._ttft is not None:
+                self._ttft.labels(
+                    request_class=rec[0] or "default").observe(t - rec[1])
+        if self.tracer is not None:
+            self.tracer.instant("first_token", rid + 1, slot=int(slot),
+                                width=int(width), clock=int(clock))
+
+    def token_committed(self, rid, slot, width, clock) -> None:
+        t = self._now()
+        rec = self._live.get(rid)
+        if rec is not None:
+            if rec[3] is not None and self._itl is not None:
+                self._itl.labels(
+                    request_class=rec[0] or "default").observe(t - rec[3])
+            rec[3] = t
+            rec[4] += 1
+        if self.tracer is not None:
+            self.tracer.instant("token", rid + 1, slot=int(slot),
+                                width=int(width), clock=int(clock))
+
+    def spec_macro(self, rid, slot, draft_width, k_eff, accepted,
+                   committed, clock) -> None:
+        if self.tracer is not None:
+            self.tracer.instant("spec_macro", rid + 1, slot=int(slot),
+                                draft_width=int(draft_width),
+                                drafted=int(k_eff), accepted=int(accepted),
+                                rejected=int(k_eff - accepted),
+                                committed=int(committed), clock=int(clock))
+
+    def finish_request(self, rid, request_class, status, reason, clock,
+                       n_tokens) -> Optional[dict]:
+        t = self._now()
+        rec = self._live.pop(rid, None)
+        if self.tracer is not None:
+            self.tracer.end("request", rid + 1, status=status,
+                            reason=reason, clock=int(clock),
+                            tokens=int(n_tokens))
+        if rec is None:
+            return None
+        _, submit_s, first_s, last_s, n = rec
+        ttft = (first_s - submit_s) if first_s is not None else None
+        itl = (((last_s - first_s) / (n - 1))
+               if (first_s is not None and n > 1) else None)
+        return {"submit_s": submit_s, "first_token_s": first_s,
+                "finish_s": t, "ttft_s": ttft, "itl_mean_s": itl}
+
+    # -- scheduler-level events ----------------------------------------------
+    def slo_shift(self, clock, shift, prev_shift, cause) -> None:
+        if self.tracer is not None:
+            self.tracer.instant(
+                "slo_escalation" if shift > prev_shift else "slo_relief",
+                TID_SCHED, shift=int(shift), prev_shift=int(prev_shift),
+                cause=cause, clock=int(clock))
+
+    def quarantine(self, rid, slot, reason, clock) -> None:
+        if self.tracer is not None:
+            self.tracer.instant("quarantine", TID_SCHED, rid=int(rid),
+                                slot=int(slot), reason=reason,
+                                clock=int(clock))
+
+    def page_blocked(self, rid, clock) -> None:
+        if self.tracer is not None:
+            self.tracer.instant("page_blocked_admission", TID_SCHED,
+                                rid=int(rid), clock=int(clock))
+
+    def prefix_hit(self, rid, n_pages, clock) -> None:
+        if self.tracer is not None:
+            self.tracer.instant("prefix_hit", TID_SCHED, rid=int(rid),
+                                pages=int(n_pages), clock=int(clock))
+
+    def prefix_evicted(self, n_pages, clock) -> None:
+        if self.tracer is not None:
+            self.tracer.instant("prefix_evict", TID_SCHED,
+                                pages=int(n_pages), clock=int(clock))
+
+    def step_done(self, clock, seconds) -> None:
+        if self._step_hist is not None:
+            self._step_hist.child().observe(seconds)
+
+
+# ---------------------------------------------------------------------------
+# scheduler metric handles (the _counts migration target)
+# ---------------------------------------------------------------------------
+
+class SchedulerMetrics:
+    """The ContinuousScheduler's registry-backed counters — the ONE
+    source of truth behind ``scheduler.stats`` (which is now a thin view
+    over these children).  Pre-resolved children keep the hot path at
+    dict-increment cost; width-labeled families cache children by int
+    width."""
+
+    def __init__(self, registry: MetricsRegistry):
+        self.registry = registry
+        c = registry.counter
+        self.steps = c("otaro_serve_steps_total",
+                       "Scheduler steps run").child()
+        self.committed_tokens = c("otaro_serve_committed_tokens_total",
+                                  "Tokens committed across slots").child()
+        self.slot_steps_active = c(
+            "otaro_serve_slot_steps_active_total",
+            "Slot-steps with an active decode-phase request").child()
+        self.slot_steps_committed = c(
+            "otaro_serve_slot_steps_committed_total",
+            "Slot-steps that committed").child()
+        self.requests = c("otaro_serve_requests_total",
+                          "Request lifecycle events",
+                          labels=("event",))
+        self.admitted = self.requests.labels(event="admitted")
+        self.finished = self.requests.labels(event="finished")
+        self.rejected = self.requests.labels(event="rejected")
+        self.evicted = self.requests.labels(event="evicted")
+        self.deadline_missed = self.requests.labels(event="deadline_missed")
+        self.poisoned = self.requests.labels(event="poisoned")
+        self.prefill_chunks = c("otaro_serve_prefill_chunks_total",
+                                "Chunked-prefill chunks run").child()
+        self.prefill_only_steps = c(
+            "otaro_serve_prefill_only_steps_total",
+            "Steps that only advanced a prefill (no decode)").child()
+        self.decode_stall_steps = c(
+            "otaro_serve_decode_stall_steps_total",
+            "Steps where decode stalled behind a prefill").child()
+        self.reused_pages = c("otaro_serve_reused_pages_total",
+                              "Prefix-cache pages adopted at admission"
+                              ).child()
+        self.page_blocked_admissions = c(
+            "otaro_serve_page_blocked_admissions_total",
+            "Admissions blocked on the page budget").child()
+        self._width_steps = c("otaro_serve_width_steps_total",
+                              "Steps that served SEFP width",
+                              labels=("width",))
+        self._tokens_by_width = c(
+            "otaro_serve_tokens_by_width_total",
+            "Committed tokens per realized SEFP width",
+            labels=("width",))
+        self._ws_cache: Dict[int, _Child] = {}
+        self._tbw_cache: Dict[int, _Child] = {}
+
+    def width_step(self, w: int) -> None:
+        ch = self._ws_cache.get(w)
+        if ch is None:
+            ch = self._width_steps.labels(width=str(int(w)))
+            self._ws_cache[w] = ch
+        ch.inc()
+
+    def token_at_width(self, w: int) -> None:
+        ch = self._tbw_cache.get(w)
+        if ch is None:
+            ch = self._tokens_by_width.labels(width=str(int(w)))
+            self._tbw_cache[w] = ch
+        ch.inc()
+
+    def width_steps_dict(self) -> Dict[int, int]:
+        return {int(k[0]): int(v)
+                for k, v in self._width_steps.samples()}
+
+    def tokens_by_width_dict(self) -> Dict[int, int]:
+        return {int(k[0]): int(v)
+                for k, v in self._tokens_by_width.samples()}
+
+    def register_gauges(self, sched) -> None:
+        """Expose the scheduler's LIVE state (queue, slots, pages, SLO
+        shift, prefix cache, speculative accounting) as collect-time
+        gauges — the collector idiom: the owning object stays the source
+        of truth, the registry reads it at scrape time."""
+        r = self.registry
+        r.gauge("otaro_serve_queue_depth",
+                "Requests waiting in the FIFO queue"
+                ).child().set_function(lambda: sched.pending)
+        r.gauge("otaro_serve_active_slots",
+                "Slots holding an admitted request"
+                ).child().set_function(lambda: sched.active)
+        r.gauge("otaro_serve_slots", "Slot table size"
+                ).child().set(sched.n_slots)
+        pol = sched._width_policy
+        r.gauge("otaro_serve_slo_shift",
+                "Current SLO degradation shift (0 = healthy)"
+                ).child().set_function(
+                    lambda: int(getattr(pol, "shift", 0) or 0))
+        r.gauge("otaro_serve_latency_ewma_seconds",
+                "Step-latency EWMA the slo-degrade trigger watches"
+                ).child().set_function(
+                    lambda: float(pol.degradation.get(
+                        "latency_ewma_seconds") or 0.0)
+                    if pol.degradation else 0.0)
+        if sched._allocator is not None:
+            alloc = sched._allocator
+            r.gauge("otaro_serve_pages_in_use",
+                    "KV pages currently referenced"
+                    ).child().set_function(lambda: alloc.pages_in_use)
+            r.gauge("otaro_serve_pages_high_water",
+                    "Peak KV pages referenced"
+                    ).child().set_function(lambda: alloc.high_water)
+            r.gauge("otaro_serve_pages", "KV page pool size (incl. null)"
+                    ).child().set(sched.n_pages)
+        if sched._prefix is not None:
+            pc = sched._prefix
+            fam = r.counter("otaro_serve_prefix_cache_events_total",
+                            "Prefix-cache hit/miss/insert/evict counts",
+                            labels=("event",))
+            fam.set_collect(lambda: {
+                ("hits",): pc.hits, ("misses",): pc.misses,
+                ("inserted",): pc.inserted, ("evicted",): pc.evicted})
+        if sched._spec is not None:
+            acct = sched._spec_acct
+            for nm, field in (("drafted", "drafted"),
+                              ("accepted", "accepted"),
+                              ("rejected", "rejected")):
+                fam = r.counter(f"otaro_spec_{nm}_total",
+                                f"Speculative tokens {nm}, per draft width",
+                                labels=("width",))
+                fam.set_collect(
+                    lambda d=field: {(str(w),): v for w, v in
+                                     getattr(acct, d).items()})
+            r.counter("otaro_spec_macro_steps_total",
+                      "Speculative macro-steps run"
+                      ).child().set_function(lambda: acct.macro_steps)
+            r.counter("otaro_spec_bonus_tokens_total",
+                      "Verifier bonus tokens committed"
+                      ).child().set_function(lambda: acct.bonus_tokens)
+
+
+# ---------------------------------------------------------------------------
+# report rendering (the CLI summary, one aggregation path)
+# ---------------------------------------------------------------------------
+
+def render_report(sched) -> List[str]:
+    """The serving summary lines (pages/reuse, width mix, tokens-by-width,
+    resilience, speculative, degradation), rendered from the scheduler's
+    registry-backed stats view — launch/serve.py prints these instead of
+    re-aggregating the same counters with bespoke formatting."""
+    stats = sched.stats
+    lines: List[str] = []
+    pg = stats["pages"]
+    if pg is not None:
+        pc = pg["prefix_cache"]
+        reuse = (f", prefix hits {pc['hits']}/{pc['hits'] + pc['misses']}"
+                 if pc is not None else "")
+        lines.append(
+            f"pages: high-water {pg['high_water']}/{pg['n_pages']}"
+            f", reused {pg['reused_pages']}{reuse}, "
+            f"prefill chunks {stats['prefill_chunks']}, "
+            f"decode stalls {stats['decode_stall_steps']}")
+    lines.append(f"width steps: {stats['width_steps']}  "
+                 f"starvation: {stats['starvation']}  "
+                 f"policy: {stats['width_policy']}")
+    tbw = stats["tokens_by_width"]
+    if tbw:
+        lines.append(
+            "tokens by width: "
+            + ", ".join(f"E5M{w}: {tbw[w]}" for w in sorted(tbw,
+                                                            reverse=True))
+            + f"  (committed {stats['committed_tokens']})")
+    if (stats["rejected"] or stats["evicted"] or stats["deadline_missed"]
+            or stats["poisoned"]):
+        lines.append(f"resilience: rejected={stats['rejected']} "
+                     f"evicted={stats['evicted']} "
+                     f"deadline_missed={stats['deadline_missed']} "
+                     f"poisoned={stats['poisoned']}")
+    sp = stats.get("speculative")
+    if sp is not None:
+        rate = (f"{sp['acceptance_rate']:.2f}"
+                if sp["acceptance_rate"] is not None else "-")
+        lines.append(
+            f"speculative: k={sp['k']} estimator={sp['estimator']} "
+            f"macro_steps={sp['macro_steps']} drafted={sp['drafted']} "
+            f"accepted={sp['accepted']} wasted={sp['wasted']} "
+            f"bonus={sp['bonus_tokens']} acceptance={rate}")
+    deg = stats["degradation"]
+    if deg.get("escalations"):
+        lines.append(f"degradation: escalations={deg['escalations']} "
+                     f"degraded_steps={deg['degraded_steps']} "
+                     f"downshifted_slot_steps={deg['downshifted_slot_steps']}"
+                     f" final_shift={deg['shift']} "
+                     f"max_shift_seen={deg['max_shift_seen']}")
+    tel = getattr(sched, "telemetry", None)
+    reg = getattr(sched, "metrics", None)
+    if tel is not None and tel.enabled and reg is not None:
+        for cls, ch in sorted(reg.series(
+                "otaro_serve_ttft_seconds").items()):
+            if ch.count:
+                itl = reg.value("otaro_serve_itl_seconds",
+                                request_class=cls[0])
+                itl_ms = (f", itl mean {itl.sum / itl.count * 1e3:.2f} ms"
+                          if itl is not None and itl.count else "")
+                lines.append(
+                    f"latency[{cls[0]}]: ttft mean "
+                    f"{ch.sum / ch.count * 1e3:.2f} ms over {ch.count} "
+                    f"request(s){itl_ms}")
+    return lines

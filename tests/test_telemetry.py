@@ -1,0 +1,591 @@
+"""Serving telemetry tests (DESIGN.md §16): the metrics registry and its
+Prometheus text exposition (naming, label escaping, histogram bucket
+monotonicity), the bounded Chrome-trace Tracer (per-track ts ordering,
+matched B/E spans), and the scheduler integration — the registry is the
+ONE source of truth behind ``scheduler.stats`` (``json.dumps`` must always
+succeed on it), ``FinishedRequest.wall`` carries wall-clock TTFT/ITL under
+``Telemetry``, and a mixed speculative/plain + slo-degrade workload's
+per-request width timeline in the trace reconciles EXACTLY with
+``width_counts()`` / ``tokens_by_width``."""
+
+import collections
+import json
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import model_zoo as Z
+from repro.models.config import ModelConfig
+from repro.policy import PrecisionPolicy
+from repro.serve import SwitchableServer
+from repro.serve.scheduler import SLODegradePolicy
+from repro.serve.telemetry import (
+    LATENCY_BUCKETS,
+    MetricsRegistry,
+    NullTelemetry,
+    Telemetry,
+    Tracer,
+    json_sanitize,
+    parse_prometheus,
+    render_report,
+    serve_metrics,
+    validate_trace,
+)
+
+CFG = ModelConfig(name="sched-tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, q_block=16, kv_block=16, loss_chunk=16,
+                  remat="none", dtype="bfloat16")
+
+
+@pytest.fixture(scope="module")
+def server():
+    params = Z.init_params(CFG, jax.random.PRNGKey(0))
+    srv = SwitchableServer(CFG, params, max_len=96)
+    srv.set_policy(PrecisionPolicy.all_widths()
+                   .with_class("generation", 8)
+                   .with_class("understanding", 4))
+    return srv
+
+
+def prompt(n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, CFG.vocab_size, (n,)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + Prometheus exposition
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_counter_gauge_basics(self):
+        r = MetricsRegistry()
+        c = r.counter("t_requests_total", "reqs", labels=("event",))
+        c.labels(event="admitted").inc()
+        c.labels(event="admitted").inc(3)
+        c.labels(event="rejected").inc()
+        g = r.gauge("t_depth", "queue depth")
+        g.child().set(7)
+        assert r.value("t_requests_total", event="admitted") == 4
+        assert r.value("t_requests_total", event="rejected") == 1
+        assert r.value("t_depth") == 7
+        assert r.series("t_requests_total") == {("admitted",): 4,
+                                                ("rejected",): 1}
+        # absent family / absent labeled series
+        assert r.value("t_nope") is None
+        assert r.value("t_requests_total", event="nope") is None
+
+    def test_gauge_set_function_reads_live(self):
+        r = MetricsRegistry()
+        state = {"v": 1}
+        r.gauge("t_live", "").child().set_function(lambda: state["v"])
+        assert r.value("t_live") == 1
+        state["v"] = 42
+        assert r.value("t_live") == 42
+
+    def test_collect_callback_family(self):
+        r = MetricsRegistry()
+        src = {"hits": 3, "misses": 1}
+        fam = r.counter("t_cache_total", "", labels=("event",))
+        fam.set_collect(lambda: {(k,): v for k, v in src.items()})
+        assert r.value("t_cache_total", event="hits") == 3
+        src["hits"] = 5
+        assert r.value("t_cache_total", event="hits") == 5
+
+    def test_invalid_names_rejected(self):
+        r = MetricsRegistry()
+        with pytest.raises(ValueError):
+            r.counter("2bad", "")
+        with pytest.raises(ValueError):
+            r.counter("bad-dash", "")
+        with pytest.raises(ValueError):
+            r.counter("t_ok", "", labels=("bad-label",))
+        with pytest.raises(ValueError):
+            r.counter("t_ok2", "", labels=("__reserved",))
+
+    def test_reregistration(self):
+        r = MetricsRegistry()
+        a = r.counter("t_x_total", "", labels=("w",))
+        assert r.counter("t_x_total", "", labels=("w",)) is a
+        with pytest.raises(ValueError):
+            r.gauge("t_x_total", "")          # kind conflict
+        with pytest.raises(ValueError):
+            r.counter("t_x_total", "", labels=("other",))  # label conflict
+
+    def test_labels_must_match_schema(self):
+        r = MetricsRegistry()
+        fam = r.counter("t_y_total", "", labels=("w",))
+        with pytest.raises(ValueError):
+            fam.labels(other="1")
+        with pytest.raises(ValueError):
+            fam.child()                       # labeled family has no child()
+
+    def test_histogram_validation(self):
+        r = MetricsRegistry()
+        with pytest.raises(ValueError):
+            r.histogram("t_h", "", buckets=())
+        with pytest.raises(ValueError):
+            r.histogram("t_h", "", buckets=(1.0, 1.0, 2.0))  # not strict
+        with pytest.raises(ValueError):
+            r.histogram("t_h", "", buckets=(2.0, 1.0))       # decreasing
+        with pytest.raises(ValueError):
+            r.histogram("t_h", "", labels=("le",))           # reserved
+
+    def test_histogram_observe_and_exposition(self):
+        r = MetricsRegistry()
+        h = r.histogram("t_lat_seconds", "latency", buckets=(0.1, 1.0, 10.0))
+        ch = h.child()
+        for x in (0.05, 0.5, 0.5, 5.0, 50.0):
+            ch.observe(x)
+        text = r.render_prometheus()
+        assert "# TYPE t_lat_seconds histogram" in text
+        parsed = parse_prometheus(text)
+        samples = {(n, labels.get("le")): v
+                   for n, labels, v in parsed["t_lat_seconds"]["samples"]}
+        # cumulative buckets: 1, 3, 4, +Inf == 5
+        assert samples[("t_lat_seconds_bucket", "0.1")] == 1
+        assert samples[("t_lat_seconds_bucket", "1.0")] == 3
+        assert samples[("t_lat_seconds_bucket", "10.0")] == 4
+        assert samples[("t_lat_seconds_bucket", "+Inf")] == 5
+        assert samples[("t_lat_seconds_count", None)] == 5
+        assert samples[("t_lat_seconds_sum", None)] == pytest.approx(56.05)
+
+    def test_label_escaping_round_trips(self):
+        r = MetricsRegistry()
+        nasty = 'a\\b"c\nd'
+        r.counter("t_esc_total", 'help with \\ and\nnewline',
+                  labels=("cls",)).labels(cls=nasty).inc()
+        text = r.render_prometheus()
+        assert '\\\\' in text and '\\"' in text and "\\n" in text
+        parsed = parse_prometheus(text)
+        (_, labels, v), = parsed["t_esc_total"]["samples"]
+        assert labels == {"cls": nasty}
+        assert v == 1
+
+    def test_exposition_has_help_and_type(self):
+        r = MetricsRegistry()
+        r.counter("t_a_total", "the a").child().inc()
+        text = r.render_prometheus()
+        assert "# HELP t_a_total the a" in text
+        assert "# TYPE t_a_total counter" in text
+
+    def test_snapshot_json_serializable(self):
+        r = MetricsRegistry()
+        r.counter("t_c_total", "", labels=("w",)).labels(w="8").inc(2)
+        r.histogram("t_h_seconds", "").child().observe(0.01)
+        snap = json.loads(json.dumps(r.snapshot()))
+        assert snap["t_c_total"]["samples"][0]["value"] == 2
+        assert snap["t_h_seconds"]["samples"][0]["count"] == 1
+
+    def test_default_buckets_are_strictly_increasing(self):
+        assert list(LATENCY_BUCKETS) == sorted(set(LATENCY_BUCKETS))
+
+
+class TestParsePrometheus:
+    def test_rejects_malformed_sample(self):
+        with pytest.raises(ValueError):
+            parse_prometheus("this is not exposition format\n")
+
+    def test_rejects_bad_metric_name_in_type(self):
+        with pytest.raises(ValueError):
+            parse_prometheus("# TYPE 2bad counter\n")
+
+    def test_rejects_non_monotonic_histogram(self):
+        text = "\n".join([
+            "# TYPE t_h histogram",
+            't_h_bucket{le="0.1"} 5',
+            't_h_bucket{le="1.0"} 3',      # decreases: invalid
+            't_h_bucket{le="+Inf"} 5',
+            "t_h_sum 1.0",
+            "t_h_count 5",
+        ])
+        with pytest.raises(ValueError, match="non-monotonic"):
+            parse_prometheus(text)
+
+    def test_accepts_monotonic_histogram(self):
+        text = "\n".join([
+            "# TYPE t_h histogram",
+            't_h_bucket{le="0.1"} 1',
+            't_h_bucket{le="+Inf"} 5',
+            "t_h_sum 1.0",
+            "t_h_count 5",
+        ])
+        assert "t_h" in parse_prometheus(text)
+
+
+# ---------------------------------------------------------------------------
+# tracer + trace validity
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+    def test_span_pairs_and_order(self):
+        tr = Tracer()
+        tr.name_track(1, "req 0")
+        tr.begin("request", 1, rid=0)
+        tr.instant("token", 1, width=8)
+        tr.end("request", 1, status="ok")
+        evs = tr.events()
+        assert evs[0]["ph"] == "M"            # metadata first
+        assert [e["ph"] for e in evs[1:]] == ["B", "i", "E"]
+        assert validate_trace(evs) == []
+
+    def test_ring_drops_oldest(self):
+        tr = Tracer(max_events=4)
+        for i in range(10):
+            tr.instant(f"e{i}", 0)
+        body = [e for e in tr.events() if e["ph"] != "M"]
+        assert len(body) == 4
+        assert [e["name"] for e in body] == ["e6", "e7", "e8", "e9"]
+        assert tr.dropped == 6
+        assert tr.chrome_trace()["otherData"]["dropped_events"] == 6
+
+    def test_max_events_validated(self):
+        with pytest.raises(ValueError):
+            Tracer(max_events=0)
+
+    def test_validate_catches_unmatched_spans(self):
+        tr = Tracer()
+        tr.end("request", 1)                  # E with no B
+        errs = validate_trace(tr.events())
+        assert any("without a matching B" in e for e in errs)
+        tr2 = Tracer()
+        tr2.begin("request", 1)               # B never ended
+        errs2 = validate_trace(tr2.events())
+        assert any("never ended" in e for e in errs2)
+
+    def test_validate_catches_ts_regression(self):
+        evs = [{"name": "a", "ph": "i", "pid": 0, "tid": 3, "ts": 10.0},
+               {"name": "b", "ph": "i", "pid": 0, "tid": 3, "ts": 5.0}]
+        errs = validate_trace(evs)
+        assert any("ts" in e and "tid 3" in e for e in errs)
+
+    def test_validate_catches_missing_keys(self):
+        errs = validate_trace([{"ph": "i", "tid": 0, "ts": 0.0}])
+        assert any("missing" in e for e in errs)
+
+    def test_complete_event_duration(self):
+        tr = Tracer()
+        t0 = tr.now()
+        tr.complete("chunk", 2, t0, tokens=16)
+        (ev,) = [e for e in tr.events() if e["ph"] == "X"]
+        assert ev["dur"] >= 0 and ev["args"]["tokens"] == 16
+
+    def test_write_chrome_trace_and_jsonl(self, tmp_path):
+        tr = Tracer()
+        tr.name_track(1, "req 0")
+        tr.begin("request", 1)
+        tr.end("request", 1)
+        p_json = tmp_path / "trace.json"
+        p_jsonl = tmp_path / "trace.jsonl"
+        tr.write_chrome_trace(str(p_json))
+        tr.write_jsonl(str(p_jsonl))
+        doc = json.loads(p_json.read_text())
+        assert doc["displayTimeUnit"] == "ms"
+        assert validate_trace(doc["traceEvents"]) == []
+        lines = [json.loads(ln)
+                 for ln in p_jsonl.read_text().splitlines()]
+        assert validate_trace(lines) == []
+        assert len(lines) == len(doc["traceEvents"])
+
+
+class TestMetricsServer:
+    def test_scrape_round_trip(self):
+        r = MetricsRegistry()
+        r.counter("t_up_total", "is it up").child().inc(3)
+        srv = serve_metrics(r, port=0)
+        try:
+            assert srv.port != 0
+            text = srv.scrape()
+            parsed = parse_prometheus(text)
+            (_, _, v), = parsed["t_up_total"]["samples"]
+            assert v == 3
+            # non-/metrics paths 404
+            with pytest.raises(urllib.error.HTTPError):
+                urllib.request.urlopen(
+                    srv.url.replace("/metrics", "/other"), timeout=10)
+        finally:
+            srv.close()
+
+
+# ---------------------------------------------------------------------------
+# json_sanitize
+# ---------------------------------------------------------------------------
+
+class TestJsonSanitize:
+    def test_numpy_scalars_arrays_and_keys(self):
+        obj = {
+            np.int32(8): np.int64(3),
+            "arr": np.arange(3, dtype=np.int32),
+            "ctr": collections.Counter({np.int32(4): 2}),
+            "t": (np.float32(0.5), 1),
+            "plain": {"s": "x", "n": None, "b": True},
+        }
+        out = json_sanitize(obj)
+        assert out[8] == 3
+        assert out["arr"] == [0, 1, 2]
+        assert out["ctr"] == {4: 2}
+        assert out["t"] == [0.5, 1]
+        json.dumps(out)  # must not raise
+
+
+# ---------------------------------------------------------------------------
+# SLODegradePolicy bounded trace ring
+# ---------------------------------------------------------------------------
+
+class TestSLOTraceRing:
+    def _pressure(self, qd):
+        return {"queue_depth": qd, "active": 0, "slots": 4,
+                "widths": (8, 6, 4, 3)}
+
+    def test_trace_len_validated(self):
+        with pytest.raises(ValueError):
+            SLODegradePolicy(trace_len=0)
+
+    def test_ring_bounds_trace_and_max_shift_stays_exact(self):
+        sd = SLODegradePolicy(queue_high=1, queue_low=0, hold_steps=1,
+                              trace_len=4)
+        clock = 0
+        for _ in range(10):                   # 10 escalate-to-3 / relieve
+            for _ in range(3):
+                clock += 1
+                sd.observe(dict(self._pressure(5), clock=clock))
+            for _ in range(3):
+                clock += 1
+                sd.observe(dict(self._pressure(0), clock=clock))
+        deg = sd.degradation
+        assert deg["escalations"] == 30
+        assert len(deg["trace"]) == 4         # ring kept the newest window
+        # max_shift_seen is a running max, exact despite 56 dropped
+        # transitions (the ladder cap is len(ladder) - 1 == 3)
+        assert deg["max_shift_seen"] == 3
+        assert deg["shift"] == 0
+        # shape pinned: list of (clock, shift) pairs, newest last
+        assert all(len(t) == 2 for t in deg["trace"])
+        assert deg["trace"][-1] == (clock, 0)
+
+    def test_shift_causes_recorded(self):
+        sd = SLODegradePolicy(queue_high=2, queue_low=0, hold_steps=1)
+        sd.observe(dict(self._pressure(5), clock=1))
+        assert sd.last_shift_cause == "queue_depth"
+        sd.observe({"queue_depth": 1, "active": 4, "slots": 4, "clock": 2,
+                    "widths": (8, 6, 4, 3)})
+        assert sd.last_shift_cause == "slots_full_backlog"
+        sd.observe(dict(self._pressure(0), clock=3))
+        assert sd.last_shift_cause == "relief"
+        lat = SLODegradePolicy(slo_step_seconds=0.01, queue_high=10_000,
+                               hold_steps=1)
+        lat.observe(dict(self._pressure(0), step_seconds=5.0, clock=1))
+        assert lat.last_shift_cause == "latency_ewma"
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration
+# ---------------------------------------------------------------------------
+
+class TestSchedulerIntegration:
+    def test_null_telemetry_default(self, server):
+        sched = server.continuous(slots=2)
+        assert isinstance(sched.telemetry, NullTelemetry)
+        assert not sched.telemetry.enabled
+        rid = sched.submit(prompt(seed=1), 4, request_class="generation",
+                           seed=0)
+        done = sched.drain(max_steps=500)
+        assert done[rid].wall is None         # wall clock gated off
+        # the registry is live even without telemetry: one source of truth
+        stats = sched.stats
+        assert sched.metrics.value("otaro_serve_steps_total") \
+            == stats["steps"]
+        assert sched.metrics.value("otaro_serve_requests_total",
+                                   event="finished") == 1
+        parse_prometheus(sched.metrics.render_prometheus())
+
+    def test_wall_clock_on_finished_request(self, server):
+        sched = server.continuous(slots=2, telemetry=Telemetry())
+        rid = sched.submit(prompt(seed=2), 5, request_class="generation",
+                           seed=0)
+        done = sched.drain(max_steps=500)
+        w = done[rid].wall
+        assert w is not None
+        assert w["ttft_s"] >= 0
+        assert w["finish_s"] >= w["first_token_s"] >= w["submit_s"]
+        assert w["itl_mean_s"] >= 0           # 5 tokens -> ITL defined
+        # TTFT/ITL histograms per precision class on the registry
+        ttft = sched.metrics.value("otaro_serve_ttft_seconds",
+                                   request_class="generation")
+        itl = sched.metrics.value("otaro_serve_itl_seconds",
+                                  request_class="generation")
+        assert ttft.count == 1
+        assert itl.count == len(done[rid].tokens) - 1
+
+    def test_telemetry_true_shorthand(self, server):
+        sched = server.continuous(slots=1, telemetry=True)
+        assert isinstance(sched.telemetry, Telemetry)
+        assert sched.telemetry.registry is sched.metrics
+
+    def test_mixed_spec_slo_workload_trace_reconciles(self, server):
+        """The acceptance workload: speculative decode + slo-degrade under
+        queue pressure.  Healthy (shift 0) steps run the m=8 speculative
+        macro-step; escalated steps downshift below the verify width and
+        commit plain — the trace must show both, stay structurally valid,
+        and its per-request width timeline must reconcile EXACTLY with
+        width_counts() / tokens_by_width."""
+        tel = Telemetry()
+        sd = SLODegradePolicy(queue_high=3, queue_low=0, hold_steps=2)
+        sched = server.continuous(
+            slots=2, width_policy=sd, telemetry=tel,
+            spec_decode={"k": 3, "draft_width": 6, "candidates": (4, 6)})
+        # calm phase: no queue pressure, shift stays 0, the m=8 rows run
+        # the speculative macro-step
+        rids = [sched.submit(prompt(seed=10 + i), 8,
+                             request_class="generation", seed=i)
+                for i in range(2)]
+        done = dict(sched.drain(max_steps=2_000))
+        # burst phase: 6 requests into 2 slots crosses queue_high, the
+        # policy escalates, realized width drops below the verify width
+        # and commits go through the plain path
+        rids += [sched.submit(prompt(seed=20 + i), 8,
+                              request_class="generation", seed=10 + i)
+                 for i in range(6)]
+        done.update(sched.drain(max_steps=2_000))
+        stats = sched.stats
+        evs = tel.tracer.events()
+
+        # structurally valid Chrome trace: ts ordered per track, B/E paired
+        assert validate_trace(evs) == []
+        names = collections.Counter(e["name"] for e in evs)
+        assert names["request"] == 2 * len(rids)      # B + E per request
+        assert names["admitted"] == len(rids)
+        assert names["first_token"] == len(rids)
+        assert names["spec_macro"] > 0                # speculation engaged
+        assert names["slo_escalation"] >= 1           # pressure escalated
+        esc = next(e for e in evs if e["name"] == "slo_escalation")
+        assert esc["args"]["cause"] == "queue_depth"
+        assert esc["tid"] == 0                        # scheduler track
+
+        # width-timeline reconciliation: trace "token" events vs the
+        # request-level and registry-level accounting
+        trace_widths = collections.Counter(
+            e["args"]["width"] for e in evs if e["name"] == "token")
+        agg = collections.Counter()
+        for fr in done.values():
+            agg.update(fr.width_counts())
+        assert trace_widths == agg
+        assert dict(trace_widths) == stats["tokens_by_width"]
+        # both the spec verify width and a downshifted width committed
+        assert 8 in trace_widths and any(w < 8 for w in trace_widths)
+
+        # per-request trace timeline: submit < admitted < first_token <=
+        # tokens <= retire, all on the request's own track (tid = rid + 1)
+        for rid in rids:
+            tid = rid + 1
+            row = [e for e in evs if e.get("tid") == tid
+                   and e["ph"] != "M"]
+            assert row[0]["ph"] == "B" and row[-1]["ph"] == "E"
+            assert [e["ts"] for e in row] == sorted(e["ts"] for e in row)
+
+        # wall-clock histograms per class
+        ttft = sched.metrics.value("otaro_serve_ttft_seconds",
+                                   request_class="generation")
+        assert ttft.count == len(rids)
+        # speculative accounting exposed through the registry collect hooks
+        sp = stats["speculative"]
+        drafted = sum(sched.metrics.series("otaro_spec_drafted_total")
+                      .values())
+        assert drafted == sp["drafted"]
+        assert sched.metrics.value("otaro_spec_macro_steps_total") \
+            == sp["macro_steps"]
+        # exposition of the whole registry stays valid under the mix
+        parse_prometheus(sched.metrics.render_prometheus())
+        json.dumps(stats)
+
+    def test_quarantine_event_in_trace(self, server):
+        from repro.serve.faults import NaNLogitsFault
+        tel = Telemetry()
+        sched = server.continuous(slots=2, telemetry=tel,
+                                  faults=[NaNLogitsFault(slot=0, step=2)])
+        rid = sched.submit(prompt(seed=30), 8, request_class="generation",
+                           seed=0)
+        done = sched.drain(max_steps=500)
+        assert done[rid].status == "poisoned"
+        qs = [e for e in tel.tracer.events() if e["name"] == "quarantine"]
+        assert len(qs) == 1 and qs[0]["args"]["slot"] == 0
+        assert sched.metrics.value("otaro_serve_requests_total",
+                                   event="poisoned") == 1
+
+    def test_paged_gauges_and_prefix_events(self, server):
+        tel = Telemetry()
+        sched = server.continuous(slots=2, page_size=16, n_pages=13,
+                                  prefill_chunk=16, telemetry=tel)
+        doc = prompt(32, seed=40)
+        sched.submit(doc, 2, request_class="understanding", seed=0)
+        sched.drain(max_steps=500)
+        sched.submit(doc, 2, request_class="understanding", seed=1)
+        sched.drain(max_steps=500)
+        assert sched.metrics.value("otaro_serve_pages") == 13
+        assert sched.metrics.value("otaro_serve_pages_high_water") > 0
+        assert sched.metrics.value("otaro_serve_prefix_cache_events_total",
+                                   event="hits") >= 1
+        hits = [e for e in tel.tracer.events()
+                if e["name"] == "prefix_hit"]
+        assert hits and hits[0]["args"]["pages"] >= 1
+        assert sched.metrics.value("otaro_serve_reused_pages_total") >= 1
+
+    def test_render_report_lines(self, server):
+        sched = server.continuous(slots=2, telemetry=Telemetry())
+        sched.submit(prompt(seed=50), 4, request_class="generation", seed=0)
+        sched.drain(max_steps=500)
+        lines = render_report(sched)
+        assert any(ln.startswith("width steps:") for ln in lines)
+        assert any(ln.startswith("tokens by width:") for ln in lines)
+        assert any(ln.startswith("latency[generation]:") for ln in lines)
+
+
+# ---------------------------------------------------------------------------
+# stats JSON round-trip regression (every policy, spec, faults)
+# ---------------------------------------------------------------------------
+
+class TestStatsJsonRoundTrip:
+    def _assert_round_trips(self, sched):
+        stats = sched.stats
+        text = json.dumps(stats)              # must not raise
+        back = json.loads(text)
+        assert back["steps"] == stats["steps"]
+        assert back["committed_tokens"] == stats["committed_tokens"]
+
+    @pytest.mark.parametrize("policy", ["max-width", "width-rr",
+                                        "heterogeneous", "slo-degrade"])
+    def test_all_width_policies(self, server, policy):
+        sched = server.continuous(slots=2, width_policy=policy)
+        for i in range(3):
+            sched.submit(prompt(seed=60 + i), 4,
+                         request_class=("generation" if i % 2 == 0
+                                        else "understanding"), seed=i)
+        sched.drain(max_steps=1_000)
+        self._assert_round_trips(sched)
+
+    def test_speculative_stats(self, server):
+        sched = server.continuous(
+            slots=2, spec_decode={"k": 3, "draft_width": 6,
+                                  "candidates": (4, 6)})
+        sched.submit(prompt(seed=70), 8, request_class="generation", seed=0)
+        sched.drain(max_steps=1_000)
+        self._assert_round_trips(sched)
+
+    def test_faulted_stats(self, server):
+        from repro.serve.faults import NaNLogitsFault
+        sched = server.continuous(slots=2,
+                                  faults=[NaNLogitsFault(slot=0, step=2)])
+        sched.submit(prompt(seed=80), 6, request_class="generation", seed=0)
+        sched.drain(max_steps=500)
+        self._assert_round_trips(sched)
+
+    def test_paged_stats(self, server):
+        sched = server.continuous(slots=2, page_size=16, n_pages=13,
+                                  prefill_chunk=16)
+        sched.submit(prompt(32, seed=90), 2, request_class="understanding",
+                     seed=0)
+        sched.drain(max_steps=500)
+        self._assert_round_trips(sched)
